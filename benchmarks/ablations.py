@@ -1,0 +1,131 @@
+"""Paper ablation tables on the MNIST-proxy classifier (S4.3, A.4/A.5):
+
+  Table 5  activation function (also run as part of table2_3 ordering)
+  Table 6  input frequency
+  Table 7  model size at fixed trainable params
+  Table 13 k/d at fixed compression rate
+  Table 14 weight init distribution
+  Table 15/16 generator width / depth
+
+Each row = a short from-scratch direct-MCNC training run on the teacher
+stream; we validate the paper's TRENDS (monotonicity / ordering), not
+absolute MNIST numbers (no dataset in the container; see DESIGN.md S8).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import FAST, emit
+from benchmarks.table2_3_budget import train_compressed_mlp
+from repro.core.generator import GeneratorConfig
+
+STEPS = 60 if FAST else 250
+LR = 0.05
+
+
+def table6_frequency():
+    accs = {}
+    for freq in (1.0, 4.5, 16.0):
+        g = GeneratorConfig(k=9, d=2000, width=64, freq=freq)
+        accs[freq] = train_compressed_mlp(g, STEPS, LR)
+        emit(f"table6_freq_{freq}", 0.0, f"acc={accs[freq]:.3f}")
+    emit("table6_trend", 0.0,
+         f"freq4.5_vs_1.0={accs[4.5] - accs[1.0]:+.3f} "
+         f"(paper: higher freq >> 1.0)")
+
+
+def table7_model_size():
+    accs = {}
+    for hidden in (32, 128):
+        # fixed trainable params: scale d with model size
+        model_params = 64 * hidden + hidden * hidden + hidden * 10
+        d = max(10, model_params // 8)    # ~80 trainable params
+        g = GeneratorConfig(k=9, d=d, width=64)
+        from benchmarks.table2_3_budget import (TeacherStream,
+                                                TeacherStreamConfig)
+        import repro.models.classifier as C
+        acc = _train_sized(hidden, g)
+        accs[hidden] = acc
+        emit(f"table7_hidden_{hidden}", 0.0, f"acc={acc:.3f} d={d}")
+    emit("table7_trend", 0.0,
+         f"bigger_model_better={accs[128] >= accs[32] - 0.02}")
+
+
+def _train_sized(hidden: int, gen_cfg: GeneratorConfig) -> float:
+    import jax.numpy as jnp
+    from repro.core.reparam import (CompressionPolicy, apply_deltas,
+                                    expand_tree, init_mcnc_state,
+                                    plan_compression)
+    from repro.core.generator import init_generator
+    from repro.data.pipeline import TeacherStream, TeacherStreamConfig
+    from repro.models.classifier import (MLPConfig, accuracy, mlp_forward,
+                                         mlp_init, xent_loss)
+    from repro.optim import AdamConfig, adam_init, adam_update
+    mcfg = MLPConfig(in_dim=64, hidden=hidden, n_hidden=2, classes=10)
+    data = TeacherStream(TeacherStreamConfig(in_dim=64, classes=10,
+                                             batch=256, seed=123))
+    base = mlp_init(mcfg, jax.random.PRNGKey(0))
+    plan = plan_compression(base, None, gen_cfg,
+                            CompressionPolicy(exclude_patterns=(r"/b$",),
+                                              min_numel=1))
+    ws = init_generator(gen_cfg)
+    state = init_mcnc_state(plan)
+    opt = adam_init(state)
+    opt_cfg = AdamConfig(lr=LR)
+
+    def loss_fn(st, batch):
+        params = apply_deltas(jax.lax.stop_gradient(base),
+                              expand_tree(plan, ws, st))
+        return xent_loss(mlp_forward(mcfg, params, batch["x"]), batch["y"])
+
+    @jax.jit
+    def step(st, opt, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(st, batch)
+        st, opt, _ = adam_update(opt_cfg, st, grads, opt)
+        return st, opt, loss
+
+    for i in range(STEPS):
+        state, opt, _ = step(state, opt, data.batch(i))
+    test = data.batch(10_000)
+    params = apply_deltas(base, expand_tree(plan, ws, state))
+    return float(accuracy(mlp_forward(mcfg, params, test["x"]), test["y"]))
+
+
+def table13_k_d():
+    accs = {}
+    for k, d in ((1, 200), (9, 1000), (31, 3200)):   # fixed rate (k+1)/d
+        g = GeneratorConfig(k=k, d=d, width=64)
+        accs[k] = train_compressed_mlp(g, STEPS, LR)
+        emit(f"table13_k{k}_d{d}", 0.0, f"acc={accs[k]:.3f}")
+    emit("table13_trend", 0.0,
+         f"k31_vs_k1={accs[31] - accs[1]:+.3f} (paper: larger k wins)")
+
+
+def table14_init():
+    for init, c in (("uniform", 1.0), ("uniform", 8.0), ("normal", 1.0)):
+        g = GeneratorConfig(k=9, d=2000, width=64, init=init, init_scale=c)
+        acc = train_compressed_mlp(g, STEPS, LR)
+        emit(f"table14_{init}_c{c}", 0.0, f"acc={acc:.3f}")
+
+
+def table15_16_width_depth():
+    for width in ((32, 256) if FAST else (32, 128, 512)):
+        g = GeneratorConfig(k=9, d=2000, width=width)
+        acc = train_compressed_mlp(g, STEPS, LR)
+        emit(f"table15_width_{width}", 0.0, f"acc={acc:.3f}")
+    for depth in (2, 3, 4):
+        g = GeneratorConfig(k=9, d=2000, width=64, depth=depth)
+        acc = train_compressed_mlp(g, STEPS, LR)
+        emit(f"table16_depth_{depth}", 0.0, f"acc={acc:.3f}")
+
+
+def main():
+    table6_frequency()
+    table7_model_size()
+    table13_k_d()
+    table14_init()
+    table15_16_width_depth()
+
+
+if __name__ == "__main__":
+    main()

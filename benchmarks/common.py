@@ -1,0 +1,32 @@
+"""Shared benchmark utilities. Every table module prints
+``name,us_per_call,derived`` CSV rows via emit()."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+FAST = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time of fn(*args) in microseconds (jax block_until_ready
+    aware)."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

@@ -1,0 +1,109 @@
+"""Resumable driver for the full assignment matrix: 10 archs x 4 shapes x
+{single-pod 16x16, multi-pod 2x16x16}. Each cell runs in a fresh subprocess
+(jax device-count lock + memory hygiene); results append to
+results/dryrun.jsonl and completed cells are skipped on re-run.
+
+    PYTHONPATH=src python -m benchmarks.dryrun_all [--only arch[,arch]]
+        [--shapes s1,s2] [--multi-pod-only] [--single-pod-only]
+        [--timeout 3600] [--out results/dryrun.jsonl]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.registry import ARCH_IDS, SHAPES, get_arch  # noqa: E402
+
+
+def load_done(path: str) -> set:
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], bool(r.get("multi_pod")),
+                              r.get("variant", "baseline"),
+                              r.get("mode", "mcnc")))
+    return done
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, out: str,
+            timeout: int) -> dict:
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+        ok = proc.returncode == 0
+        err = (proc.stderr or "")[-2000:] if not ok else ""
+    except subprocess.TimeoutExpired:
+        ok, err = False, f"timeout after {timeout}s"
+    rec = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+           "driver_ok": ok, "wall_s": round(time.time() - t0, 1)}
+    if not ok:
+        rec["status"] = "failed"
+        rec["error"] = err
+        with open(out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--shapes", default=None)
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--retry-failed", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = args.only.split(",") if args.only else ARCH_IDS
+    shapes = args.shapes.split(",") if args.shapes else list(SHAPES)
+    pods = []
+    if not args.multi_pod_only:
+        pods.append(False)
+    if not args.single_pod_only:
+        pods.append(True)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = load_done(args.out)
+    total = 0
+    ran = 0
+    for multi_pod in pods:
+        for arch in archs:
+            for shape in shapes:
+                total += 1
+                key = (arch, shape, multi_pod, "baseline", "mcnc")
+                if key in done:
+                    print(f"[skip-done] {arch} {shape} mp={multi_pod}",
+                          flush=True)
+                    continue
+                print(f"[run] {arch} {shape} mp={multi_pod}", flush=True)
+                rec = run_one(arch, shape, multi_pod, args.out, args.timeout)
+                ran += 1
+                status = "OK" if rec["driver_ok"] else "FAIL"
+                print(f"[{status}] {arch} {shape} mp={multi_pod} "
+                      f"({rec['wall_s']}s)", flush=True)
+    print(f"driver done: {ran} ran, {total} total cells", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,178 @@
+"""SRoofline: derive the three-term roofline per (arch x shape x mesh) from
+the dry-run records (assignment ROOFLINE ANALYSIS).
+
+    compute term    = HLO_FLOPs / peak_FLOPs          [s, per chip]
+    memory term     = HLO_bytes / HBM_bw              [s, per chip]
+    collective term = collective_bytes / link_bw      [s, per chip]
+
+All inputs are per-device (SPMD modules are per-device; loop-aware counts
+from launch/hlo_cost.py). MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D
+(prefill / decode) — weight GEMMs only, attention excluded by convention, so
+ratios > 1 are possible for attention-dominated cells.
+
+Hardware model (assignment): TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def param_counts(arch_id: str) -> tuple[int, int]:
+    """(N_total, N_active) for the full-size config (cached)."""
+    from repro.configs.registry import get_arch
+    from repro.core.reparam import flatten_with_paths
+    import jax
+    arch = get_arch(arch_id)
+    cfg = arch.config
+    if arch.kind == "encdec":
+        from repro.models.encdec import param_specs
+    else:
+        from repro.models.lm import param_specs
+    flat = flatten_with_paths(param_specs(cfg))
+    total = active = 0
+    n_e = getattr(cfg, "n_experts", 0)
+    top_k = getattr(cfg, "top_k", 0)
+    for path, leaf in flat.items():
+        n = int(np.prod(leaf.shape))
+        total += n
+        name = path.split("/")[-1]
+        if name.startswith("we_") and n_e:
+            active += n * top_k // n_e
+        else:
+            active += n
+    return total, active
+
+
+_COUNTS_CACHE: dict[str, tuple[int, int]] = {}
+
+
+def model_flops_per_device(rec: dict) -> float:
+    arch_id = rec["arch"]
+    if arch_id not in _COUNTS_CACHE:
+        _COUNTS_CACHE[arch_id] = param_counts(arch_id)
+    total, active = _COUNTS_CACHE[arch_id]
+    from repro.configs.registry import SHAPES
+    shape = SHAPES[rec["shape"]]
+    chips = rec["n_chips"]
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * active * tokens / chips
+    return 2.0 * active * shape.global_batch / chips   # decode: one token
+
+
+def load_records(path: str, *, multi_pod: bool | None = False,
+                 variant: str | None = None) -> list[dict]:
+    recs: dict[tuple, dict] = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("status") not in ("ok", "skipped"):
+                continue
+            if multi_pod is not None and bool(r.get("multi_pod")) != multi_pod:
+                continue
+            if variant is not None and r.get("variant",
+                                             "baseline") != variant:
+                continue
+            key = (r["arch"], r["shape"], bool(r.get("multi_pod")),
+                   r.get("variant", "baseline"))
+            recs[key] = r     # last one wins (re-runs override)
+    return list(recs.values())
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") == "skipped":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "skipped": rec.get("reason", "")}
+    lc = rec["loop_cost"]
+    t_c = lc["flops"] / PEAK_FLOPS
+    t_m = lc["hbm_bytes"] / HBM_BW
+    t_x = lc["collective_bytes"] / LINK_BW
+    dominant = max(("compute", t_c), ("memory", t_m),
+                   ("collective", t_x), key=lambda kv: kv[1])
+    mf = model_flops_per_device(rec)
+    bound = max(t_c, t_m, t_x)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "variant": rec.get("variant", "baseline"),
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dominant[0],
+        "model_flops": mf,
+        "useful_ratio": mf / lc["flops"] if lc["flops"] else 0.0,
+        "roofline_fraction": t_c / bound if bound else 0.0,
+        "peak_gb": rec["memory"]["peak_per_device_bytes"] / 1e9,
+        "fits_16gb": rec["memory"]["peak_per_device_bytes"] < 16e9,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.jsonl")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+
+    recs = load_records(args.inp, multi_pod=args.multi_pod,
+                        variant=args.variant)
+    rows = [roofline_row(r) for r in recs]
+    rows = [r for r in rows if r]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+
+    if args.markdown:
+        print("| arch | shape | compute s | memory s | collective s | "
+              "dominant | useful/HLO | roofline frac | peak GB | fits |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "skipped" in r:
+            if args.markdown:
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                      f"skipped: {r['skipped']} | — | — | — | — |")
+            else:
+                print(f"roofline_{r['arch']}_{r['shape']},0.00,skipped")
+            continue
+        if args.markdown:
+            print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+                  f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+                  f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+                  f"{r['roofline_fraction']:.2f} | {r['peak_gb']:.1f} | "
+                  f"{'Y' if r['fits_16gb'] else 'N'} |")
+        else:
+            print(f"roofline_{r['arch']}_{r['shape']},0.00,"
+                  f"compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+                  f"collective={r['collective_s']:.3f}s dom={r['dominant']} "
+                  f"useful={r['useful_ratio']:.2f} "
+                  f"frac={r['roofline_fraction']:.2f} "
+                  f"peak={r['peak_gb']:.1f}GB")
+    # hillclimb candidate picks
+    real = [r for r in rows if "skipped" not in r]
+    if real:
+        worst = min(real, key=lambda r: r["roofline_fraction"])
+        coll = max(real, key=lambda r: r["collective_s"]
+                   / max(r["compute_s"], 1e-9))
+        print(f"# worst roofline fraction: {worst['arch']} {worst['shape']} "
+              f"({worst['roofline_fraction']:.2f})")
+        print(f"# most collective-bound: {coll['arch']} {coll['shape']} "
+              f"(coll/compute={coll['collective_s'] / max(coll['compute_s'], 1e-9):.1f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

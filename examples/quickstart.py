@@ -1,0 +1,51 @@
+"""Quickstart: compress a small LM's adapters with MCNC and fine-tune on a
+synthetic stream — the paper's S4.2 regime end to end on CPU in ~a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.core.generator import GeneratorConfig, init_generator
+from repro.data.pipeline import LMStream, LMStreamConfig
+from repro.optim import AdamConfig, adam_init
+from repro.train.steps import build_bundle, make_train_step
+
+
+def main():
+    arch = get_arch("yi_6b")                     # reduced config via smoke
+    gen = GeneratorConfig(k=5, d=1000, width=32, seed=0)
+    bundle = build_bundle(arch, "mcnc", smoke=True, generator=gen,
+                          adapter_rank=4)
+    print(f"model: {bundle.model_cfg.name}")
+    print(f"compression: {bundle.plan.summary()['compression_rate']:.4%} "
+          f"of the adapter set "
+          f"({bundle.plan.trainable_params} trainable params)")
+
+    base = bundle.init_base(jax.random.PRNGKey(0))
+    trainable = bundle.init_trainable(jax.random.PRNGKey(1))
+    gen_ws = init_generator(bundle.gen_cfg)
+    opt = adam_init(trainable)
+    # Paper Table 10: MCNC takes a 5-10x larger LR than uncompressed training.
+    step = jax.jit(make_train_step(bundle, AdamConfig(lr=0.05)))
+
+    data = LMStream(LMStreamConfig(vocab=bundle.model_cfg.vocab, seq_len=64,
+                                   global_batch=8, seed=0))
+    for i in range(30):
+        batch = data.batch(i)
+        trainable, opt, metrics = step(trainable, opt, base, gen_ws, batch,
+                                       jnp.int32(i))
+        if i % 5 == 0:
+            print(f"step {i:3d}  loss {float(metrics['loss']):.4f}")
+    print("done — loss should be falling; the only trained state was "
+          f"{bundle.plan.trainable_params} (alpha, beta) scalars.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Fig. 2 reproduction: traversal of S^2 by a 1-D manifold through
+generators with different activations, quantified by exp(-tau * W2^2)
+against U(S^{d-1}); plus the S3.1 SWGAN-trained generator (Table 9 setup).
+
+    PYTHONPATH=src python examples/sphere_coverage.py [--train]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core.generator import GeneratorConfig, init_generator
+from repro.core.manifold import coverage_metric, train_generator_swgan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--train", action="store_true",
+                    help="also run the SWGAN-trained generator comparison")
+    ap.add_argument("--d", type=int, default=3)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    print(f"coverage of S^{args.d - 1} by k=1 generators "
+          f"(paper Fig. 2: 1 -> 1024 -> 1024 -> {args.d}):")
+    print(f"{'activation':>10s} " + " ".join(f"L={L:<6}" for L in
+                                             (1.0, 4.0, 16.0)))
+    for act in ("sine", "sigmoid", "relu"):
+        row = []
+        for L in (1.0, 4.0, 16.0):
+            cfg = GeneratorConfig(k=1, d=args.d, width=1024, depth=3,
+                                  freq=L, activation=act, seed=0)
+            ws = init_generator(cfg)
+            cov = float(coverage_metric(cfg, ws, key, l_bound=1.0, n=2048))
+            row.append(cov)
+        print(f"{act:>10s} " + " ".join(f"{c:.3f}  " for c in row))
+    print("(paper: random sine generators at large L already cover well; "
+          "ReLU/Sigmoid collapse)")
+
+    if args.train:
+        cfg = GeneratorConfig(k=1, d=args.d, width=256, depth=3, freq=4.0,
+                              activation="sine", seed=0)
+        res = train_generator_swgan(cfg, jax.random.PRNGKey(1), steps=150,
+                                    batch=512)
+        print(f"SWGAN training: coverage {res.coverage_before:.3f} -> "
+              f"{res.coverage_after:.3f} "
+              "(paper S3.1: optimization only marginally improves sine)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""deepseek-coder-33b [dense; arXiv:2401.14196]: 62L d=7168 56H (GQA kv=8)
+d_ff=19200 vocab=32256, llama-arch."""
+from repro.configs.registry import ArchSpec
+from repro.models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek_coder_33b", n_layers=62, d_model=7168, n_heads=56,
+    n_kv_heads=8, head_dim=128, d_ff=19200, vocab=32256,
+    attn_type="gqa", block_type="dense", rope_theta=100000.0,
+    attn_chunk=2048, param_dtype="bfloat16")
+
+SMOKE_CONFIG = ModelConfig(
+    name="deepseek_coder_33b_smoke", n_layers=3, d_model=128, n_heads=8,
+    n_kv_heads=2, head_dim=16, d_ff=320, vocab=512, attn_type="gqa",
+    block_type="dense", attn_chunk=32, remat=False)
+
+ARCH = ArchSpec(arch_id="deepseek_coder_33b", family="dense", kind="lm",
+                config=CONFIG, smoke_config=SMOKE_CONFIG,
+                quadratic_attention=True, adapter_rank=16,
+                train_microbatches=2)

@@ -1,0 +1,29 @@
+"""deepseek-v2-236b [moe; arXiv:2405.04434]: 60L d=5120 128H MLA
+(kv_lora=512, q_lora=1536, nope=128, rope=64, v=128), MoE: 2 shared +
+160 routed top-6, routed d_ff=1536. (DSv2's single leading dense layer is
+folded into the uniform MoE stack — noted deviation.)"""
+from repro.configs.registry import ArchSpec
+from repro.models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek_v2_236b", n_layers=60, d_model=5120, n_heads=128,
+    n_kv_heads=128, head_dim=192, d_ff=12288, vocab=102400,
+    attn_type="mla", block_type="moe",
+    q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+    v_head_dim=128,
+    n_experts=160, top_k=6, n_shared=2, moe_d_ff=1536, shared_d_ff=3072,
+    capacity_factor=1.25, moe_seq_chunk=512,
+    attn_chunk=2048, param_dtype="bfloat16")
+
+SMOKE_CONFIG = ModelConfig(
+    name="deepseek_v2_236b_smoke", n_layers=3, d_model=128, n_heads=8,
+    n_kv_heads=8, head_dim=24, d_ff=256, vocab=512, attn_type="mla",
+    block_type="moe", q_lora_rank=48, kv_lora_rank=32, qk_nope_dim=16,
+    qk_rope_dim=8, v_head_dim=16, n_experts=8, top_k=3, n_shared=2,
+    moe_d_ff=64, shared_d_ff=128, capacity_factor=2.0, moe_seq_chunk=16,
+    attn_chunk=32, remat=False)
+
+ARCH = ArchSpec(arch_id="deepseek_v2_236b", family="moe", kind="lm",
+                config=CONFIG, smoke_config=SMOKE_CONFIG,
+                quadratic_attention=True, adapter_rank=16,
+                train_microbatches=1)

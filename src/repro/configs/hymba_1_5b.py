@@ -1,0 +1,25 @@
+"""hymba-1.5b [hybrid; arXiv:2411.13676]: 32L d=1600 25H (GQA kv=5)
+d_ff=5504 vocab=32001, ssm_state=16 — parallel attention + mamba heads.
+Deviation noted in DESIGN.md: all layers use sliding-window attention
+(window=1024) with the mamba path carrying global context, so the long_500k
+decode cache stays O(window) + O(state)."""
+from repro.configs.registry import ArchSpec
+from repro.models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba_1_5b", n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+    head_dim=64, d_ff=5504, vocab=32001, attn_type="gqa",
+    block_type="hybrid", window=1024, ssm_state=16, ssm_expand=2,
+    ssm_dt_rank=48, ssm_conv=4, attn_chunk=2048, time_chunk=512,
+    param_dtype="bfloat16")
+
+SMOKE_CONFIG = ModelConfig(
+    name="hymba_1_5b_smoke", n_layers=3, d_model=96, n_heads=6, n_kv_heads=2,
+    head_dim=16, d_ff=256, vocab=512, attn_type="gqa", block_type="hybrid",
+    window=16, ssm_state=4, ssm_expand=2, ssm_dt_rank=8, ssm_conv=4,
+    attn_chunk=16, time_chunk=16, remat=False)
+
+ARCH = ArchSpec(arch_id="hymba_1_5b", family="hybrid", kind="lm",
+                config=CONFIG, smoke_config=SMOKE_CONFIG,
+                quadratic_attention=False, adapter_rank=8,
+                train_microbatches=1)

@@ -1,0 +1,22 @@
+"""llama3-405b [dense; arXiv:2407.21783]: 126L d=16384 128H (GQA kv=8)
+d_ff=53248 vocab=128256. Full-FT optimizer state alone would need ~25GB/chip
+on 256 chips; the MCNC-PEFT train step (paper's LLM regime) is what fits —
+see DESIGN.md S5."""
+from repro.configs.registry import ArchSpec
+from repro.models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3_405b", n_layers=126, d_model=16384, n_heads=128,
+    n_kv_heads=8, head_dim=128, d_ff=53248, vocab=128256,
+    attn_type="gqa", block_type="dense", rope_theta=500000.0,
+    attn_chunk=2048, param_dtype="bfloat16")
+
+SMOKE_CONFIG = ModelConfig(
+    name="llama3_405b_smoke", n_layers=3, d_model=128, n_heads=8,
+    n_kv_heads=2, head_dim=16, d_ff=416, vocab=1024, attn_type="gqa",
+    block_type="dense", attn_chunk=32, remat=False)
+
+ARCH = ArchSpec(arch_id="llama3_405b", family="dense", kind="lm",
+                config=CONFIG, smoke_config=SMOKE_CONFIG,
+                quadratic_attention=True, adapter_rank=16,
+                train_microbatches=8)

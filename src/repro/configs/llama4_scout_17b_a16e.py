@@ -1,0 +1,26 @@
+"""llama4-scout-17b-a16e [moe; hf:meta-llama/Llama-4-Scout-17B-16E]:
+48L d=5120 40H (GQA kv=8) per-expert d_ff=8192, MoE 16e top-1 + 1 shared
+expert, vocab=202048. Early-fusion multimodality is out of backbone scope
+(assignment: LM backbone only)."""
+from repro.configs.registry import ArchSpec
+from repro.models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4_scout_17b_a16e", n_layers=48, d_model=5120, n_heads=40,
+    n_kv_heads=8, head_dim=128, d_ff=8192, vocab=202048,
+    attn_type="gqa", block_type="moe", rope_theta=500000.0,
+    n_experts=16, top_k=1, n_shared=1, moe_d_ff=8192, shared_d_ff=8192,
+    capacity_factor=1.25, moe_seq_chunk=512,
+    attn_chunk=2048, param_dtype="bfloat16")
+
+SMOKE_CONFIG = ModelConfig(
+    name="llama4_scout_smoke", n_layers=3, d_model=128, n_heads=8,
+    n_kv_heads=2, head_dim=16, d_ff=256, vocab=512, attn_type="gqa",
+    block_type="moe", n_experts=4, top_k=1, n_shared=1, moe_d_ff=64,
+    shared_d_ff=64, capacity_factor=2.0, moe_seq_chunk=16, attn_chunk=32,
+    remat=False)
+
+ARCH = ArchSpec(arch_id="llama4_scout_17b_a16e", family="moe", kind="lm",
+                config=CONFIG, smoke_config=SMOKE_CONFIG,
+                quadratic_attention=True, adapter_rank=16,
+                train_microbatches=1)

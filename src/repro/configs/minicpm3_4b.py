@@ -1,0 +1,22 @@
+"""minicpm3-4b [dense/MLA; hf:openbmb/MiniCPM3-4B]: 62L d=2560 40H
+d_ff=6400 vocab=73448, MLA (q_lora=768, kv_lora=256, nope=64, rope=32, v=64)."""
+from repro.configs.registry import ArchSpec
+from repro.models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3_4b", n_layers=62, d_model=2560, n_heads=40,
+    n_kv_heads=40, head_dim=96, d_ff=6400, vocab=73448,
+    attn_type="mla", block_type="dense",
+    q_lora_rank=768, kv_lora_rank=256, qk_nope_dim=64, qk_rope_dim=32,
+    v_head_dim=64, attn_chunk=2048, param_dtype="bfloat16")
+
+SMOKE_CONFIG = ModelConfig(
+    name="minicpm3_4b_smoke", n_layers=3, d_model=128, n_heads=8,
+    n_kv_heads=8, head_dim=24, d_ff=320, vocab=512, attn_type="mla",
+    block_type="dense", q_lora_rank=48, kv_lora_rank=32, qk_nope_dim=16,
+    qk_rope_dim=8, v_head_dim=16, attn_chunk=32, remat=False)
+
+ARCH = ArchSpec(arch_id="minicpm3_4b", family="dense", kind="lm",
+                config=CONFIG, smoke_config=SMOKE_CONFIG,
+                quadratic_attention=True, adapter_rank=8,
+                train_microbatches=1)

@@ -1,0 +1,22 @@
+"""pixtral-12b [vlm; hf:mistralai/Pixtral-12B-2409]: 40L d=5120 32H
+(GQA kv=8, head_dim=128) d_ff=14336 vocab=131072 — mistral-nemo backbone.
+Vision frontend (pixtral-ViT) is a stub: input_specs() provides precomputed
+patch/text embeddings (B, S, d); the unembed head stays for loss/decode."""
+from repro.configs.registry import ArchSpec
+from repro.models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral_12b", n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab=131072, attn_type="gqa",
+    block_type="dense", rope_theta=1000000.0, input_mode="embeddings",
+    attn_chunk=2048, param_dtype="bfloat16")
+
+SMOKE_CONFIG = ModelConfig(
+    name="pixtral_12b_smoke", n_layers=3, d_model=128, n_heads=8,
+    n_kv_heads=2, head_dim=16, d_ff=352, vocab=512, attn_type="gqa",
+    block_type="dense", input_mode="embeddings", attn_chunk=32, remat=False)
+
+ARCH = ArchSpec(arch_id="pixtral_12b", family="vlm", kind="lm",
+                config=CONFIG, smoke_config=SMOKE_CONFIG,
+                quadratic_attention=True, adapter_rank=16,
+                train_microbatches=1)

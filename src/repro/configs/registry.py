@@ -1,0 +1,90 @@
+"""Assigned architectures x input shapes (see DESIGN.md S5) + paper configs.
+
+Each architecture file exports ARCH: ArchSpec. This registry collects them
+and defines the four assignment shapes. `--arch <id>` in the launchers
+resolves through get_arch().
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+from repro.core.generator import GeneratorConfig, LLM_GENERATOR
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                 # dense | moe | hybrid | ssm | audio | vlm
+    kind: str                   # lm | encdec
+    config: Any                 # ModelConfig | EncDecConfig (full size)
+    smoke_config: Any           # reduced same-family config for CPU tests
+    quadratic_attention: bool   # True => long_500k skipped (DESIGN.md S5)
+    adapter_rank: int = 8
+    generator: GeneratorConfig = LLM_GENERATOR
+    # train_4k execution knobs (memory fitting; see DESIGN.md S5)
+    train_microbatches: int = 1
+    seq_shard: bool = True
+    notes: str = ""
+
+    def runnable_shapes(self) -> list[str]:
+        out = []
+        for name, sh in SHAPES.items():
+            if sh.name == "long_500k" and self.quadratic_attention:
+                continue
+            out.append(name)
+        return out
+
+
+ARCH_IDS = [
+    "deepseek_coder_33b",
+    "llama3_405b",
+    "minicpm3_4b",
+    "yi_6b",
+    "hymba_1_5b",
+    "seamless_m4t_medium",
+    "deepseek_v2_236b",
+    "llama4_scout_17b_a16e",
+    "pixtral_12b",
+    "rwkv6_7b",
+]
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    arch_id = arch_id.replace("-", "_").replace(".", "_")
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.ARCH
+
+
+def all_archs() -> list[ArchSpec]:
+    return [get_arch(a) for a in ARCH_IDS]
+
+
+def all_cells() -> list[tuple[str, str, bool]]:
+    """(arch_id, shape_name, runnable) for all 40 assignment cells."""
+    cells = []
+    for aid in ARCH_IDS:
+        arch = get_arch(aid)
+        runnable = set(arch.runnable_shapes())
+        for shape in SHAPES:
+            cells.append((aid, shape, shape in runnable))
+    return cells

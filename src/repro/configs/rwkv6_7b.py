@@ -1,0 +1,20 @@
+"""rwkv6-7b [ssm; arXiv:2404.05892 'Finch']: 32L d=4096 attention-free
+(data-dependent decay linear attention, head_size=64), d_ff=14336
+vocab=65536. Decode state is O(1) per layer — long_500k runs."""
+from repro.configs.registry import ArchSpec
+from repro.models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6_7b", n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64,
+    head_dim=64, d_ff=14336, vocab=65536, attn_type="none",
+    block_type="rwkv", rwkv_head_size=64, rwkv_decay_rank=64,
+    time_chunk=64, param_dtype="bfloat16")
+
+SMOKE_CONFIG = ModelConfig(
+    name="rwkv6_7b_smoke", n_layers=3, d_model=96, n_heads=6, n_kv_heads=6,
+    head_dim=16, d_ff=256, vocab=512, attn_type="none", block_type="rwkv",
+    rwkv_head_size=16, rwkv_decay_rank=8, time_chunk=16, remat=False)
+
+ARCH = ArchSpec(arch_id="rwkv6_7b", family="ssm", kind="lm", config=CONFIG,
+                smoke_config=SMOKE_CONFIG, quadratic_attention=False,
+                adapter_rank=8, train_microbatches=1)

@@ -1,0 +1,20 @@
+"""seamless-m4t-medium [audio; arXiv:2308.11596]: enc-dec 12L+12L d=1024
+16H (kv=16) d_ff=4096 vocab=256206. Audio frontend is a stub: the encoder
+consumes precomputed frame embeddings (assignment requirement)."""
+from repro.configs.registry import ArchSpec
+from repro.models.encdec import EncDecConfig
+
+CONFIG = EncDecConfig(
+    name="seamless_m4t_medium", enc_layers=12, dec_layers=12, d_model=1024,
+    n_heads=16, n_kv_heads=16, head_dim=64, d_ff=4096, vocab=256206,
+    attn_chunk=2048, param_dtype="bfloat16")
+
+SMOKE_CONFIG = EncDecConfig(
+    name="seamless_m4t_medium_smoke", enc_layers=2, dec_layers=2, d_model=96,
+    n_heads=6, n_kv_heads=6, head_dim=16, d_ff=256, vocab=512, attn_chunk=16,
+    remat=False)
+
+ARCH = ArchSpec(arch_id="seamless_m4t_medium", family="audio", kind="encdec",
+                config=CONFIG, smoke_config=SMOKE_CONFIG,
+                quadratic_attention=True, adapter_rank=8,
+                train_microbatches=1)

@@ -1,0 +1,19 @@
+"""yi-6b [dense; arXiv:2403.04652]: 32L d=4096 32H (GQA kv=4) d_ff=11008
+vocab=64000, llama-arch."""
+from repro.configs.registry import ArchSpec
+from repro.models.lm import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi_6b", n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+    head_dim=128, d_ff=11008, vocab=64000, attn_type="gqa",
+    block_type="dense", rope_theta=5000000.0, attn_chunk=2048,
+    param_dtype="bfloat16")
+
+SMOKE_CONFIG = ModelConfig(
+    name="yi_6b_smoke", n_layers=3, d_model=128, n_heads=8, n_kv_heads=2,
+    head_dim=16, d_ff=352, vocab=512, attn_type="gqa", block_type="dense",
+    attn_chunk=32, remat=False)
+
+ARCH = ArchSpec(arch_id="yi_6b", family="dense", kind="lm", config=CONFIG,
+                smoke_config=SMOKE_CONFIG, quadratic_attention=True,
+                adapter_rank=8, train_microbatches=1)

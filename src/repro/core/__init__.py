@@ -1,0 +1,19 @@
+# The paper's primary contribution: MCNC reparameterization.
+from repro.core.generator import (GeneratorConfig, DEFAULT_GENERATOR,
+                                  LLM_GENERATOR, init_generator,
+                                  generator_forward, expand_chunks)
+from repro.core.reparam import (CompressionPolicy, CompressionPlan, LeafPlan,
+                                plan_compression, init_mcnc_state,
+                                mcnc_state_partition_specs, expand_tree,
+                                expand_leaf, apply_deltas, expand_and_apply,
+                                flatten_with_paths, unflatten_paths,
+                                default_expand_fn)
+from repro.core.adapters import (AdapterConfig, init_adapters, dense,
+                                 lora_apply, merge_adapters_into_params,
+                                 split_adapters, adapter_site_shapes,
+                                 LORA_A_SUFFIX, LORA_B_SUFFIX)
+from repro.core.baselines import (pranc_generator, NolaConfig, NolaPlan,
+                                  plan_nola, init_nola_state, expand_nola,
+                                  nola_basis)
+from repro.core.manifold import (coverage_metric, sliced_w2,
+                                 sample_uniform_sphere, train_generator_swgan)

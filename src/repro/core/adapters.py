@@ -1,0 +1,127 @@
+"""LoRA adapter machinery + composition with MCNC.
+
+The paper's LLM regime (S4.2) reparameterizes LoRA-style adapter factors with
+MCNC instead of the raw weights: W_eff = W0 + (A0 + dA) @ (B0 + dB) * s where
+A0 is a frozen random init, B0 = 0 (so the product is exactly zero at init),
+and dA/dB are MCNC expansions (alpha=0 => dA=dB=0 at init).
+
+Adapters live inline in the params tree as "<weight>_lora_a"/"<weight>_lora_b"
+siblings so that scanned layer stacks carry them automatically. Application is
+never merged: y = x @ W + ((x @ A) @ B) * s — this is the paper's multi-task
+batched-serving story (Table 4) and avoids materializing full-rank deltas.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reparam import flatten_with_paths, unflatten_paths
+
+Array = jax.Array
+PyTree = Any
+
+LORA_A_SUFFIX = "_lora_a"
+LORA_B_SUFFIX = "_lora_b"
+
+# Default: adapt every transformer linear (paper fine-tunes "all layers").
+DEFAULT_TARGETS = (
+    r"(wq|wk|wv|wo|w_qkv|q_proj|k_proj|v_proj|o_proj)$",
+    r"(w_gate|w_up|w_down|gate_proj|up_proj|down_proj|w1|w2|w3)$",
+    r"(w_in|w_out|wx|wr|wk_ssm|wv_ssm|w_ssm|in_proj|out_proj)$",
+    r"(w_router|w_shared_gate|w_shared_up|w_shared_down)$",
+    r"(we_gate|we_up|we_down)$",  # stacked expert weights
+    r"(w_recept|w_key|w_value|w_gate_rwkv|w_out_rwkv)$",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterConfig:
+    rank: int = 8
+    scale: float = 1.0           # LoRA alpha/r collapsed into one scalar
+    targets: tuple[str, ...] = DEFAULT_TARGETS
+    seed: int = 1234
+    dtype: str = "float32"
+
+    def matches(self, path: str) -> bool:
+        low = path.lower()
+        return any(re.search(p, low) for p in self.targets)
+
+
+def adapter_site_shapes(param_specs: PyTree, cfg: AdapterConfig
+                        ) -> dict[str, tuple[tuple[int, ...], tuple[int, ...]]]:
+    """For each target weight (..., m, n) -> (A shape (..., m, r), B (..., r, n)).
+
+    Leading (stacked/scan/expert) dims are preserved so adapters ride through
+    lax.scan with their weights.
+    """
+    flat = flatten_with_paths(param_specs)
+    sites = {}
+    for path, leaf in flat.items():
+        if LORA_A_SUFFIX in path or LORA_B_SUFFIX in path:
+            continue
+        shape = tuple(int(s) for s in leaf.shape)
+        if len(shape) < 2 or not cfg.matches(path):
+            continue
+        *lead, m, n = shape
+        a_shape = tuple(lead) + (m, cfg.rank)
+        b_shape = tuple(lead) + (cfg.rank, n)
+        sites[path] = (a_shape, b_shape)
+    return sites
+
+
+def init_adapters(param_specs: PyTree, cfg: AdapterConfig) -> PyTree:
+    """A ~ N(0, 1/m) (standard LoRA init), B = 0. Returned as a pytree with
+    '<path>_lora_a'/'<path>_lora_b' leaves, mergeable into the params tree."""
+    sites = adapter_site_shapes(param_specs, cfg)
+    key = jax.random.PRNGKey(cfg.seed)
+    dtype = jnp.dtype(cfg.dtype)
+    flat = {}
+    for path in sorted(sites):
+        a_shape, b_shape = sites[path]
+        key, sub = jax.random.split(key)
+        m = a_shape[-2]
+        flat[path + LORA_A_SUFFIX] = (
+            jax.random.normal(sub, a_shape, dtype) / np.sqrt(m))
+        flat[path + LORA_B_SUFFIX] = jnp.zeros(b_shape, dtype)
+    return unflatten_paths(flat)
+
+
+def merge_adapters_into_params(params: PyTree, adapters: PyTree) -> PyTree:
+    flat = dict(flatten_with_paths(params))
+    flat.update(flatten_with_paths(adapters))
+    return unflatten_paths(flat)
+
+
+def split_adapters(params: PyTree) -> tuple[PyTree, PyTree]:
+    """Split a merged tree back into (base, adapters)."""
+    flat = flatten_with_paths(params)
+    base = {p: v for p, v in flat.items()
+            if LORA_A_SUFFIX not in p and LORA_B_SUFFIX not in p}
+    adap = {p: v for p, v in flat.items()
+            if LORA_A_SUFFIX in p or LORA_B_SUFFIX in p}
+    return unflatten_paths(base), (unflatten_paths(adap) if adap else {})
+
+
+def lora_apply(x: Array, a: Array | None, b: Array | None,
+               scale: float = 1.0) -> Array:
+    """((x @ A) @ B) * scale, or 0 if no adapter. x: (..., m)."""
+    if a is None or b is None:
+        return jnp.zeros(x.shape[:-1] + (0,), x.dtype)  # caller guards
+    h = jnp.einsum("...m,mr->...r", x, a.astype(x.dtype))
+    y = jnp.einsum("...r,rn->...n", h, b.astype(x.dtype))
+    return y * scale
+
+
+def dense(x: Array, w: Array, lora_a: Array | None = None,
+          lora_b: Array | None = None, scale: float = 1.0) -> Array:
+    """y = x @ W (+ unmerged LoRA path). The universal linear used by every
+    model; adapters are applied unmerged (DESIGN.md S2/serve)."""
+    y = jnp.einsum("...m,mn->...n", x, w.astype(x.dtype))
+    if lora_a is not None and lora_b is not None:
+        y = y + lora_apply(x, lora_a, lora_b, scale)
+    return y

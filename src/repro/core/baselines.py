@@ -1,0 +1,113 @@
+"""Baselines the paper compares against: PRANC, NOLA, (plain LoRA lives in
+core/adapters.py; pruning accounting lives in benchmarks/table1_vit.py).
+
+PRANC (Nooralinejad et al. 2023): theta = theta0 + sum_i c_i v_i with frozen
+random basis vectors — exactly MCNC with a *linear depth-1 generator* (the
+paper: "when no activation is used, our method recovers a variation of
+PRANC"). We therefore express PRANC as a GeneratorConfig and reuse the entire
+chunking/expansion/optimizer stack.
+
+NOLA (Koohpayegani et al. 2024): LoRA factors expressed as learned linear
+combinations of frozen random bases: A = sum_i c^A_i A_i, B = sum_j c^B_j B_j.
+Reconstruction FLOPs per m x r factor = 2 * n_bases * m * r (paper A.6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.generator import GeneratorConfig
+from repro.core.reparam import flatten_with_paths, unflatten_paths
+from repro.core.adapters import LORA_A_SUFFIX, LORA_B_SUFFIX
+
+Array = jax.Array
+PyTree = Any
+
+
+def pranc_generator(k: int, d: int, seed: int = 0) -> GeneratorConfig:
+    """PRANC = linear generator: one frozen random k x d matrix per chunk
+    space. freq=1, no activation, depth=1."""
+    return GeneratorConfig(k=k, d=d, width=0, depth=1, freq=1.0,
+                           activation="none", seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# NOLA
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NolaConfig:
+    n_bases: int = 64
+    seed: int = 7
+    dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class NolaPlan:
+    cfg: NolaConfig
+    # path -> flattened leaf size
+    leaves: dict[str, tuple[tuple[int, ...], int]]
+
+    @property
+    def trainable_params(self) -> int:
+        return self.cfg.n_bases * len(self.leaves)
+
+    def reconstruction_flops(self) -> int:
+        return sum(2 * self.cfg.n_bases * numel
+                   for _, (_, numel) in sorted(self.leaves.items()))
+
+
+def plan_nola(adapter_specs: PyTree, cfg: NolaConfig) -> NolaPlan:
+    """One coefficient vector per adapter factor leaf (A and B separately,
+    as in the NOLA paper)."""
+    flat = flatten_with_paths(adapter_specs)
+    leaves = {}
+    for path, leaf in flat.items():
+        if LORA_A_SUFFIX not in path and LORA_B_SUFFIX not in path:
+            continue
+        shape = tuple(int(s) for s in leaf.shape)
+        leaves[path] = (shape, int(np.prod(shape)))
+    return NolaPlan(cfg=cfg, leaves=leaves)
+
+
+def _leaf_key(seed: int, path: str) -> jax.Array:
+    # Stable per-leaf key derived from the seed and the path hash.
+    h = np.uint32(abs(hash(path)) % (2 ** 31))
+    return jax.random.fold_in(jax.random.PRNGKey(seed), h)
+
+
+def nola_basis(plan: NolaPlan, path: str) -> Array:
+    """Frozen random basis (n_bases, numel) for one leaf, ~N(0, 1/n_bases)."""
+    shape, numel = plan.leaves[path]
+    key = _leaf_key(plan.cfg.seed, path)
+    return jax.random.normal(key, (plan.cfg.n_bases, numel),
+                             jnp.dtype(plan.cfg.dtype)) / np.sqrt(plan.cfg.n_bases)
+
+
+def init_nola_state(plan: NolaPlan) -> PyTree:
+    """Coefficients: random for A-factors, zero for B-factors => product is
+    exactly zero at init (mirrors LoRA's A-random/B-zero)."""
+    flat = {}
+    for path in sorted(plan.leaves):
+        key = _leaf_key(plan.cfg.seed + 1, path)
+        if LORA_B_SUFFIX in path:
+            flat[path] = jnp.zeros((plan.cfg.n_bases,), jnp.dtype(plan.cfg.dtype))
+        else:
+            flat[path] = jax.random.normal(key, (plan.cfg.n_bases,),
+                                           jnp.dtype(plan.cfg.dtype))
+    return unflatten_paths(flat)
+
+
+def expand_nola(plan: NolaPlan, state: PyTree) -> PyTree:
+    """coeffs -> adapter leaves (replaces the adapter values entirely)."""
+    flat_state = flatten_with_paths(state)
+    out = {}
+    for path, (shape, _numel) in plan.leaves.items():
+        basis = nola_basis(plan, path)
+        coeff = flat_state[path]
+        out[path] = (coeff @ basis).reshape(shape)
+    return unflatten_paths(out)

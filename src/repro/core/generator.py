@@ -1,0 +1,127 @@
+"""The MCNC random generator: a frozen sine-activated MLP phi: R^k -> R^d.
+
+Paper (S3.1, Table 10): 3 linear layers, no biases (so alpha=0 => output 0,
+guaranteeing zero-init of the residual), weights ~ U(-1/n, 1/n) where n is the
+layer fan-in, sine activations on hidden layers, and an "input frequency"
+omega multiplying the first-layer pre-activation. The generator is stored and
+communicated as a single PRNG seed.
+
+Two presets from the paper:
+  * default (Table 10):  k=9,  width=1000, d=5000, freq=4.5
+  * llm     (S4.2):      k=5,  width=32,   d=5000, freq=4.5
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GeneratorConfig:
+    """Config for the frozen random generator phi."""
+
+    k: int = 9                  # input dim (alpha dimension)
+    d: int = 5000               # output dim (chunk size)
+    width: int = 1000           # hidden width
+    depth: int = 3              # number of linear layers (>= 2)
+    freq: float = 4.5           # input frequency (first layer pre-act scale)
+    activation: str = "sine"    # sine|sigmoid|relu|leaky_relu|elu|none
+    init: str = "uniform"       # uniform (paper) | normal (ablation Table 14)
+    init_scale: float = 1.0     # variance multiplier c (ablation Table 14)
+    seed: int = 0               # the whole generator is this seed
+    normalize: bool = False     # optional safe L2-normalize of output
+    dtype: str = "float32"
+
+    def layer_dims(self) -> list[tuple[int, int]]:
+        dims = [self.k] + [self.width] * (self.depth - 1) + [self.d]
+        return list(zip(dims[:-1], dims[1:]))
+
+    @property
+    def params_per_chunk(self) -> int:
+        """Trainable params representing one d-sized chunk: alpha (k) + beta."""
+        return self.k + 1
+
+    @property
+    def compression_rate(self) -> float:
+        return self.d / float(self.params_per_chunk)
+
+    def flops_per_chunk(self) -> int:
+        """FLOPs of one generator forward for one chunk (paper A.6 counts
+        2*m*n per m x n matmul, + d for the beta scale)."""
+        return 2 * sum(a * b for a, b in self.layer_dims()) + self.d
+
+
+# Paper presets.
+DEFAULT_GENERATOR = GeneratorConfig()
+LLM_GENERATOR = GeneratorConfig(k=5, width=32, d=5000, depth=3, freq=4.5)
+
+
+def _act(name: str):
+    return {
+        "sine": jnp.sin,
+        "sigmoid": jax.nn.sigmoid,
+        "relu": jax.nn.relu,
+        "leaky_relu": lambda x: jax.nn.leaky_relu(x, 0.01),
+        "elu": jax.nn.elu,
+        "none": lambda x: x,
+    }[name]
+
+
+def init_generator(cfg: GeneratorConfig) -> list[Array]:
+    """Materialize the frozen generator weights from cfg.seed.
+
+    Weights ~ U(-1/n, 1/n) (n = fan-in) by default, per Table 10. The
+    ablation variants scale the *variance* by init_scale c (std by sqrt(c));
+    c is forced to 1 on the first layer (paper A.5: the first layer's scale is
+    the input frequency and is controlled separately by cfg.freq).
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    dtype = jnp.dtype(cfg.dtype)
+    ws = []
+    for i, (fan_in, fan_out) in enumerate(cfg.layer_dims()):
+        key, sub = jax.random.split(key)
+        c = 1.0 if i == 0 else float(cfg.init_scale)
+        if cfg.init == "uniform":
+            bound = np.sqrt(c) / fan_in
+            w = jax.random.uniform(sub, (fan_in, fan_out), dtype, -bound, bound)
+        elif cfg.init == "normal":
+            std = np.sqrt(c) / fan_in
+            w = std * jax.random.normal(sub, (fan_in, fan_out), dtype)
+        else:
+            raise ValueError(f"unknown init {cfg.init!r}")
+        ws.append(w)
+    return ws
+
+
+def generator_forward(cfg: GeneratorConfig, weights: Sequence[Array],
+                      alpha: Array) -> Array:
+    """phi(alpha): (..., k) -> (..., d). Pure-jnp reference path.
+
+    The input frequency multiplies the first pre-activation (equivalently is
+    absorbed into the first layer weights, paper Fig. 2 caption).
+    """
+    act = _act(cfg.activation)
+    h = alpha.astype(weights[0].dtype)
+    n_layers = len(weights)
+    for i, w in enumerate(weights):
+        h = h @ w
+        if i == 0:
+            h = h * jnp.asarray(cfg.freq, h.dtype)
+        if i < n_layers - 1:  # hidden layers only; output layer is linear
+            h = act(h)
+    if cfg.normalize:
+        h = h / (jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-8)
+    return h
+
+
+def expand_chunks(cfg: GeneratorConfig, weights: Sequence[Array],
+                  alpha: Array, beta: Array) -> Array:
+    """(alpha (N,k), beta (N,)) -> delta (N, d): beta * phi(alpha)."""
+    out = generator_forward(cfg, weights, alpha)
+    return out * beta[..., None].astype(out.dtype)

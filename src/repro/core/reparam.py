@@ -1,0 +1,318 @@
+"""Shard-aligned chunking + expansion: the MCNC reparameterization.
+
+The paper flattens the model parameters into one long vector, splits it into
+chunks of size d, and trains (alpha in R^k, beta in R) per chunk with
+delta_chunk = beta * phi(alpha). The chunk *order* is an arbitrary fixed
+permutation (paper S3.3 simply uses flatten order and pads the tail), so for
+TPU tensor-parallel execution we chunk within each (tensor, model-shard)
+block instead: expansion becomes 100% local to every device (zero collectives
+added by MCNC). See DESIGN.md S3.2.
+
+A leaf of shape S with model-sharded dim j is viewed as a 3D block
+(outer, shard_len, inner) per shard, flattened row-major, and chunked:
+
+    alpha: (tp, C, k)   sharded ('model', None, None)
+    beta : (tp, C)      sharded ('model', None)
+
+Expansion maps (alpha, beta) -> delta with the exact leaf shape/sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.generator import (GeneratorConfig, expand_chunks,
+                                  generator_forward, init_generator)
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Pytree path utilities (string-keyed nested dicts are our param container).
+# ---------------------------------------------------------------------------
+
+def flatten_with_paths(tree: PyTree, prefix: str = "") -> dict[str, Any]:
+    """Flatten a nested dict pytree into {"a/b/c": leaf}."""
+    out: dict[str, Any] = {}
+    if isinstance(tree, Mapping):
+        for key in sorted(tree.keys()):
+            sub = flatten_with_paths(tree[key], f"{prefix}{key}/")
+            out.update(sub)
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def unflatten_paths(flat: Mapping[str, Any]) -> PyTree:
+    root: dict[str, Any] = {}
+    for path, leaf in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return root
+
+
+# ---------------------------------------------------------------------------
+# Compression policy: which leaves get reparameterized.
+# ---------------------------------------------------------------------------
+
+# Paper policy: exclude position embeddings, CLS token, LayerNorm/BatchNorm,
+# biases (S4.1); embeddings excluded for ViT experiments as well.
+DEFAULT_EXCLUDE = (
+    r"(^|/)(bias|b)$",
+    r"(norm|ln|layernorm|batchnorm|rmsnorm)",
+    r"(pos_emb|position|cls_token|embed|embedding|lm_head)",
+    r"(scale|gamma|beta_param)",
+    r"(a_log|dt_|decay|time_mix|token_shift|mu_)",  # SSM small/sensitive params
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPolicy:
+    exclude_patterns: tuple[str, ...] = DEFAULT_EXCLUDE
+    include_patterns: tuple[str, ...] = ()   # if set, only these are eligible
+    min_numel: int = 4096                    # skip tiny leaves
+
+    def wants(self, path: str, numel: int) -> bool:
+        if numel < self.min_numel:
+            return False
+        low = path.lower()
+        if self.include_patterns:
+            if not any(re.search(p, low) for p in self.include_patterns):
+                return False
+        return not any(re.search(p, low) for p in self.exclude_patterns)
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf chunk plan.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    path: str
+    shape: tuple[int, ...]
+    dtype: Any
+    sharded_dim: int | None     # leaf dim sharded over the model axis
+    tp: int                     # model-shard count (1 if unsharded)
+    outer: int                  # prod(shape[:sharded_dim])
+    shard_len: int              # shape[sharded_dim] // tp
+    inner: int                  # prod(shape[sharded_dim+1:])
+    chunks: int                 # chunks per shard
+
+    @property
+    def shard_numel(self) -> int:
+        return self.outer * self.shard_len * self.inner
+
+    @property
+    def numel(self) -> int:
+        return self.shard_numel * self.tp
+
+    def trainable_params(self, k: int) -> int:
+        return self.tp * self.chunks * (k + 1)
+
+
+def _make_leaf_plan(path: str, shape: Sequence[int], dtype, spec,
+                    mesh_model_axis: str, tp_degree: int, d: int) -> LeafPlan:
+    shape = tuple(int(s) for s in shape)
+    sharded_dim = None
+    tp = 1
+    if spec is not None:
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            names_t = names if isinstance(names, tuple) else (names,)
+            if mesh_model_axis in names_t:
+                sharded_dim = dim
+                tp = tp_degree
+                break
+    if sharded_dim is None:
+        # Treat whole leaf as one shard (replicated alpha).
+        outer, shard_len, inner = 1, 1, int(np.prod(shape)) if shape else 1
+        j = None
+    else:
+        if shape[sharded_dim] % tp != 0:
+            # Cannot shard-align; fall back to replicated chunking.
+            sharded_dim, tp = None, 1
+            outer, shard_len, inner = 1, 1, int(np.prod(shape))
+        else:
+            outer = int(np.prod(shape[:sharded_dim])) if sharded_dim else 1
+            shard_len = shape[sharded_dim] // tp
+            inner = int(np.prod(shape[sharded_dim + 1:]))
+        j = sharded_dim
+    shard_numel = outer * shard_len * inner
+    chunks = max(1, math.ceil(shard_numel / d))
+    return LeafPlan(path=path, shape=shape, dtype=dtype, sharded_dim=j, tp=tp,
+                    outer=outer, shard_len=shard_len, inner=inner,
+                    chunks=chunks)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPlan:
+    gen_cfg: GeneratorConfig
+    leaves: dict[str, LeafPlan]            # compressed leaves only
+    total_model_params: int                # across ALL leaves (incl. excluded)
+    excluded_params: int
+
+    @property
+    def represented_params(self) -> int:
+        return sum(lp.numel for lp in self.leaves.values())
+
+    @property
+    def trainable_params(self) -> int:
+        k = self.gen_cfg.k
+        return sum(lp.trainable_params(k) for lp in self.leaves.values())
+
+    @property
+    def compression_rate(self) -> float:
+        """Fraction of represented params actually stored (paper's
+        'percentage of model size' over the compressible set)."""
+        rep = self.represented_params
+        return self.trainable_params / rep if rep else 1.0
+
+    def expansion_flops(self) -> int:
+        per_chunk = self.gen_cfg.flops_per_chunk()
+        n_chunks = sum(lp.tp * lp.chunks for lp in self.leaves.values())
+        return n_chunks * per_chunk
+
+    def summary(self) -> dict[str, Any]:
+        return {
+            "generator": dataclasses.asdict(self.gen_cfg),
+            "compressed_leaves": len(self.leaves),
+            "represented_params": self.represented_params,
+            "trainable_params": self.trainable_params,
+            "compression_rate": self.compression_rate,
+            "expansion_gflops": self.expansion_flops() / 1e9,
+            "total_model_params": self.total_model_params,
+            "excluded_params": self.excluded_params,
+        }
+
+
+def plan_compression(param_specs: PyTree, partition_specs: PyTree | None,
+                     gen_cfg: GeneratorConfig,
+                     policy: CompressionPolicy = CompressionPolicy(),
+                     mesh_model_axis: str = "model",
+                     tp_degree: int = 1) -> CompressionPlan:
+    """Build a chunking plan for every policy-eligible leaf.
+
+    param_specs: pytree of arrays or ShapeDtypeStructs.
+    partition_specs: matching pytree of PartitionSpec (or None).
+    """
+    flat = flatten_with_paths(param_specs)
+    flat_pspec = (flatten_with_paths(partition_specs)
+                  if partition_specs is not None else {})
+    leaves: dict[str, LeafPlan] = {}
+    total = 0
+    excluded = 0
+    for path, leaf in flat.items():
+        shape = tuple(leaf.shape)
+        numel = int(np.prod(shape)) if shape else 1
+        total += numel
+        if not policy.wants(path, numel):
+            excluded += numel
+            continue
+        spec = flat_pspec.get(path)
+        leaves[path] = _make_leaf_plan(path, shape, leaf.dtype, spec,
+                                       mesh_model_axis, tp_degree, gen_cfg.d)
+    return CompressionPlan(gen_cfg=gen_cfg, leaves=leaves,
+                           total_model_params=total, excluded_params=excluded)
+
+
+# ---------------------------------------------------------------------------
+# MCNC trainable state.
+# ---------------------------------------------------------------------------
+
+def init_mcnc_state(plan: CompressionPlan, dtype=jnp.float32) -> PyTree:
+    """alpha = 0 (=> delta = 0 exactly: sine MLP without biases maps 0 -> 0),
+    beta = 1 (paper A.1 code)."""
+    k = plan.gen_cfg.k
+    flat = {}
+    for path, lp in plan.leaves.items():
+        flat[f"{path}/alpha"] = jnp.zeros((lp.tp, lp.chunks, k), dtype)
+        flat[f"{path}/beta"] = jnp.ones((lp.tp, lp.chunks), dtype)
+    return unflatten_paths(flat)
+
+
+def mcnc_state_partition_specs(plan: CompressionPlan,
+                               mesh_model_axis: str = "model") -> PyTree:
+    """PartitionSpecs matching init_mcnc_state output."""
+    from jax.sharding import PartitionSpec as P
+    flat = {}
+    for path, lp in plan.leaves.items():
+        ax = mesh_model_axis if lp.tp > 1 else None
+        flat[f"{path}/alpha"] = P(ax, None, None)
+        flat[f"{path}/beta"] = P(ax, None)
+    return unflatten_paths(flat)
+
+
+# ---------------------------------------------------------------------------
+# Expansion.
+# ---------------------------------------------------------------------------
+
+ExpandFn = Callable[[Array, Array], Array]  # (alpha (N,k), beta (N,)) -> (N,d)
+
+
+def expand_leaf(lp: LeafPlan, alpha: Array, beta: Array, d: int,
+                expand_fn: ExpandFn, out_dtype=None) -> Array:
+    """(tp, C, k), (tp, C) -> delta with lp.shape. All ops shard-local."""
+    tp, C = alpha.shape[0], alpha.shape[1]
+    flat_a = alpha.reshape(tp * C, alpha.shape[2])
+    flat_b = beta.reshape(tp * C)
+    out = expand_fn(flat_a, flat_b)                    # (tp*C, d)
+    out = out.reshape(tp, C * d)[:, :lp.shard_numel]   # drop tail padding
+    out = out.reshape(tp, lp.outer, lp.shard_len, lp.inner)
+    out = jnp.moveaxis(out, 0, 1)                      # (outer, tp, shard, in)
+    out = out.reshape(lp.outer, tp * lp.shard_len, lp.inner)
+    out = out.reshape(lp.shape)
+    if out_dtype is not None:
+        out = out.astype(out_dtype)
+    return out
+
+
+def default_expand_fn(gen_cfg: GeneratorConfig,
+                      gen_weights: Sequence[Array]) -> ExpandFn:
+    def fn(alpha: Array, beta: Array) -> Array:
+        return expand_chunks(gen_cfg, gen_weights, alpha, beta)
+    return fn
+
+
+def expand_tree(plan: CompressionPlan, gen_weights: Sequence[Array],
+                mcnc_state: PyTree, expand_fn: ExpandFn | None = None,
+                out_dtype=None) -> PyTree:
+    """mcnc_state -> pytree of deltas shaped like the compressed leaves."""
+    if expand_fn is None:
+        expand_fn = default_expand_fn(plan.gen_cfg, gen_weights)
+    flat_state = flatten_with_paths(mcnc_state)
+    flat_out = {}
+    d = plan.gen_cfg.d
+    for path, lp in plan.leaves.items():
+        alpha = flat_state[f"{path}/alpha"]
+        beta = flat_state[f"{path}/beta"]
+        flat_out[path] = expand_leaf(lp, alpha, beta, d, expand_fn, out_dtype)
+    return unflatten_paths(flat_out)
+
+
+def apply_deltas(base_params: PyTree, deltas: PyTree) -> PyTree:
+    """theta = theta0 + delta for compressed leaves; passthrough otherwise."""
+    flat_base = flatten_with_paths(base_params)
+    flat_delta = flatten_with_paths(deltas)
+    out = dict(flat_base)
+    for path, dlt in flat_delta.items():
+        base = flat_base[path]
+        out[path] = (base + dlt.astype(base.dtype)).astype(base.dtype)
+    return unflatten_paths(out)
+
+
+def expand_and_apply(plan: CompressionPlan, gen_weights: Sequence[Array],
+                     base_params: PyTree, mcnc_state: PyTree,
+                     expand_fn: ExpandFn | None = None) -> PyTree:
+    deltas = expand_tree(plan, gen_weights, mcnc_state, expand_fn)
+    return apply_deltas(base_params, deltas)

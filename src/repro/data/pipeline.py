@@ -1,0 +1,134 @@
+"""Deterministic synthetic data pipelines (no datasets ship in this
+container; see DESIGN.md S8 faithfulness ledger).
+
+Design points that matter at cluster scale and are preserved here:
+  * shard-aware: each data-parallel rank derives its slice of the global
+    batch from (seed, step, rank) — no coordination, identical on restart;
+  * stateless/resumable: batch(step) is a pure function, so checkpoint
+    restore at step k regenerates exactly the batch stream from k;
+  * structured targets: the LM stream is a noisy Markov chain (learnable
+    structure — loss decreases), the classifier stream is a fixed random
+    teacher (accuracy is meaningful).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LMStreamConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    order: int = 1            # Markov order of the synthetic language
+    noise: float = 0.1        # fraction of uniform-random tokens
+
+
+def _markov_table(cfg: LMStreamConfig) -> np.ndarray:
+    rng = np.random.default_rng(cfg.seed)
+    # Sparse-ish transition table: each token prefers a few successors.
+    table = rng.dirichlet(np.full(min(cfg.vocab, 64), 0.3),
+                          size=cfg.vocab)
+    succ = rng.integers(0, cfg.vocab, size=(cfg.vocab, table.shape[1]))
+    return succ, table
+
+
+class LMStream:
+    """Deterministic synthetic token stream with next-token structure."""
+
+    def __init__(self, cfg: LMStreamConfig):
+        self.cfg = cfg
+        self.succ, self.table = _markov_table(cfg)
+
+    def batch(self, step: int, rank: int = 0, world: int = 1) -> dict:
+        cfg = self.cfg
+        assert cfg.global_batch % world == 0
+        local_b = cfg.global_batch // world
+        rng = np.random.default_rng(
+            (cfg.seed * 1_000_003 + step) * 65_537 + rank)
+        toks = np.empty((local_b, cfg.seq_len + 1), np.int32)
+        toks[:, 0] = rng.integers(0, cfg.vocab, size=local_b)
+        for t in range(cfg.seq_len):
+            prev = toks[:, t]
+            choice = np.array([
+                self.succ[p, rng.choice(self.table.shape[1],
+                                        p=self.table[p])]
+                for p in prev])
+            noise = rng.random(local_b) < cfg.noise
+            choice[noise] = rng.integers(0, cfg.vocab, size=noise.sum())
+            toks[:, t + 1] = choice
+        return {"inputs": jnp.asarray(toks[:, :-1]),
+                "targets": jnp.asarray(toks[:, 1:])}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TeacherStreamConfig:
+    in_dim: int
+    classes: int
+    batch: int
+    seed: int = 0
+    teacher_hidden: int = 64
+    label_noise: float = 0.0
+
+
+class TeacherStream:
+    """Classification data labeled by a fixed random 2-layer teacher —
+    an MNIST stand-in with real learnable signal."""
+
+    def __init__(self, cfg: TeacherStreamConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.w1 = rng.standard_normal((cfg.in_dim, cfg.teacher_hidden)) \
+            / np.sqrt(cfg.in_dim)
+        self.w2 = rng.standard_normal((cfg.teacher_hidden, cfg.classes)) \
+            / np.sqrt(cfg.teacher_hidden)
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed * 7_919 + step)
+        x = rng.standard_normal((cfg.batch, cfg.in_dim)).astype(np.float32)
+        logits = np.maximum(x @ self.w1, 0.0) @ self.w2
+        y = logits.argmax(-1)
+        if cfg.label_noise:
+            flip = rng.random(cfg.batch) < cfg.label_noise
+            y[flip] = rng.integers(0, cfg.classes, size=flip.sum())
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y.astype(np.int32))}
+
+
+def host_prefetch(stream, start_step: int = 0, ahead: int = 2):
+    """Tiny prefetch queue (thread) over a .batch(step) source."""
+    import queue
+    import threading
+    q: "queue.Queue" = queue.Queue(maxsize=ahead)
+    stop = threading.Event()
+
+    def worker():
+        step = start_step
+        while not stop.is_set():
+            q.put((step, stream.batch(step)))
+            step += 1
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+
+    def gen():
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()
+    return gen()

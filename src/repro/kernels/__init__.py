@@ -1,0 +1,4 @@
+# Compute hot-spot the paper itself optimizes (Table 4: "Generation GFLOPs",
+# serving throughput): on-the-fly MCNC expansion. Pallas TPU kernel + pure-jnp
+# oracle. See EXAMPLE.md for the layout convention.
+from repro.kernels.ops import mcnc_expand, kernel_expand_fn

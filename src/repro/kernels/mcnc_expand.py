@@ -1,0 +1,172 @@
+"""Fused MCNC expansion Pallas TPU kernel.
+
+Computes out = sin(sin(alpha @ W1 * freq) @ W2) @ W3 * beta for N chunks in a
+single kernel: the paper's generator forward (its Table-4 hot spot) without
+HBM round-trips between the three GEMMs.
+
+TPU mapping (DESIGN.md S3.1): grid = (N/bn, d/bd). The hidden activation
+h2 = sin(sin(a W1 f) W2) is only (bn, h) — tiny relative to the (bn, d)
+output — so it is computed once per chunk-block (at j == 0) into a VMEM
+scratch buffer and reused across all d-tiles. W1/W2 stay fully resident in
+VMEM; W3 streams one (h, bd) tile per grid step. All matmul dims are padded
+to MXU-friendly multiples of 128 by the wrapper in ops.py.
+
+The backward produces only (d_alpha, d_beta): the generator is frozen
+(paper S3.3), so the dW GEMMs — the bulk of a normal MLP backward — vanish.
+It accumulates dh2 and d_beta across d-tiles in VMEM scratch and finishes the
+small chain to d_alpha on the last tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BN = 256   # chunk-block (sublane-major)
+DEFAULT_BD = 512   # output-tile width (lane-major)
+
+
+def _dot(a, b):
+    return jax.lax.dot_general(a, b, (((a.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _dot_t(a, b):
+    """a @ b.T with fp32 accumulation."""
+    return jax.lax.dot_general(a, b, (((a.ndim - 1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel.
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(freq, alpha_ref, beta_ref, w1_ref, w2_ref, w3_ref,
+                out_ref, h2_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _compute_hidden():
+        a = alpha_ref[...].astype(jnp.float32)
+        z1 = _dot(a, w1_ref[...].astype(jnp.float32)) * freq
+        h1 = jnp.sin(z1)
+        z2 = _dot(h1, w2_ref[...].astype(jnp.float32))
+        h2_ref[...] = jnp.sin(z2)
+
+    o = _dot(h2_ref[...], w3_ref[...].astype(jnp.float32))
+    out_ref[...] = (o * beta_ref[...].astype(jnp.float32)).astype(out_ref.dtype)
+
+
+def mcnc_expand_pallas(alpha: Array, beta: Array, w1: Array, w2: Array,
+                       w3: Array, freq: float, *, bn: int = DEFAULT_BN,
+                       bd: int = DEFAULT_BD, interpret: bool = False) -> Array:
+    """alpha: (N, k), beta: (N, 1), w1: (k, h), w2: (h, h), w3: (h, d).
+    Requires N % bn == 0 and d % bd == 0 (ops.py pads)."""
+    n, k = alpha.shape
+    h = w1.shape[1]
+    d = w3.shape[1]
+    assert n % bn == 0 and d % bd == 0, (n, bn, d, bd)
+    grid = (n // bn, d // bd)
+    kern = functools.partial(_fwd_kernel, float(freq))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i, j: (i, 0)),     # alpha
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),     # beta
+            pl.BlockSpec((k, h), lambda i, j: (0, 0)),      # w1 (resident)
+            pl.BlockSpec((h, h), lambda i, j: (0, 0)),      # w2 (resident)
+            pl.BlockSpec((h, bd), lambda i, j: (0, j)),     # w3 (streamed)
+        ],
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), alpha.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, h), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(alpha, beta, w1, w2, w3)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernel: (d_alpha, d_beta) only — generator frozen.
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel(freq, alpha_ref, beta_ref, w1_ref, w2_ref, w3_ref, g_ref,
+                dalpha_ref, dbeta_ref, z1_ref, z2_ref, h2_ref,
+                dh2_ref, dbeta_acc_ref):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _recompute_fwd():
+        a = alpha_ref[...].astype(jnp.float32)
+        z1 = _dot(a, w1_ref[...].astype(jnp.float32)) * freq
+        z1_ref[...] = z1
+        z2 = _dot(jnp.sin(z1), w2_ref[...].astype(jnp.float32))
+        z2_ref[...] = z2
+        h2_ref[...] = jnp.sin(z2)
+        dh2_ref[...] = jnp.zeros_like(dh2_ref)
+        dbeta_acc_ref[...] = jnp.zeros_like(dbeta_acc_ref)
+
+    w3 = w3_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    o = _dot(h2_ref[...], w3)                                   # (bn, bd)
+    dbeta_acc_ref[...] += jnp.sum(g * o, axis=1, keepdims=True)
+    do = g * beta_ref[...].astype(jnp.float32)
+    dh2_ref[...] += _dot_t(do, w3)                              # (bn, h)
+
+    @pl.when(j == nj - 1)
+    def _finish_chain():
+        dz2 = dh2_ref[...] * jnp.cos(z2_ref[...])
+        dh1 = _dot_t(dz2, w2_ref[...].astype(jnp.float32))
+        dz1 = dh1 * jnp.cos(z1_ref[...])
+        da = _dot_t(dz1, w1_ref[...].astype(jnp.float32)) * freq
+        dalpha_ref[...] = da.astype(dalpha_ref.dtype)
+        dbeta_ref[...] = dbeta_acc_ref[...].astype(dbeta_ref.dtype)
+
+
+def mcnc_expand_bwd_pallas(alpha: Array, beta: Array, w1: Array, w2: Array,
+                           w3: Array, g: Array, freq: float, *,
+                           bn: int = DEFAULT_BN, bd: int = DEFAULT_BD,
+                           interpret: bool = False) -> tuple[Array, Array]:
+    n, k = alpha.shape
+    h = w1.shape[1]
+    d = w3.shape[1]
+    assert n % bn == 0 and d % bd == 0, (n, bn, d, bd)
+    grid = (n // bn, d // bd)
+    kern = functools.partial(_bwd_kernel, float(freq))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i, j: (i, 0)),     # alpha
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),     # beta
+            pl.BlockSpec((k, h), lambda i, j: (0, 0)),      # w1
+            pl.BlockSpec((h, h), lambda i, j: (0, 0)),      # w2
+            pl.BlockSpec((h, bd), lambda i, j: (0, j)),     # w3
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),    # g (streamed)
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, k), lambda i, j: (i, 0)),     # d_alpha
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),     # d_beta
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), alpha.dtype),
+            jax.ShapeDtypeStruct((n, 1), beta.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn, h), jnp.float32),   # z1
+            pltpu.VMEM((bn, h), jnp.float32),   # z2
+            pltpu.VMEM((bn, h), jnp.float32),   # h2
+            pltpu.VMEM((bn, h), jnp.float32),   # dh2 accumulator
+            pltpu.VMEM((bn, 1), jnp.float32),   # d_beta accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(alpha, beta, w1, w2, w3, g)

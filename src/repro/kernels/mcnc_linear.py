@@ -1,0 +1,132 @@
+"""Fused MCNC linear kernel: y = x @ (W0 + Delta) where Delta is generated
+from (alpha, beta) INSIDE the kernel — the expanded weights never touch HBM.
+
+Beyond-paper optimization (EXPERIMENTS.md SBeyond-paper): the paper expands
+the residual into memory and then runs the layer. Since the chunk order is a
+free permutation (paper S3.3 uses flatten order arbitrarily), we choose a
+TILE-ALIGNED chunk layout: chunk c covers exactly the (bk x bn) weight tile
+at (row-block k, col-block j), with d = bk * bn. The matmul kernel then
+generates each tile's delta in VMEM right before consuming it:
+
+    grid = (NJ, NK)  [k inner: accumulate over the contraction dim]
+    per (j, k):  c = k * NJ + j
+                 delta = reshape(sin(sin(alpha_c W1 f) W2) W3 * beta_c, (bk, bn))
+                 acc  += x[:, kblk] @ (W0[kblk, jblk] + delta)
+
+HBM traffic saved vs expand-then-matmul: one full write + one full read of
+Delta (= 2 * m * n * dtype bytes) per layer per step.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BK = 64     # weight-tile rows (contraction block)
+DEFAULT_BN = 128    # weight-tile cols (output block)
+
+
+def tile_chunk_layout(m: int, n: int, bk: int = DEFAULT_BK,
+                      bn: int = DEFAULT_BN) -> tuple[int, int, int]:
+    """(n_chunks, NK, NJ) for a tile-aligned chunking of an (m, n) weight.
+    Requires m % bk == 0 and n % bn == 0. Chunk size d = bk * bn."""
+    assert m % bk == 0 and n % bn == 0, (m, n, bk, bn)
+    nk, nj = m // bk, n // bn
+    return nk * nj, nk, nj
+
+
+def delta_from_tiles(alpha: Array, beta: Array, w1: Array, w2: Array,
+                     w3: Array, freq: float, m: int, n: int,
+                     bk: int = DEFAULT_BK, bn: int = DEFAULT_BN) -> Array:
+    """Oracle helper: materialize the full Delta for the tile-aligned layout
+    (chunk c = k * NJ + j covers W[k*bk:(k+1)*bk, j*bn:(j+1)*bn])."""
+    from repro.kernels.ref import mcnc_expand_ref
+    _, nk, nj = tile_chunk_layout(m, n, bk, bn)
+    flat = mcnc_expand_ref(alpha, beta, w1, w2, w3, freq)   # (C, bk*bn)
+    tiles = flat.reshape(nk, nj, bk, bn)
+    return tiles.transpose(0, 2, 1, 3).reshape(m, n)
+
+
+def _kernel(freq, nj, x_ref, w0_ref, alpha_ref, beta_ref, w1_ref, w2_ref,
+            w3_ref, out_ref, acc_ref):
+    j = pl.program_id(0)
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # generate this tile's delta in VMEM (one chunk: c = k * nj + j,
+    # selected by the alpha/beta BlockSpec index maps)
+    a = alpha_ref[...].astype(jnp.float32)                   # (1, kdim)
+    z1 = jax.lax.dot_general(a, w1_ref[...].astype(jnp.float32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) * freq
+    h1 = jnp.sin(z1)
+    z2 = jax.lax.dot_general(h1, w2_ref[...].astype(jnp.float32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    h2 = jnp.sin(z2)
+    flat = jax.lax.dot_general(h2, w3_ref[...].astype(jnp.float32),
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    flat = flat * beta_ref[...].astype(jnp.float32)          # (1, bk*bn)
+    bk, bn = w0_ref.shape
+    delta = flat.reshape(bk, bn)
+
+    w = w0_ref[...].astype(jnp.float32) + delta
+    xk = x_ref[...].astype(jnp.float32)                      # (B, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        xk, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _emit():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def mcnc_linear(x: Array, w0: Array, alpha: Array, beta: Array, w1: Array,
+                w2: Array, w3: Array, freq: float, *, bk: int = DEFAULT_BK,
+                bn: int = DEFAULT_BN, interpret: bool = False) -> Array:
+    """x: (B, m); w0: (m, n); alpha: (C, kdim); beta: (C,) with the
+    tile-aligned layout (C = (m/bk)*(n/bn), generator d = bk*bn)."""
+    b, m = x.shape
+    n = w0.shape[1]
+    c, nk, nj = tile_chunk_layout(m, n, bk, bn)
+    assert alpha.shape[0] == c, (alpha.shape, c)
+    d = bk * bn
+    assert w3.shape[1] == d, (w3.shape, d)
+    kdim, h = w1.shape
+    beta2 = beta.reshape(c, 1)
+    kern = functools.partial(_kernel, float(freq), nj)
+    return pl.pallas_call(
+        kern,
+        grid=(nj, nk),
+        in_specs=[
+            pl.BlockSpec((b, bk), lambda j, k: (0, k)),        # x
+            pl.BlockSpec((bk, bn), lambda j, k: (k, j)),       # w0 tile
+            pl.BlockSpec((1, kdim), lambda j, k, _nj=nj: (k * _nj + j, 0)),
+            pl.BlockSpec((1, 1), lambda j, k, _nj=nj: (k * _nj + j, 0)),
+            pl.BlockSpec((kdim, h), lambda j, k: (0, 0)),      # w1
+            pl.BlockSpec((h, h), lambda j, k: (0, 0)),         # w2
+            pl.BlockSpec((h, d), lambda j, k: (0, 0)),         # w3 (resident)
+        ],
+        out_specs=pl.BlockSpec((b, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((b, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w0, alpha, beta2, w1, w2, w3)
+
+
+def mcnc_linear_hbm_savings(m: int, n: int, dtype_bytes: int = 2) -> int:
+    """Bytes of HBM traffic avoided per layer call vs expand-then-matmul."""
+    return 2 * m * n * dtype_bytes

@@ -1,0 +1,119 @@
+"""Jit'd public wrappers for the MCNC kernels, with padding, custom VJP, and
+an XLA (pure-jnp) fallback used by the dry-run (Pallas targets TPU; interpret
+mode is the CPU correctness path, see DESIGN.md S7)."""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.generator import GeneratorConfig
+from repro.kernels import ref
+from repro.kernels.mcnc_expand import (DEFAULT_BD, DEFAULT_BN,
+                                       mcnc_expand_bwd_pallas,
+                                       mcnc_expand_pallas)
+
+Array = jax.Array
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_blocks(n: int, d: int, h: int) -> tuple[int, int]:
+    """Block sizes targeting ~<= 12 MiB VMEM for fp32 compute: W2 (h^2) and a
+    W3 tile (h*bd) stay resident; shrink bn/bd for very wide hiddens."""
+    bn = min(DEFAULT_BN, _round_up(n, 8))
+    bd = min(DEFAULT_BD, _round_up(d, 128))
+    if h > 1024:
+        bn, bd = min(bn, 128), min(bd, 256)
+    return bn, bd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _mcnc_expand(alpha: Array, beta: Array, w1: Array, w2: Array, w3: Array,
+                 freq: float, use_pallas: bool, interpret: bool) -> Array:
+    return _expand_fwd_impl(alpha, beta, w1, w2, w3, freq, use_pallas,
+                            interpret)
+
+
+def _pad_operands(alpha, beta, w1, w2, w3):
+    """Pad N up to bn multiple and (h, d) up to 128 multiples (MXU lanes)."""
+    n, k = alpha.shape
+    h = w1.shape[1]
+    d = w3.shape[1]
+    bn, bd = _pick_blocks(n, d, h)
+    n_p = _round_up(n, bn)
+    h_p = _round_up(h, 128)
+    d_p = _round_up(d, bd)
+    alpha_p = jnp.pad(alpha, ((0, n_p - n), (0, 0)))
+    beta_p = jnp.pad(beta.reshape(n, 1), ((0, n_p - n), (0, 0)))
+    w1_p = jnp.pad(w1, ((0, 0), (0, h_p - h)))
+    w2_p = jnp.pad(w2, ((0, h_p - h), (0, h_p - h)))
+    w3_p = jnp.pad(w3, ((0, h_p - h), (0, d_p - d)))
+    return alpha_p, beta_p, w1_p, w2_p, w3_p, (n, d, bn, bd)
+
+
+def _expand_fwd_impl(alpha, beta, w1, w2, w3, freq, use_pallas, interpret):
+    if not use_pallas:
+        return ref.mcnc_expand_ref(alpha, beta, w1, w2, w3, freq)
+    alpha_p, beta_p, w1_p, w2_p, w3_p, (n, d, bn, bd) = _pad_operands(
+        alpha, beta, w1, w2, w3)
+    out = mcnc_expand_pallas(alpha_p, beta_p, w1_p, w2_p, w3_p, freq,
+                             bn=bn, bd=bd, interpret=interpret)
+    return out[:n, :d]
+
+
+def _expand_fwd(alpha, beta, w1, w2, w3, freq, use_pallas, interpret):
+    out = _expand_fwd_impl(alpha, beta, w1, w2, w3, freq, use_pallas,
+                           interpret)
+    return out, (alpha, beta, w1, w2, w3)
+
+
+def _expand_bwd(freq, use_pallas, interpret, res, g):
+    alpha, beta, w1, w2, w3 = res
+    if not use_pallas:
+        d_alpha, d_beta = ref.mcnc_expand_bwd_ref(alpha, beta, w1, w2, w3,
+                                                  freq, g)
+    else:
+        alpha_p, beta_p, w1_p, w2_p, w3_p, (n, d, bn, bd) = _pad_operands(
+            alpha, beta, w1, w2, w3)
+        n_p, d_p = alpha_p.shape[0], w3_p.shape[1]
+        g_p = jnp.pad(g, ((0, n_p - n), (0, d_p - d)))
+        d_alpha_p, d_beta_p = mcnc_expand_bwd_pallas(
+            alpha_p, beta_p, w1_p, w2_p, w3_p, g_p, freq,
+            bn=bn, bd=bd, interpret=interpret)
+        d_alpha = d_alpha_p[:n]
+        d_beta = d_beta_p[:n, 0]
+    # Generator weights are frozen: zero cotangents keep custom_vjp happy
+    # without materializing dW GEMMs anywhere.
+    return (d_alpha, d_beta, jnp.zeros_like(w1), jnp.zeros_like(w2),
+            jnp.zeros_like(w3))
+
+
+_mcnc_expand.defvjp(_expand_fwd, _expand_bwd)
+
+
+def mcnc_expand(alpha: Array, beta: Array, w1: Array, w2: Array, w3: Array,
+                freq: float, *, use_pallas: bool = True,
+                interpret: bool = False) -> Array:
+    """Fused MCNC expansion: (N, k), (N,) -> (N, d). Differentiable in
+    (alpha, beta) only; generator weights receive zero gradients."""
+    return _mcnc_expand(alpha, beta, w1, w2, w3, freq, use_pallas, interpret)
+
+
+def kernel_expand_fn(cfg: GeneratorConfig, weights: Sequence[Array], *,
+                     use_pallas: bool = True, interpret: bool = False):
+    """ExpandFn adapter for core.reparam.expand_tree. Falls back to the
+    generic jnp generator for non-(depth-3, sine) configs."""
+    if cfg.depth != 3 or cfg.activation != "sine" or cfg.normalize:
+        from repro.core.generator import expand_chunks
+        return lambda a, b: expand_chunks(cfg, weights, a, b)
+    w1, w2, w3 = weights
+
+    def fn(alpha: Array, beta: Array) -> Array:
+        return mcnc_expand(alpha, beta, w1, w2, w3, cfg.freq,
+                           use_pallas=use_pallas, interpret=interpret)
+    return fn

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the MCNC kernels. These define correctness; the
+Pallas kernels must match them (tests/test_kernels.py sweeps shapes/dtypes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def mcnc_expand_ref(alpha: Array, beta: Array, w1: Array, w2: Array,
+                    w3: Array, freq: float) -> Array:
+    """out = sin(sin(alpha @ w1 * freq) @ w2) @ w3 * beta[:, None].
+
+    alpha: (N, k); beta: (N,); w1: (k, h); w2: (h, h); w3: (h, d).
+    The paper's 3-layer sine generator (Table 10), depth fixed at 3 for the
+    kernel; other depths use the generic jnp path in core/generator.py.
+    Compute in fp32 regardless of input dtype; cast back to alpha dtype.
+    """
+    f32 = jnp.float32
+    h1 = jnp.sin(alpha.astype(f32) @ w1.astype(f32) * jnp.float32(freq))
+    h2 = jnp.sin(h1 @ w2.astype(f32))
+    out = h2 @ w3.astype(f32)
+    out = out * beta.astype(f32)[:, None]
+    return out.astype(alpha.dtype)
+
+
+def mcnc_expand_bwd_ref(alpha: Array, beta: Array, w1: Array, w2: Array,
+                        w3: Array, freq: float, g: Array
+                        ) -> tuple[Array, Array]:
+    """Analytic (d_alpha, d_beta) for the frozen-generator expansion.
+
+    Generator weights are frozen (paper S3.3) so no dW terms exist: the
+    backward is two small chain GEMMs + the dbeta reduction.
+    """
+    f32 = jnp.float32
+    a = alpha.astype(f32)
+    z1 = a @ w1.astype(f32) * jnp.float32(freq)    # (N, h)
+    h1 = jnp.sin(z1)
+    z2 = h1 @ w2.astype(f32)                        # (N, h)
+    h2 = jnp.sin(z2)
+    o = h2 @ w3.astype(f32)                         # (N, d) pre-beta
+    gf = g.astype(f32)
+    d_beta = jnp.sum(gf * o, axis=-1)
+    do = gf * beta.astype(f32)[:, None]
+    dh2 = do @ w3.astype(f32).T
+    dz2 = dh2 * jnp.cos(z2)
+    dh1 = dz2 @ w2.astype(f32).T
+    dz1 = dh1 * jnp.cos(z1)
+    d_alpha = (dz1 @ w1.astype(f32).T) * jnp.float32(freq)
+    return d_alpha.astype(alpha.dtype), d_beta.astype(beta.dtype)
+
+
+def mcnc_linear_ref(x: Array, w0: Array, alpha: Array, beta: Array,
+                    w1: Array, w2: Array, w3: Array, freq: float) -> Array:
+    """Fused consumer: y = x @ (w0 + reshape(expand(alpha, beta))[:m, :n]).
+
+    x: (B, m); w0: (m, n); alpha: (N, k); beta: (N,) where N * d >= m * n.
+    Oracle materializes the delta; the kernel streams delta tiles via VMEM.
+    """
+    m, n = w0.shape
+    delta = mcnc_expand_ref(alpha, beta, w1, w2, w3, freq)
+    delta = delta.reshape(-1)[: m * n].reshape(m, n)
+    w = w0.astype(jnp.float32) + delta.astype(jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

@@ -1,0 +1,167 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+"""Attribution tool: compile one cell and print the largest instruction
+buffers and the largest collectives WITH their jax op_name metadata —
+the 'profile' of the dry-run world (assignment S Pallas-specific hints:
+the lowered IR is the profile)."""
+
+import argparse
+import re
+import sys
+from collections import defaultdict
+
+
+def top_buffers(hlo_text: str, n: int = 25):
+    from repro.launch.hlo_cost import _SHAPE_RE, _DTYPE_BYTES
+    out = []
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+                     r"((?:\([^)]*\))|[\w\[\],{}]+)\s+([\w\-]+)\(", line)
+        if not m or m.group(3) in ("parameter",):
+            continue
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(m.group(2)):
+            k = 1
+            for d in sm.group(2).split(","):
+                if d:
+                    k *= int(d)
+            nbytes += k * _DTYPE_BYTES[sm.group(1)]
+        op_name = ""
+        om = re.search(r'op_name="([^"]*)"', line)
+        if om:
+            op_name = om.group(1)
+        out.append((nbytes, m.group(3), m.group(2)[:60], op_name[:140]))
+    out.sort(key=lambda t: -t[0])
+    return out[:n]
+
+
+def top_collectives(hlo_text: str, n: int = 25):
+    from repro.launch.hlo_cost import HloCostModel, _COLLECTIVES
+    model = HloCostModel(hlo_text)
+    # trip-count multipliers per computation
+    mult = defaultdict(lambda: 1.0)
+    mult[model.entry] = 1.0
+    changed = True
+    # propagate: find while instructions and scale their body/cond
+    for _ in range(10):
+        for cname, instrs in model.computations.items():
+            for ins in instrs:
+                if ins["op"] == "while":
+                    tm = re.search(r'known_trip_count..?:\{"n":"(\d+)"',
+                                   ins["line"])
+                    trip = int(tm.group(1)) if tm else 1
+                    mb = re.search(r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)",
+                                   ins["line"])
+                    if mb:
+                        mult[mb.group(2)] = mult[cname] * trip
+                        mult[mb.group(1)] = mult[cname] * trip
+                elif ins["op"] == "fusion" or ins["op"] == "call":
+                    cm = re.search(r"calls=%?([\w.\-]+)", ins["line"])
+                    if cm:
+                        mult[cm.group(1)] = mult[cname]
+    rows = []
+    for cname, instrs in model.computations.items():
+        for ins in instrs:
+            base = ins["op"].replace("-start", "").replace("-done", "")
+            if base not in _COLLECTIVES or ins["op"].endswith("-done"):
+                continue
+            from repro.launch.hlo_cost import _shape_info
+            _, nbytes = _shape_info(ins["shape"])
+            om = re.search(r'op_name="([^"]*)"', ins["line"])
+            rows.append((nbytes * mult[cname], base, nbytes, mult[cname],
+                         (om.group(1) if om else "")[:140]))
+    rows.sort(key=lambda t: -t[0])
+    return rows[:n]
+
+
+def top_traffic(hlo_text: str, n: int = 20):
+    """Largest loop-scaled HBM-traffic contributors (op-level)."""
+    from repro.launch.hlo_cost import HloCostModel, Cost
+    model = HloCostModel(hlo_text)
+    # per-computation multipliers via the same propagation as cost_of
+    mult = defaultdict(lambda: 1.0)
+    mult[model.entry] = 1.0
+    for _ in range(10):
+        for cname, instrs in model.computations.items():
+            for ins in instrs:
+                if ins["op"] == "while":
+                    tm = re.search(r'known_trip_count..?:\{"n":"(\d+)"',
+                                   ins["line"])
+                    trip = int(tm.group(1)) if tm else 1
+                    mb = re.search(
+                        r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)",
+                        ins["line"])
+                    if mb:
+                        mult[mb.group(2)] = mult[cname] * trip
+                        mult[mb.group(1)] = mult[cname] * trip
+    rows = []
+    for cname, instrs in model.computations.items():
+        if cname not in mult or cname.startswith(("%fused", "fused",
+                                                  "wrapped")):
+            continue
+        for ins in instrs:
+            single = HloCostModel.__new__(HloCostModel)
+            single.computations = {"_": [ins]}
+            single.shapes = model.shapes
+            single.entry = "_"
+            single._memo = {}
+            c = single.cost_of("_")
+            if c.bytes <= 0:
+                continue
+            om = re.search(r'op_name="([^"]*)"', ins["line"])
+            rows.append((c.bytes * mult[cname], ins["op"], c.bytes,
+                         mult[cname], (om.group(1) if om else "")[-110:]))
+    rows.sort(key=lambda t: -t[0])
+    return rows[:n]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mode", default="mcnc")
+    ap.add_argument("--seq-shard", type=int, default=-1)
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    # reuse run_cell's jit plumbing but keep the compiled object
+    import repro.launch.dryrun as dr
+    import jax
+
+    # monkeypatch: capture compiled text
+    captured = {}
+    orig_analyze = dr.collective_bytes
+
+    def capture(text):
+        captured["hlo"] = text
+        return orig_analyze(text)
+
+    dr.collective_bytes = capture
+    rec = dr.run_cell(args.arch, args.shape, smoke=args.smoke,
+                      mode=args.mode,
+                      seq_shard=None if args.seq_shard < 0
+                      else bool(args.seq_shard),
+                      microbatches=args.microbatches)
+    print("peak/dev %.2f GB  temp %.2f GB" % (
+        rec["memory"]["peak_per_device_bytes"] / 1e9,
+        rec["memory"]["temp_bytes"] / 1e9))
+    print("== top buffers ==")
+    for nbytes, op, shape, name in top_buffers(captured["hlo"]):
+        print(f"{nbytes/1e6:10.1f} MB  {op:24s} {shape:40s} {name}")
+    print("== top collectives (loop-scaled) ==")
+    for tot, kind, nbytes, mult, name in top_collectives(captured["hlo"]):
+        print(f"{tot/1e9:10.2f} GB  {kind:20s} x{mult:<7.0f} "
+              f"{nbytes/1e6:8.1f} MB  {name}")
+    print("== top HBM traffic (loop-scaled) ==")
+    for tot, op, nbytes, mult, name in top_traffic(captured["hlo"]):
+        print(f"{tot/1e9:10.2f} GB  {op:22s} x{mult:<7.0f} "
+              f"{nbytes/1e6:8.1f} MB  {name}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

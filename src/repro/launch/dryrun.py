@@ -1,0 +1,325 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init (assignment MULTI-POD DRY-RUN step 0). Tests may shrink
+# the placeholder device count via REPRO_DRYRUN_DEVICES (still pre-import).
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp                       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
+
+from repro.configs.registry import SHAPES, get_arch          # noqa: E402
+from repro.launch.mesh import make_mesh, make_production_mesh  # noqa: E402
+from repro.optim import AdamConfig, adam_init                # noqa: E402
+from repro.sharding.rules import activation_rules, use_rules  # noqa: E402
+from repro.sharding.specs import cache_pspecs, model_param_pspecs  # noqa: E402
+from repro.train.steps import (build_bundle, cache_specs, input_specs,  # noqa: E402
+                               make_decode_step, make_prefill_step,
+                               make_train_step)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32"
+                       r"|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+_OP_RE = re.compile(
+    r"%?[\w.\-]+\s*=\s*(?P<result>\([^)]*\)|[\w\[\],{}]+)\s+"
+    r"(?P<kind>all-gather-start|all-gather-done|all-gather|"
+    r"all-reduce-start|all-reduce-done|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute-start|collective-permute-done|"
+    r"collective-permute)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind operand bytes from compiled (per-device SPMD) HLO.
+
+    Post-optimization HLO prints operands without types, so operand size is
+    derived from the result shape: all-reduce/all-to-all/collective-permute
+    move result-sized operands; all-gather's operand is result/participants;
+    reduce-scatter's operand is result*participants. '-done' ops are skipped
+    (their '-start' twin was counted)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        kind_raw = m.group("kind")
+        if kind_raw.endswith("-done"):
+            continue
+        kind = kind_raw.replace("-start", "")
+        result_bytes = sum(_shape_bytes(sm)
+                           for sm in _SHAPE_RE.finditer(m.group("result")))
+        gm = _GROUPS_RE.search(s)
+        participants = int(gm.group(2)) if gm else 1
+        if kind == "all-gather":
+            nbytes = result_bytes // max(participants, 1)
+        elif kind == "reduce-scatter":
+            nbytes = result_bytes * participants
+        else:
+            nbytes = result_bytes
+        out[kind] += nbytes
+        counts[kind] += 1
+    return {"per_kind_bytes": out, "per_kind_count": counts,
+            "total_bytes": sum(out.values())}
+
+
+def _sanitize(mesh, spec: P, shape) -> P:
+    """Drop mesh axes from dims they don't divide: jit in/out shardings
+    require exact divisibility (unlike internal GSPMD propagation, which
+    pads). Affects e.g. vocab 73448/32001/256206 and batch=1 decode."""
+    axes = []
+    for i, names in enumerate(spec):
+        if names is None or i >= len(shape.shape):
+            axes.append(None)
+            continue
+        names_t = names if isinstance(names, tuple) else (names,)
+        size = 1
+        for n in names_t:
+            size *= mesh.shape[n]
+        axes.append(names if shape.shape[i] % size == 0 else None)
+    return P(*axes)
+
+
+def _named(mesh, spec_tree, abstract_tree=None):
+    if abstract_tree is None:
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda s: isinstance(s, P))
+    return jax.tree.map(
+        lambda s, a: NamedSharding(mesh, _sanitize(mesh, s, a)),
+        spec_tree, abstract_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def _batch_pspecs(mesh, batch_specs):
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+
+    def spec(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % dp_size == 0:
+            return P(dp_axes)
+        return P()
+    return jax.tree.map(spec, batch_specs)
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             mode: str = "mcnc", smoke: bool = False,
+             mesh_override=None, seq_shard: bool | None = None,
+             attn_chunk: int | None = None,
+             microbatches: int | None = None,
+             variant: str = "baseline") -> dict:
+    """Lower + compile one (arch x shape x mesh) cell; return the record."""
+    t0 = time.time()
+    arch = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and arch.quadratic_attention and not smoke:
+        return {"arch": arch_id, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped",
+                "reason": "quadratic attention (DESIGN.md S5)"}
+
+    if mesh_override is not None:
+        mesh = mesh_override
+    else:
+        try:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+        except RuntimeError:
+            if not smoke:
+                raise
+            # smoke cells may run under a reduced placeholder device count
+            # (tests): build the largest same-topology mesh that fits.
+            n = len(jax.devices())
+            if multi_pod:
+                mesh = make_mesh((2, 2, n // 4), ("pod", "data", "model"))
+            else:
+                mesh = make_mesh((2, n // 2), ("data", "model"))
+    tp = mesh.shape.get("model", 1)
+    n_chips = 1
+    for s in mesh.devices.shape:
+        n_chips *= s
+
+    import dataclasses as _dc
+    if attn_chunk is not None:
+        arch = _dc.replace(arch,
+                           config=_dc.replace(arch.config,
+                                              attn_chunk=attn_chunk))
+    elif shape.kind == "train" and getattr(arch.config, "attn_chunk",
+                                           512) > 512:
+        # Large chunks amortize pair-scan slice reads on (low-batch) 32k
+        # prefill but blow up per-pair score tiles on train shapes, where
+        # the per-device batch is ~8x larger (EXPERIMENTS.md SPerf hc3):
+        # cap train cells at 512.
+        arch = _dc.replace(arch,
+                           config=_dc.replace(arch.config, attn_chunk=512))
+
+    bundle = build_bundle(arch, mode, smoke=smoke, tp_degree=tp,
+                          use_pallas=False)
+    opt_cfg = AdamConfig(lr=1e-2)
+
+    rules = activation_rules(mesh)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    use_seq_shard = arch.seq_shard if seq_shard is None else seq_shard
+    # Sequence-shard the residual stream over 'model' for train (saved
+    # boundaries /16) AND prefill (x-shaped transients /16); decode is S=1.
+    if shape.kind in ("train", "prefill") and use_seq_shard:
+        rules["act_btd"] = P(dp_axes, "model", None)
+
+    trainable_sh = _named(mesh, bundle.trainable_pspecs,
+                          bundle.trainable_specs)
+    base_sh = _named(mesh, bundle.base_pspecs, bundle.base_specs)
+    gen_sh = [NamedSharding(mesh, P())] * len(bundle.gen_weight_specs())
+    batch = input_specs(arch, shape, smoke=smoke)
+    batch_sh = _named(mesh, _batch_pspecs(mesh, batch))
+    opt_specs = jax.eval_shape(adam_init, bundle.trainable_specs)
+    from repro.optim.optimizers import OptState
+    opt_sh = OptState(mu=trainable_sh, nu=trainable_sh,
+                      step=NamedSharding(mesh, P()))
+    mb = microbatches if microbatches is not None else arch.train_microbatches
+
+    with use_rules(mesh, rules):
+        if shape.kind == "train":
+            step = make_train_step(bundle, opt_cfg, num_microbatches=mb)
+            jitted = jax.jit(
+                step,
+                donate_argnums=(0, 1),
+                in_shardings=(trainable_sh, opt_sh, base_sh, gen_sh,
+                              batch_sh, NamedSharding(mesh, P())),
+                out_shardings=(trainable_sh, opt_sh,
+                               NamedSharding(mesh, P())))
+            args = (bundle.trainable_specs, opt_specs, bundle.base_specs,
+                    bundle.gen_weight_specs(), batch,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+        elif shape.kind == "prefill":
+            step = make_prefill_step(bundle, cache_cap=shape.seq_len)
+            csp = cache_specs(arch, shape, smoke=smoke)
+            cache_sh = _named(mesh, cache_pspecs(csp, dp=dp_axes), csp)
+            logits_sh = NamedSharding(mesh, P())
+            jitted = jax.jit(
+                step,
+                in_shardings=(trainable_sh, base_sh, gen_sh, batch_sh),
+                out_shardings=(logits_sh, cache_sh))
+            args = (bundle.trainable_specs, bundle.base_specs,
+                    bundle.gen_weight_specs(), batch)
+        else:  # decode
+            step = make_decode_step(bundle)
+            csp = cache_specs(arch, shape, smoke=smoke)
+            cache_sh = _named(mesh, cache_pspecs(csp, dp=dp_axes), csp)
+            tok_specs = batch["tokens"]
+            tok_sh = _named(mesh, _batch_pspecs(mesh, tok_specs))
+            logits_sh = NamedSharding(mesh, P())
+            jitted = jax.jit(
+                step,
+                donate_argnums=(3,),    # cache updated in place
+                in_shardings=(trainable_sh, base_sh, gen_sh, cache_sh,
+                              tok_sh, NamedSharding(mesh, P())),
+                out_shardings=(logits_sh, cache_sh))
+            args = (bundle.trainable_specs, bundle.base_specs,
+                    bundle.gen_weight_specs(), csp, tok_specs,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        # XLA:CPU's while-loop LICM hoists bf16->f32 converts of entire
+        # residual stacks out of the transpose loop, inflating temp memory
+        # ~3x with copies a TPU compile would never materialize. Disable it
+        # so memory_analysis reflects the real working set.
+        compiled = lowered.compile(compiler_options={
+            "xla_disable_hlo_passes": "while-loop-invariant-code-motion"})
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    from repro.launch.hlo_cost import analyze as hlo_analyze
+    loop_cost = hlo_analyze(hlo_text)
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mode": mode,
+        "variant": variant, "multi_pod": multi_pod, "smoke": smoke,
+        "status": "ok", "n_chips": n_chips,
+        "mesh": {k: int(v) for k, v in mesh.shape.items()},
+        "microbatches": mb if shape.kind == "train" else None,
+        "seq_shard": bool(use_seq_shard) if shape.kind == "train" else None,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_bytes": (mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      - mem.alias_size_in_bytes),
+        },
+        "cost": {"flops": cost.get("flops", -1.0),
+                 "bytes_accessed": cost.get("bytes accessed", -1.0)},
+        # loop-aware per-device cost (scans scaled by trip count) — the
+        # numbers SRoofline uses; raw cost_analysis kept for reference.
+        "loop_cost": loop_cost,
+        "collectives": coll,
+        "trainable_params": (bundle.plan.trainable_params
+                             if bundle.plan else None),
+        "compression": (bundle.plan.summary() if bundle.plan else None),
+    }
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run for one cell")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="mcnc",
+                    choices=["mcnc", "lora", "nola", "pranc", "full"])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seq-shard", type=int, default=-1,
+                    help="-1=arch default, 0/1 override")
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args(argv)
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   mode=args.mode, smoke=args.smoke,
+                   seq_shard=None if args.seq_shard < 0 else bool(args.seq_shard),
+                   attn_chunk=args.attn_chunk,
+                   microbatches=args.microbatches, variant=args.variant)
+    print(json.dumps(rec))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

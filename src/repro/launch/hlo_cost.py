@@ -1,0 +1,366 @@
+"""Loop-aware cost analysis over compiled (post-optimization, per-device
+SPMD) HLO text.
+
+Why this exists: XLA's `compiled.cost_analysis()` counts a while-loop body
+ONCE, but every layer stack / microbatch / attention-pair loop in this
+framework is a lax.scan — so its FLOPs are undercounted by orders of
+magnitude (layer count x microbatches x block pairs). Scan loops carry
+`backend_config={"known_trip_count":{"n":...}}` in compiled HLO, so this
+module walks the computation graph and scales loop bodies by their trip
+counts. The same walk accumulates:
+
+  flops        dot_generals exactly (2*M*N*K from the printed shapes +
+               contracting dims); elementwise/reduce ops as one flop per
+               output element (transcendentals folded in);
+  hbm bytes    operands + results of top-level instructions; fusions count
+               only their boundary (internal traffic stays in registers /
+               VMEM — the right model for an HBM roofline term);
+  collectives  operand bytes per kind (all-gather / all-reduce /
+               reduce-scatter / all-to-all / collective-permute), loop-scaled.
+
+Everything is bytes/flops PER DEVICE (SPMD modules are per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "token": 0, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32"
+                       r"|s16|u16|s8|u8|s4|u4|pred|c64|c128|token)"
+                       r"\[([0-9,]*)\]")
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<shape>\([^)]*\)|[\w\[\],{}\s]*?)\s*"
+    r"(?P<op>[\w\-]+)\((?P<rest>.*)$")
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*"
+                      r"\((?P<params>.*)\)\s*->\s*.*\{\s*$")
+
+_TRIP_RE = re.compile(r'known_trip_count..?:\{"n":"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"true_computation=%?([\w.\-]+).*?"
+                    r"false_computation=%?([\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_B_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_ARG_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "opt-barrier", "domain", "add-dependency"}
+
+_NO_FLOP_OPS = {"copy", "reshape", "broadcast", "iota", "slice",
+                "dynamic-slice", "dynamic-update-slice", "concatenate",
+                "pad", "transpose", "gather", "reverse", "rev",
+                "convert", "real", "imag", "copy-start", "copy-done",
+                "send", "recv", "send-done", "recv-done", "infeed",
+                "outfeed", "rng", "rng-bit-generator", "sort"}
+
+
+def _shape_info(shape_str: str) -> tuple[int, int]:
+    """-> (elements, bytes) summed over all shapes in the string."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_count: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def add(self, other: "Cost", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * scale
+            self.coll_count[k] += other.coll_count[k] * scale
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[dict]] = {}
+        self.entry: str | None = None
+        self.shapes: dict[str, str] = {}        # instr name -> shape str
+        self._parse(hlo_text)
+        self._memo: dict[str, Cost] = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str):
+        cur: list[dict] | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_RE.match(line)
+                if m and "->" in line:
+                    name = m.group("name")
+                    self.computations[name] = []
+                    cur = self.computations[name]
+                    if line.startswith("ENTRY"):
+                        self.entry = name
+                    # parameters declared in the header
+                    for pm in re.finditer(r"([\w.\-]+):\s*"
+                                          r"((?:\([^)]*\))|[\w\[\],{}]+)",
+                                          m.group("params")):
+                        self.shapes[pm.group(1)] = pm.group(2)
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            name = im.group("name")
+            shape = im.group("shape").strip()
+            self.shapes[name] = shape
+            cur.append({"name": name, "shape": shape,
+                        "op": im.group("op"), "rest": im.group("rest"),
+                        "line": line})
+
+    # ------------------------------------------------------------------
+    def _args_of(self, rest: str) -> list[str]:
+        depth = 1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return [a.group(1)
+                            for a in _ARG_RE.finditer(rest[:i])]
+        return [a.group(1) for a in _ARG_RE.finditer(rest)]
+
+    def _operand_bytes(self, rest: str) -> int:
+        total = 0
+        for arg in self._args_of(rest):
+            shape = self.shapes.get(arg)
+            if shape:
+                total += _shape_info(shape)[1]
+        return total
+
+    def _fusion_boundary_bytes(self, comp_name: str, rest: str,
+                               res_bytes: int) -> int:
+        """View-aware HBM traffic of a fusion: a parameter whose only use
+        inside is a (dynamic-)slice is READ at slice size, not full size;
+        a parameter that is the in-place target of a root dynamic-update-
+        slice costs ~the update region (the full buffer is aliased in loop
+        carries). Without this, the attention pair-scan's slice/DUS fusions
+        are billed the whole accumulator per step — 100+ TB of phantom
+        traffic on 32k prefill cells. Converts are billed at result size
+        (bf16<->f32 normalization around dots is an XLA:CPU artifact; on
+        TPU the MXU consumes bf16 directly)."""
+        instrs = self.computations.get(comp_name, [])
+        # map param name -> billed bytes
+        param_names = [ins["name"] for ins in instrs
+                       if ins["op"] == "parameter"]
+        consumers: dict[str, list[dict]] = {p: [] for p in param_names}
+        root = instrs[-1] if instrs else None
+        for ins in instrs:
+            if ins["op"] == "parameter":
+                continue
+            for arg in self._args_of(ins["rest"]):
+                if arg in consumers:
+                    consumers[arg].append(ins)
+        billed = 0
+        for pname in param_names:
+            pshape = self.shapes.get(pname, "")
+            full = _shape_info(pshape)[1]
+            uses = consumers[pname]
+            if uses and all(u["op"] in ("dynamic-slice", "slice")
+                            for u in uses):
+                billed += sum(_shape_info(u["shape"])[1] for u in uses)
+            elif (uses and len(uses) == 1
+                  and uses[0]["op"] == "dynamic-update-slice"
+                  and self._args_of(uses[0]["rest"])[:1] == [pname]):
+                billed += 2 * self._update_bytes(uses[0]["rest"])
+            else:
+                billed += full
+        if root is not None and root["op"] == "dynamic-update-slice":
+            res = 2 * self._update_bytes(root["rest"])
+        else:
+            res = res_bytes
+        return billed + res
+
+    def _update_bytes(self, rest: str) -> int:
+        """Bytes of the update operand (2nd arg) of a dynamic-update-slice."""
+        args = self._args_of(rest)
+        if len(args) >= 2:
+            shape = self.shapes.get(args[1])
+            if shape:
+                return _shape_info(shape)[1]
+        return 0
+
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        self._memo[comp_name] = Cost()       # cycle guard
+        total = Cost()
+        for ins in self.computations.get(comp_name, []):
+            op = ins["op"]
+            if op in _SKIP_OPS:
+                continue
+            rest = ins["rest"]
+            line = ins["line"]
+            res_elems, res_bytes = _shape_info(ins["shape"])
+            if op == "while":
+                mb = _COND_BODY_RE.search(line)
+                trip = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                if mb:
+                    total.add(self.cost_of(mb.group(2)), trip)
+                    total.add(self.cost_of(mb.group(1)), trip)
+                total.bytes += res_bytes            # loop state touch
+                continue
+            if op == "conditional":
+                names = []
+                bm = _BRANCHES_RE.search(line)
+                if bm:
+                    names = _ARG_RE.findall(bm.group(1))
+                else:
+                    tf = _TF_RE.search(line)
+                    if tf:
+                        names = [tf.group(1), tf.group(2)]
+                branch_costs = [self.cost_of(n) for n in names]
+                if branch_costs:
+                    worst = max(branch_costs, key=lambda c: c.flops)
+                    total.add(worst)
+                continue
+            if op == "fusion":
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    inner = self.cost_of(cm.group(1))
+                    total.flops += inner.flops   # fused flops are real
+                    total.bytes += self._fusion_boundary_bytes(
+                        cm.group(1), rest, res_bytes)
+                else:
+                    total.bytes += self._operand_bytes(rest) + res_bytes
+                continue
+            if op == "call":
+                cm = _CALLS_RE.search(line) or re.search(
+                    r"to_apply=%?([\w.\-]+)", line)
+                if cm:
+                    total.add(self.cost_of(cm.group(1)))
+                total.bytes += self._operand_bytes(rest) + res_bytes
+                continue
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                gm = _GROUPS_RE.search(line)
+                participants = int(gm.group(2)) if gm else 1
+                if base == "all-gather":
+                    moved = res_bytes // max(participants, 1)
+                elif base == "reduce-scatter":
+                    moved = res_bytes * participants
+                else:
+                    moved = res_bytes
+                total.coll[base] += moved
+                total.coll_count[base] += 1
+                total.bytes += self._operand_bytes(rest) + res_bytes
+                continue
+            if op == "dot":
+                args = self._args_of(rest)
+                lhs_shape = self.shapes.get(args[0], "") if args else ""
+                lhs_dims = _shape_dims(lhs_shape)
+                cm = _LHS_C_RE.search(line)
+                cdims = ([int(x) for x in cm.group(1).split(",") if x]
+                         if cm else [])
+                k = 1
+                for c in cdims:
+                    if c < len(lhs_dims):
+                        k *= lhs_dims[c]
+                total.flops += 2.0 * res_elems * k
+                total.bytes += self._operand_bytes(rest) + res_bytes
+                continue
+            if op == "convolution":
+                args = self._args_of(rest)
+                rhs_shape = self.shapes.get(args[1], "") if len(args) > 1 \
+                    else ""
+                rhs_dims = _shape_dims(rhs_shape)
+                k = 1
+                for d in rhs_dims[:-1]:
+                    k *= d
+                total.flops += 2.0 * res_elems * max(k, 1)
+                total.bytes += self._operand_bytes(rest) + res_bytes
+                continue
+            if op in ("reduce", "reduce-window"):
+                total.flops += self._operand_bytes(rest) // 4 or res_elems
+                total.bytes += self._operand_bytes(rest) + res_bytes
+                continue
+            if op == "scatter":
+                # in-place RMW of the touched region: ~2x the update bytes.
+                total.flops += res_elems
+                total.bytes += 3 * self._update_bytes(rest)
+                continue
+            if op in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced/gathered region, not the operand.
+                total.bytes += 2 * res_bytes
+                continue
+            if op == "dynamic-update-slice":
+                # aliased in-place in loop bodies: RMW of the update region.
+                total.bytes += 3 * self._update_bytes(rest)
+                continue
+            if op in _NO_FLOP_OPS:
+                total.bytes += self._operand_bytes(rest) + res_bytes
+                continue
+            if op == "custom-call":
+                total.bytes += self._operand_bytes(rest) + res_bytes
+                continue
+            # default: elementwise-ish — one flop per output element
+            total.flops += res_elems
+            total.bytes += self._operand_bytes(rest) + res_bytes
+        self._memo[comp_name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    cost = HloCostModel(hlo_text).entry_cost()
+    return {
+        "flops": cost.flops,
+        "hbm_bytes": cost.bytes,
+        "collective_bytes": cost.coll_bytes,
+        "collectives_per_kind": dict(cost.coll),
+        "collective_counts": dict(cost.coll_count),
+    }

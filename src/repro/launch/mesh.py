@@ -1,0 +1,35 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN step 1).
+
+Defined as functions so importing this module never touches jax device
+state. Single pod: (data=16, model=16) = 256 chips. Multi-pod: 2 pods x 256
+= 512 chips with the 'pod' axis as outer data parallelism over DCN
+(DESIGN.md S6).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run launcher must set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 before importing "
+            "anything that initializes jax")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_mesh(shape, axes):
+    """Generic helper for tests (e.g. (2, 4) on 8 host devices)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         devices=jax.devices()[:n])

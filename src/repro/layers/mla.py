@@ -1,0 +1,158 @@
+"""Multi-head Latent Attention (DeepSeek-V2; also MiniCPM3).
+
+KV is compressed to a small latent c_kv (kv_lora_rank) plus a shared rotary
+key k_pe (qk_rope_dim); the cache stores only (c_kv, k_pe) — the MLA memory
+win. Prefill/train up-projects to per-head keys/values and runs blocked
+attention. Decode uses the absorbed form: w_uk is folded into the query so
+scores are taken directly against the latent cache, and the attention output
+stays in latent space until the final w_uv projection — O(kv_lora) per cached
+token instead of O(heads * head_dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adapters import dense
+from repro.layers.attention import blocked_attention, masked_cache_write
+from repro.layers.norms import rms_norm
+from repro.layers.rope import apply_rope
+from repro.sharding.rules import shard
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int          # 0 => full-rank q projection
+    kv_lora_rank: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_head_dim: int
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def _project_q(x: Array, p: dict, cfg: MLAConfig) -> tuple[Array, Array]:
+    b, s, _ = x.shape
+    if cfg.q_lora_rank:
+        cq = dense(x, p["w_dq"], p.get("w_dq_lora_a"), p.get("w_dq_lora_b"))
+        cq = rms_norm(cq, p["q_norm_scale"])
+        q = dense(cq, p["w_uq"], p.get("w_uq_lora_a"), p.get("w_uq_lora_b"))
+    else:
+        q = dense(x, p["w_uq"], p.get("w_uq_lora_a"), p.get("w_uq_lora_b"))
+    q = q.reshape(b, s, cfg.n_heads, cfg.qk_dim)
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_pe = q[..., cfg.qk_nope_dim:]
+    return q_nope, q_pe
+
+
+def _project_kv_latent(x: Array, p: dict, cfg: MLAConfig
+                       ) -> tuple[Array, Array]:
+    ckv = dense(x, p["w_dkv"], p.get("w_dkv_lora_a"), p.get("w_dkv_lora_b"))
+    ckv = rms_norm(ckv, p["kv_norm_scale"])
+    kpe = dense(x, p["w_kpe"], p.get("w_kpe_lora_a"), p.get("w_kpe_lora_b"))
+    return ckv, kpe  # (B,S,kv_lora), (B,S,rope_dim)
+
+
+def mla_attention(x: Array, p: dict, cfg: MLAConfig, positions: Array,
+                  chunk: int = 512) -> tuple[Array, dict]:
+    """Prefill/train path. Returns (out (B,S,d), cache {"ckv","kpe"})."""
+    b, s, _ = x.shape
+    nh = cfg.n_heads
+    q_nope, q_pe = _project_q(x, p, cfg)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    ckv, kpe = _project_kv_latent(x, p, cfg)
+    kpe = apply_rope(kpe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    k_nope = dense(ckv, p["w_uk"]).reshape(b, s, nh, cfg.qk_nope_dim)
+    v = dense(ckv, p["w_uv"]).reshape(b, s, nh, cfg.v_head_dim)
+    k_pe_b = jnp.broadcast_to(kpe[:, :, None, :], (b, s, nh, cfg.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+    q = shard(q, "act_bthd")
+    k = shard(k, "act_bthd")
+    # Pad v's head_dim up to qk_dim so one blocked-attention call serves both.
+    pad = cfg.qk_dim - cfg.v_head_dim
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad > 0 else v
+    scale = 1.0 / math.sqrt(cfg.qk_dim)
+    o = blocked_attention(q, k, vp, chunk=chunk, causal=True, scale=scale)
+    o = o[..., :cfg.v_head_dim].reshape(b, s, nh * cfg.v_head_dim)
+    out = dense(o, p["w_o"], p.get("w_o_lora_a"), p.get("w_o_lora_b"))
+    return out, {"ckv": ckv, "kpe": kpe}
+
+
+def mla_decode(x: Array, p: dict, cfg: MLAConfig, cache: dict,
+               pos: Array) -> tuple[Array, dict]:
+    """Absorbed decode. x: (B, 1, d); cache: {"ckv": (B, Smax, kv_lora),
+    "kpe": (B, Smax, rope_dim)}; pos: () index of the current token."""
+    b = x.shape[0]
+    nh = cfg.n_heads
+    q_nope, q_pe = _project_q(x, p, cfg)                   # (B,1,H,*)
+    q_pe = apply_rope(q_pe, pos[None, None], cfg.rope_theta)
+    ckv_t, kpe_t = _project_kv_latent(x, p, cfg)
+    kpe_t = apply_rope(kpe_t[:, :, None, :], pos[None, None],
+                       cfg.rope_theta)[:, :, 0]
+
+    ckv_cache = shard(masked_cache_write(cache["ckv"], ckv_t, pos, axis=1),
+                      "decode_ckv")
+    kpe_cache = shard(masked_cache_write(cache["kpe"], kpe_t, pos, axis=1),
+                      "decode_ckv")
+
+    # Absorb w_uk into the query: q_lat (B,1,H,kv_lora).
+    w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, nh, cfg.qk_nope_dim)
+    q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scores = jnp.einsum("bqhl,bsl->bhqs", q_lat.astype(ckv_cache.dtype),
+                        ckv_cache, preferred_element_type=jnp.float32)
+    scores += jnp.einsum("bqhr,bsr->bhqs", q_pe.astype(kpe_cache.dtype),
+                         kpe_cache, preferred_element_type=jnp.float32)
+    scores *= 1.0 / math.sqrt(cfg.qk_dim)
+    scores = shard(scores, "decode_scores4")
+    smax = ckv_cache.shape[1]
+    valid = jnp.arange(smax) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsl->bqhl", probs.astype(ckv_cache.dtype),
+                       ckv_cache,
+                       preferred_element_type=jnp.float32)  # latent output
+    w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, nh, cfg.v_head_dim)
+    o = jnp.einsum("bqhl,lhv->bqhv", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(b, 1, nh * cfg.v_head_dim).astype(x.dtype)
+    out = dense(o, p["w_o"], p.get("w_o_lora_a"), p.get("w_o_lora_b"))
+    return out, {"ckv": ckv_cache, "kpe": kpe_cache}
+
+
+def init_mla_params(key: Array, cfg: MLAConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d, nh = cfg.d_model, cfg.n_heads
+
+    def u(k, shape, fan_in):
+        return jax.random.uniform(k, shape, dtype, -1, 1) / jnp.sqrt(fan_in)
+
+    p = {
+        "w_dkv": u(ks[0], (d, cfg.kv_lora_rank), d),
+        "kv_norm_scale": jnp.ones((cfg.kv_lora_rank,), dtype),
+        "w_kpe": u(ks[1], (d, cfg.qk_rope_dim), d),
+        "w_uk": u(ks[2], (cfg.kv_lora_rank, nh * cfg.qk_nope_dim),
+                  cfg.kv_lora_rank),
+        "w_uv": u(ks[3], (cfg.kv_lora_rank, nh * cfg.v_head_dim),
+                  cfg.kv_lora_rank),
+        "w_o": u(ks[4], (nh * cfg.v_head_dim, d), nh * cfg.v_head_dim),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = u(ks[5], (d, cfg.q_lora_rank), d)
+        p["q_norm_scale"] = jnp.ones((cfg.q_lora_rank,), dtype)
+        p["w_uq"] = u(ks[6], (cfg.q_lora_rank, nh * cfg.qk_dim),
+                      cfg.q_lora_rank)
+    else:
+        p["w_uq"] = u(ks[6], (d, nh * cfg.qk_dim), d)
+    return p

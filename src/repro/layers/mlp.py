@@ -1,0 +1,23 @@
+"""Feed-forward blocks: SwiGLU (LLaMA-family default)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adapters import dense
+from repro.sharding.rules import shard
+
+Array = jax.Array
+
+
+def swiglu(x: Array, p: dict, prefix: str = "w_") -> Array:
+    """p has f"{prefix}gate" (d, f), f"{prefix}up" (d, f), f"{prefix}down"
+    (f, d), each with optional _lora_a/_lora_b siblings."""
+    def lin(name, h):
+        return dense(h, p[name], p.get(name + "_lora_a"),
+                     p.get(name + "_lora_b"))
+    g = lin(prefix + "gate", x)
+    u = lin(prefix + "up", x)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "act_btf")
+    return lin(prefix + "down", h)

@@ -1,0 +1,38 @@
+"""Normalization layers (pure functions; params are plain arrays)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    """RMSNorm with fp32 statistics but no full-tensor fp32 upcast.
+
+    The obvious `x.astype(f32)` first op is a standalone convert that
+    jax.checkpoint hoists out of rematted regions, so under scan-over-layers
+    every layer boundary gets SAVED in f32 — 2x the residual memory (seen in
+    the 405B dry-run). Computing the second moment via a dot with fp32
+    accumulation keeps statistics exact with no hoistable convert; the
+    (tiny, per-row) inverse-rms is cast back to x.dtype for the scale.
+    """
+    d = x.shape[-1]
+    var = jax.lax.dot_general(
+        x, x, (((x.ndim - 1,), (x.ndim - 1,)),
+               (tuple(range(x.ndim - 1)), tuple(range(x.ndim - 1)))),
+        preferred_element_type=jnp.float32) / d          # (...,)
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array | None = None,
+               eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dtype)

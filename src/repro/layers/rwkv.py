@@ -1,0 +1,175 @@
+"""RWKV-6 (Finch) block: data-dependent-decay linear attention + channel mix.
+
+Per head (dims K=V=head_size), with data-dependent decay w_t in (0, 1):
+
+    y_t = r_t . (S_{t-1} + (u * k_t) v_t^T)          (bonus u on current token)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Prefill/train uses the chunked form (sequential scan over time chunks, exact
+pairwise decay inside a chunk). Stability: every exponential is of a
+difference of cumulative log-decays that is provably <= 0, so nothing
+overflows. Heads shard over the model axis, which keeps the (chunk, chunk, K)
+pairwise-decay tensor small per device. Decode is the O(1) recurrence.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adapters import dense
+from repro.layers.norms import rms_norm
+from repro.sharding.rules import shard
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    head_size: int = 64
+    decay_rank: int = 64
+    d_ff: int = 14336
+    time_chunk: int = 64
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_size
+
+
+def _token_shift(x: Array, prev: Array | None) -> Array:
+    """x_{t-1} per position; position 0 sees `prev` (decode cache) or zeros."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _lerp(x: Array, xs: Array, mu: Array) -> Array:
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _wkv_chunk(r, k, v, logw, u, s0):
+    """One chunk of the RWKV6 recurrence.
+    r,k,v: (B,C,H,K|N); logw: (B,C,H,K) (<0); u: (H,K); s0: (B,H,K,N).
+    Returns (y (B,C,H,N), s1)."""
+    cw = jnp.cumsum(logw, axis=1)                       # inclusive, <= 0, dec.
+    cw_excl = cw - logw                                 # cw_{i-1}
+    # inter-chunk: y_i += (r_i * exp(cw_{i-1})) . S
+    r_dec = r * jnp.exp(cw_excl)
+    y = jnp.einsum("bihk,bhkn->bihn", r_dec, s0)
+    # intra-chunk (j < i): A_ij = sum_k r_i k_j exp(cw_{i-1} - cw_j)
+    e = jnp.exp(jnp.clip(cw_excl[:, :, None] - cw[:, None, :], a_max=0.0))
+    c = r.shape[1]
+    mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+    a = jnp.einsum("bihk,bjhk,bijhk->bijh", r, k, e)
+    a = a * mask[None, :, :, None]
+    y = y + jnp.einsum("bijh,bjhn->bihn", a, v)
+    # diagonal bonus: y_i += (r_i . (u * k_i)) v_i
+    diag = jnp.einsum("bihk,hk,bihk->bih", r, u, k)
+    y = y + diag[..., None] * v
+    # state update: S' = diag(exp(cw_last)) S + sum_j (k_j exp(cw_last-cw_j)) v_j
+    cw_last = cw[:, -1][:, None]                        # (B,1,H,K)
+    k_dec = k * jnp.exp(cw_last - cw)
+    s1 = jnp.exp(cw_last[:, 0])[..., None] * s0 + jnp.einsum(
+        "bjhk,bjhn->bhkn", k_dec, v)
+    return y, s1
+
+
+def rwkv_time_mix(x: Array, p: dict, cfg: RWKVConfig,
+                  state: dict | None = None) -> tuple[Array, dict]:
+    """x: (B, S, d) -> (y, new_state). state: {"x_att": (B,d), "s": (B,H,K,N)}."""
+    bsz, s, d = x.shape
+    h, kd = cfg.n_heads, cfg.head_size
+    xs = _token_shift(x, state["x_att"] if state else None)
+
+    def proj(name, mu_name):
+        xi = _lerp(x, xs, p[mu_name])
+        return dense(xi, p[name], p.get(name + "_lora_a"),
+                     p.get(name + "_lora_b"))
+
+    r = proj("w_recept", "mu_r").reshape(bsz, s, h, kd).astype(jnp.float32)
+    k = proj("w_key", "mu_k").reshape(bsz, s, h, kd).astype(jnp.float32)
+    v = proj("w_value", "mu_v").reshape(bsz, s, h, kd).astype(jnp.float32)
+    g = proj("w_gate_rwkv", "mu_g")
+    # data-dependent decay (the RWKV6 'Finch' feature): low-rank + base
+    xw = _lerp(x, xs, p["mu_w"]).astype(jnp.float32)
+    dd = jnp.tanh(xw @ p["w_decay_a"].astype(jnp.float32)) \
+        @ p["w_decay_b"].astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(p["decay_base"].astype(jnp.float32) + dd,
+                             a_max=15.0))               # < 0
+    logw = logw.reshape(bsz, s, h, kd)
+    u = p["u_bonus"].astype(jnp.float32)                # (H, K)
+
+    chunk = min(cfg.time_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        r, k, v, logw = zf(r), zf(k), zf(v), zf(logw)
+    nc = r.shape[1] // chunk
+
+    def reshape_c(a):
+        # chunk axis derives from the (possibly sequence-sharded) stream —
+        # pin it replicated-over-model so the time scan's slices stay local
+        return shard(a.reshape(bsz, nc, chunk, h, kd
+                               ).transpose(1, 0, 2, 3, 4), "rwkv_chunks")
+
+    s0 = (state["s"].astype(jnp.float32) if state
+          else jnp.zeros((bsz, h, kd, kd), jnp.float32))
+
+    def step(carry, rkvw):
+        ri, ki, vi, wi = rkvw
+        y, s1 = _wkv_chunk(ri, ki, vi, wi, u, carry)
+        return s1, y
+
+    s_last, yc = jax.lax.scan(jax.checkpoint(step), s0,
+                              (reshape_c(r), reshape_c(k), reshape_c(v),
+                               reshape_c(logw)))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, h, kd)[:, :s]
+    # per-head group norm then gate (RWKV6 uses GroupNorm(ln_x))
+    y = rms_norm(y.reshape(bsz, s, d), p["ln_x_scale"])
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    out = dense(y.astype(x.dtype), p["w_out_rwkv"],
+                p.get("w_out_rwkv_lora_a"), p.get("w_out_rwkv_lora_b"))
+    new_state = {"x_att": x[:, -1], "s": s_last}
+    return out, new_state
+
+
+def rwkv_channel_mix(x: Array, p: dict,
+                     state: dict | None = None) -> tuple[Array, Array]:
+    """relu(xk @ Wk)^2 @ Wv with token shift. state: prev token (B, d)."""
+    xs = _token_shift(x, state)
+    xk = _lerp(x, xs, p["mu_k_ffn"])
+    hk = dense(xk, p["w_ffn_k"], p.get("w_ffn_k_lora_a"),
+               p.get("w_ffn_k_lora_b"))
+    hk = jnp.square(jax.nn.relu(hk.astype(jnp.float32))).astype(x.dtype)
+    out = dense(hk, p["w_ffn_v"], p.get("w_ffn_v_lora_a"),
+                p.get("w_ffn_v_lora_b"))
+    return out, x[:, -1]
+
+
+def init_rwkv_layer(key: Array, cfg: RWKVConfig, dtype=jnp.float32) -> dict:
+    d, h, kd = cfg.d_model, cfg.n_heads, cfg.head_size
+    ks = jax.random.split(key, 12)
+
+    def u(k, shape, fan_in):
+        return jax.random.uniform(k, shape, dtype, -1, 1) / jnp.sqrt(fan_in)
+
+    return {
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_g": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "w_recept": u(ks[0], (d, d), d), "w_key": u(ks[1], (d, d), d),
+        "w_value": u(ks[2], (d, d), d), "w_gate_rwkv": u(ks[3], (d, d), d),
+        "w_out_rwkv": u(ks[4], (d, d), d),
+        "w_decay_a": u(ks[5], (d, cfg.decay_rank), d),
+        "w_decay_b": u(ks[6], (cfg.decay_rank, d), cfg.decay_rank) * 0.1,
+        "decay_base": jnp.full((d,), 0.5, dtype),
+        "u_bonus": u(ks[7], (h, kd), kd),
+        "ln_x_scale": jnp.ones((d,), dtype),
+        "mu_k_ffn": jnp.full((d,), 0.5, dtype),
+        "w_ffn_k": u(ks[8], (d, cfg.d_ff), d),
+        "w_ffn_v": u(ks[9], (cfg.d_ff, d), cfg.d_ff),
+    }

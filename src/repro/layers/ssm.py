@@ -1,0 +1,147 @@
+"""Selective SSM (Mamba-style) mixer used by the Hymba hybrid architecture.
+
+Recurrence: h_t = exp(A * dt_t) * h_{t-1} + dt_t * B_t * x_t ;  y_t = C_t . h_t + D * x_t
+(diagonal A, per-channel state of size N). Prefill/train runs a sequential
+scan over time chunks with an associative scan inside each chunk (bounds the
+(B, chunk, d_inner, N) transient); decode is a single recurrence step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adapters import dense
+from repro.sharding.rules import shard
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_inner: int
+    state: int = 16          # N
+    dt_rank: int = 32
+    conv: int = 4
+    time_chunk: int = 512
+
+
+def _causal_conv(x: Array, w: Array, state: Array | None = None
+                 ) -> tuple[Array, Array]:
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). Returns (y, new_state)
+    where state is the last K-1 inputs (for decode)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    return y.astype(x.dtype), xp[:, -(k - 1):, :]
+
+
+def _chunk_time(x: Array, chunk: int, pad_value: float = 0.0) -> Array:
+    """(B, S, ...) -> (nc, B, chunk, ...) with padding."""
+    bsz, s = x.shape[:2]
+    pad = (-s) % chunk
+    if pad:
+        widths = ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2)
+        x = jnp.pad(x, widths, constant_values=pad_value)
+    nc = x.shape[1] // chunk
+    x = x.reshape((bsz, nc, chunk) + x.shape[2:])
+    return jnp.moveaxis(x, 1, 0)
+
+
+def _ssm_scan_chunked(dt: Array, xs32: Array, b_t: Array, c_t: Array,
+                      a: Array, h0: Array, chunk: int
+                      ) -> tuple[Array, Array]:
+    """Fused discretize + scan, chunked over time so the (B, S, D, N)
+    discretized tensors never materialize at full length (the 405B-scale
+    dry-run showed a_bar/b_bar alone at 27 GB/device for hymba otherwise).
+
+    dt, xs32: (B, S, D); b_t, c_t: (B, S, N); a: (D, N); h0: (B, D, N).
+    Returns (y (B, S, D) = C_t . h_t, h_last).
+    """
+    bsz, s, d = dt.shape
+    n = a.shape[-1]
+    chunk = min(chunk, s)
+    # pin the chunk axis (see rules: moe_chunks/rwkv_chunks rationale)
+    dtc = shard(_chunk_time(dt, chunk), "ssm_chunks_d")
+    xsc = shard(_chunk_time(xs32, chunk), "ssm_chunks_d")
+    btc = shard(_chunk_time(b_t, chunk), "ssm_chunks_n")
+    ctc = shard(_chunk_time(c_t, chunk), "ssm_chunks_n")
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    def step(h, inputs):
+        dti, xsi, bti, cti = inputs                  # (B, chunk, ...)
+        a_bar = jnp.exp(dti[..., None] * a[None, None])      # (B,c,D,N)
+        b_bar = (dti * xsi)[..., None] * bti[:, :, None, :]
+        aa, bb = jax.lax.associative_scan(combine, (a_bar, b_bar), axis=1)
+        h_all = aa * h[:, None] + bb
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, cti)
+        return h_all[:, -1], y
+
+    h_last, yc = jax.lax.scan(jax.checkpoint(step), h0,
+                              (dtc, xsc, btc, ctc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(bsz, -1, d)[:, :s]
+    return y, h_last
+
+
+def ssm_mix(x: Array, p: dict, cfg: SSMConfig,
+            state: dict | None = None) -> tuple[Array, dict]:
+    """x: (B, S, d_model) -> (y (B, S, d_model), new_state).
+
+    Params: w_in (d, 2*d_inner), conv_w (K, d_inner), w_dt_down (d_inner,
+    dt_rank), w_dt_up (dt_rank, d_inner), dt_bias (d_inner,), w_bc (d_inner,
+    2N), a_log (d_inner, N), d_skip (d_inner,), w_out (d_inner, d).
+    state: {"conv": (B, K-1, d_inner), "h": (B, d_inner, N)} for decode.
+    """
+    bsz, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.state
+    xz = dense(x, p["w_in"], p.get("w_in_lora_a"), p.get("w_in_lora_b"))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"], conv_state)
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(
+        (xs @ p["w_dt_down"].astype(xs.dtype)) @ p["w_dt_up"].astype(xs.dtype)
+        + p["dt_bias"].astype(xs.dtype)).astype(jnp.float32)        # (B,S,di)
+    bc = xs @ p["w_bc"].astype(xs.dtype)                            # (B,S,2N)
+    b_t, c_t = jnp.split(bc.astype(jnp.float32), 2, axis=-1)        # (B,S,N)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                    # (di,N)
+
+    h0 = (state["h"].astype(jnp.float32) if state is not None
+          else jnp.zeros((bsz, di, n), jnp.float32))
+    y, h_last = _ssm_scan_chunked(dt, xs.astype(jnp.float32), b_t, c_t, a,
+                                  h0, cfg.time_chunk)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = dense(y, p["w_out"], p.get("w_out_lora_a"), p.get("w_out_lora_b"))
+    return out, {"conv": new_conv, "h": h_last.astype(jnp.float32)}
+
+
+def init_ssm_params(key: Array, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    di, n, d = cfg.d_inner, cfg.state, cfg.d_model
+
+    def u(k, shape, fan_in):
+        return jax.random.uniform(k, shape, dtype, -1, 1) / jnp.sqrt(fan_in)
+
+    return {
+        "w_in": u(ks[0], (d, 2 * di), d),
+        "conv_w": u(ks[1], (cfg.conv, di), cfg.conv),
+        "w_dt_down": u(ks[2], (di, cfg.dt_rank), di),
+        "w_dt_up": u(ks[3], (cfg.dt_rank, di), cfg.dt_rank),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "w_bc": u(ks[4], (di, 2 * n), di),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "w_out": u(ks[5], (di, d), di),
+    }

@@ -1,0 +1,299 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+The audio frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, T_enc, d). Decoder layers add cross-attention
+against the encoder output; decode keeps a self-attention KV cache plus
+per-layer cross K/V computed once at prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adapters import dense
+from repro.layers.attention import (blocked_attention, cross_attention,
+                                    decode_attention, masked_cache_write)
+from repro.layers.mlp import swiglu
+from repro.layers.norms import rms_norm
+from repro.layers.rope import apply_rope
+from repro.models.lm import _uinit
+from repro.sharding.rules import shard, shard_cache
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str = "encdec"
+    enc_layers: int = 12
+    dec_layers: int = 12
+    d_model: int = 1024
+    n_heads: int = 16
+    n_kv_heads: int = 16
+    head_dim: int = 64
+    d_ff: int = 4096
+    vocab: int = 256206
+    rope_theta: float = 10000.0
+    attn_chunk: int = 512
+    param_dtype: str = "float32"
+    remat: bool = True
+
+
+def _init_enc_layer(cfg: EncDecConfig, key: Array) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = iter(jax.random.split(key, 8))
+    return {
+        "ln1_scale": jnp.ones((d,), dtype),
+        "ln2_scale": jnp.ones((d,), dtype),
+        "wq": _uinit(next(ks), (d, hq * hd), d, dtype),
+        "wk": _uinit(next(ks), (d, hkv * hd), d, dtype),
+        "wv": _uinit(next(ks), (d, hkv * hd), d, dtype),
+        "wo": _uinit(next(ks), (hq * hd, d), hq * hd, dtype),
+        "w_gate": _uinit(next(ks), (d, cfg.d_ff), d, dtype),
+        "w_up": _uinit(next(ks), (d, cfg.d_ff), d, dtype),
+        "w_down": _uinit(next(ks), (cfg.d_ff, d), cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(cfg: EncDecConfig, key: Array) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = iter(jax.random.split(key, 12))
+    p = _init_enc_layer(cfg, next(ks))
+    p.update({
+        "ln_cross_scale": jnp.ones((d,), dtype),
+        "wq_cross": _uinit(next(ks), (d, hq * hd), d, dtype),
+        "wk_cross": _uinit(next(ks), (d, hkv * hd), d, dtype),
+        "wv_cross": _uinit(next(ks), (d, hkv * hd), d, dtype),
+        "wo_cross": _uinit(next(ks), (hq * hd, d), hq * hd, dtype),
+    })
+    return p
+
+
+def init_params(cfg: EncDecConfig, key: Array) -> PyTree:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_head, ke, kd = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: _init_enc_layer(cfg, k))(
+        jax.random.split(ke, cfg.enc_layers))
+    dec = jax.vmap(lambda k: _init_dec_layer(cfg, k))(
+        jax.random.split(kd, cfg.dec_layers))
+    return {
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model),
+                                   dtype) * 0.02,
+        "enc_norm_scale": jnp.ones((cfg.d_model,), dtype),
+        "dec_norm_scale": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": _uinit(k_head, (cfg.d_model, cfg.vocab), cfg.d_model,
+                          dtype),
+    }
+
+
+def param_specs(cfg: EncDecConfig) -> PyTree:
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def _proj_qkv(x, p, cfg, positions, prefix="", rope=True):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(x, p[f"wq{prefix}"], p.get(f"wq{prefix}_lora_a"),
+              p.get(f"wq{prefix}_lora_b")).reshape(b, s, hq, hd)
+    k = dense(x, p[f"wk{prefix}"], p.get(f"wk{prefix}_lora_a"),
+              p.get(f"wk{prefix}_lora_b")).reshape(b, s, hkv, hd)
+    v = dense(x, p[f"wv{prefix}"], p.get(f"wv{prefix}_lora_a"),
+              p.get(f"wv{prefix}_lora_b")).reshape(b, s, hkv, hd)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return shard(q, "act_bthd"), shard(k, "act_bthd"), shard(v, "act_bthd")
+
+
+def _out(o, p, cfg, prefix=""):
+    b, s = o.shape[:2]
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return dense(o, p[f"wo{prefix}"], p.get(f"wo{prefix}_lora_a"),
+                 p.get(f"wo{prefix}_lora_b"))
+
+
+def encode(cfg: EncDecConfig, params: PyTree, frames: Array) -> Array:
+    """frames: (B, T_enc, d) stub embeddings -> encoder states."""
+    x = shard(frames.astype(jnp.dtype(cfg.param_dtype)), "act_btd")
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        hh = rms_norm(h, lp["ln1_scale"])
+        q, k, v = _proj_qkv(hh, lp, cfg, positions)
+        a = blocked_attention(q, k, v, chunk=cfg.attn_chunk, causal=False)
+        h = h + _out(a, lp, cfg)
+        h2 = rms_norm(h, lp["ln2_scale"])
+        h = h + swiglu(h2, lp)
+        return shard(h, "act_btd"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm_scale"])
+
+
+def _dec_layer_train(cfg, h, lp, enc_kv, positions):
+    enc_k, enc_v = enc_kv
+    hh = rms_norm(h, lp["ln1_scale"])
+    q, k, v = _proj_qkv(hh, lp, cfg, positions)
+    a = blocked_attention(q, k, v, chunk=cfg.attn_chunk, causal=True)
+    h = h + _out(a, lp, cfg)
+    hc = rms_norm(h, lp["ln_cross_scale"])
+    qc = dense(hc, lp["wq_cross"], lp.get("wq_cross_lora_a"),
+               lp.get("wq_cross_lora_b"))
+    b, s = hc.shape[:2]
+    qc = qc.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    c = blocked_attention(qc, enc_k, enc_v, chunk=cfg.attn_chunk,
+                          causal=False)
+    h = h + _out(c, lp, cfg, prefix="_cross")
+    h2 = rms_norm(h, lp["ln2_scale"])
+    return h + swiglu(h2, lp)
+
+
+def _enc_kv(cfg, lp, enc_states):
+    b, t = enc_states.shape[:2]
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    ek = dense(enc_states, lp["wk_cross"]).reshape(b, t, hkv, hd)
+    ev = dense(enc_states, lp["wv_cross"]).reshape(b, t, hkv, hd)
+    return shard(ek, "act_bthd"), shard(ev, "act_bthd")
+
+
+def forward(cfg: EncDecConfig, params: PyTree, frames: Array,
+            tokens: Array) -> Array:
+    """Training forward -> decoder logits (B, S_dec, vocab)."""
+    enc_states = encode(cfg, params, frames)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "act_btd")
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        kv = _enc_kv(cfg, lp, enc_states)
+        h = _dec_layer_train(cfg, h, lp, kv, positions)
+        return shard(h, "act_btd"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = rms_norm(x, params["dec_norm_scale"])
+    return shard(dense(x, params["lm_head"]), "logits")
+
+
+def loss_fn(cfg: EncDecConfig, params: PyTree, batch: dict
+            ) -> tuple[Array, dict]:
+    logits = forward(cfg, params, batch["frames"], batch["inputs"])
+    targets = batch["targets"]
+    mask = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+    l32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(l32, axis=-1)
+    picked = jnp.sum(l32 * jax.nn.one_hot(tgt, cfg.vocab, dtype=jnp.float32),
+                     axis=-1)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = ((lse - picked) * mask).sum() / denom
+    return loss, {"loss": loss, "tokens": denom}
+
+
+def prefill(cfg: EncDecConfig, params: PyTree, frames: Array, tokens: Array,
+            cache_cap: int) -> tuple[Array, PyTree]:
+    """Encode + run decoder prompt. Cache: self K/V (dec) + cross K/V."""
+    enc_states = encode(cfg, params, frames)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "act_btd")
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    pad = cache_cap - s
+
+    def body(h, lp):
+        ek, ev = _enc_kv(cfg, lp, enc_states)
+        hh = rms_norm(h, lp["ln1_scale"])
+        q, k, v = _proj_qkv(hh, lp, cfg, positions)
+        a = blocked_attention(q, k, v, chunk=cfg.attn_chunk, causal=True)
+        h = h + _out(a, lp, cfg)
+        hc = rms_norm(h, lp["ln_cross_scale"])
+        qc = dense(hc, lp["wq_cross"]).reshape(b, s, cfg.n_heads,
+                                               cfg.head_dim)
+        c = blocked_attention(qc, ek, ev, chunk=cfg.attn_chunk, causal=False)
+        h = h + _out(c, lp, cfg, prefix="_cross")
+        h2 = rms_norm(h, lp["ln2_scale"])
+        h = h + swiglu(h2, lp)
+        lc = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))
+                           ).transpose(0, 2, 1, 3),
+              "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))
+                           ).transpose(0, 2, 1, 3),
+              "ek": ek.transpose(0, 2, 1, 3),
+              "ev": ev.transpose(0, 2, 1, 3)}
+        return shard(h, "act_btd"), lc
+
+    x, cache = jax.lax.scan(body, x, params["dec_layers"])
+    x_last = rms_norm(x[:, -1:], params["dec_norm_scale"])
+    logits = dense(x_last, params["lm_head"])[:, 0]
+    return logits, cache
+
+
+def decode_step(cfg: EncDecConfig, params: PyTree, cache: PyTree,
+                tokens: Array, pos: Array) -> tuple[Array, PyTree]:
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)
+
+    # Cache in the scan carry (in-place update) — see models/lm.decode_step.
+    cache = shard_cache(cache)
+
+    def body(carry, inp):
+        h, full_cache = carry
+        lp, idx = inp
+        lc = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0,
+                                                   keepdims=False),
+            full_cache)
+        hh = rms_norm(h, lp["ln1_scale"])
+        q, k, v = _proj_qkv(hh, lp, cfg, pos[None])
+        kc = masked_cache_write(lc["k"], k.transpose(0, 2, 1, 3), pos,
+                                axis=2)
+        vc = masked_cache_write(lc["v"], v.transpose(0, 2, 1, 3), pos,
+                                axis=2)
+        a = decode_attention(q, kc, vc, pos + 1)
+        h = h + _out(a, lp, cfg)
+        hc = rms_norm(h, lp["ln_cross_scale"])
+        qc = dense(hc, lp["wq_cross"]).reshape(h.shape[0], 1, cfg.n_heads,
+                                               cfg.head_dim)
+        c = cross_attention(qc, lc["ek"].transpose(0, 2, 1, 3),
+                            lc["ev"].transpose(0, 2, 1, 3))
+        h = h + _out(c, lp, cfg, prefix="_cross")
+        h2 = rms_norm(h, lp["ln2_scale"])
+        h = h + swiglu(h2, lp)
+        new_lc = {"k": kc, "v": vc, "ek": lc["ek"], "ev": lc["ev"]}
+        full_cache = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), idx, 0),
+            full_cache, new_lc)
+        return (h, shard_cache(full_cache)), None
+
+    (x, new_cache), _ = jax.lax.scan(
+        body, (x, cache),
+        (params["dec_layers"], jnp.arange(cfg.dec_layers)))
+    x = rms_norm(x[:, -1:], params["dec_norm_scale"])
+    logits = dense(x, params["lm_head"])[:, 0]
+    return logits, new_cache
+
+
+def init_cache(cfg: EncDecConfig, batch: int, cache_cap: int, enc_len: int,
+               dtype=jnp.bfloat16) -> PyTree:
+    l = cfg.dec_layers
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    z = lambda shape: jnp.zeros((l,) + shape, dtype)
+    # head-major at rest (see layers/attention.decode_attention)
+    return {"k": z((batch, hkv, cache_cap, hd)),
+            "v": z((batch, hkv, cache_cap, hd)),
+            "ek": z((batch, hkv, enc_len, hd)),
+            "ev": z((batch, hkv, enc_len, hd))}

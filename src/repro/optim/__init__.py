@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (AdamConfig, adam_init, adam_update,
+                                    sgd_update, clip_by_global_norm,
+                                    cosine_schedule, linear_warmup_cosine,
+                                    OptState)

@@ -1,0 +1,97 @@
+"""Pipeline-parallel schedule reference: 1F1B (PipeDream-flush) simulator.
+
+The assignment's production mesh (pod, data, model) carries no pipeline
+axis, so PP is not part of the dry-run configs (DESIGN.md §6) — but sizing
+decisions (how many microbatches make PP competitive with pure FSDP x TP at
+a given depth) still need the bubble math. This module computes exact 1F1B
+timelines for (stages, microbatches, fwd/bwd times, p2p latency) and the
+resulting bubble fraction, and is property-tested against the closed form
+
+    bubble = (S - 1) / (M + S - 1)        [equal stage times, zero p2p]
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    stages: int                  # S
+    microbatches: int            # M
+    t_fwd: float = 1.0           # per-stage forward time (per microbatch)
+    t_bwd: float = 2.0           # per-stage backward time
+    t_p2p: float = 0.0           # activation send/recv latency between stages
+
+
+def simulate_1f1b(spec: PipelineSpec) -> dict:
+    """Event-driven 1F1B: stage s runs (S - s) warmup forwards, then
+    alternates 1F/1B, then drains. Returns makespan + bubble fraction."""
+    s_n, m_n = spec.stages, spec.microbatches
+    assert m_n >= 1 and s_n >= 1
+    # fwd_done[s][m] / bwd_done[s][m]: completion times
+    fwd_done = [[0.0] * m_n for _ in range(s_n)]
+    bwd_done = [[0.0] * m_n for _ in range(s_n)]
+    stage_free = [0.0] * s_n
+
+    # Build each stage's op order under 1F1B.
+    orders: list[list[tuple[str, int]]] = []
+    for s in range(s_n):
+        warmup = min(s_n - s, m_n)
+        order: list[tuple[str, int]] = [("F", m) for m in range(warmup)]
+        f_next, b_next = warmup, 0
+        while b_next < m_n:
+            if f_next < m_n:
+                order.append(("B", b_next))
+                b_next += 1
+                order.append(("F", f_next))
+                f_next += 1
+            else:
+                order.append(("B", b_next))
+                b_next += 1
+        orders.append(order)
+
+    # Fixed-point scheduling over dependency + stage-serialization order.
+    for _ in range(s_n + m_n + 2):
+        stage_free = [0.0] * s_n
+        changed = False
+        for s in range(s_n):
+            t = 0.0
+            for kind, m in orders[s]:
+                if kind == "F":
+                    dep = (fwd_done[s - 1][m] + spec.t_p2p) if s > 0 else 0.0
+                    start = max(t, dep)
+                    end = start + spec.t_fwd
+                    if fwd_done[s][m] != end:
+                        changed = True
+                    fwd_done[s][m] = end
+                else:
+                    dep = (bwd_done[s + 1][m] + spec.t_p2p) \
+                        if s < s_n - 1 else fwd_done[s][m]
+                    start = max(t, dep)
+                    end = start + spec.t_bwd
+                    if bwd_done[s][m] != end:
+                        changed = True
+                    bwd_done[s][m] = end
+                t = end
+            stage_free[s] = t
+        if not changed:
+            break
+
+    makespan = max(stage_free)
+    work = m_n * (spec.t_fwd + spec.t_bwd)          # per-stage busy time
+    bubble = 1.0 - work / makespan if makespan else 0.0
+    return {"makespan": makespan, "bubble_fraction": bubble,
+            "per_stage_busy": work}
+
+
+def bubble_closed_form(stages: int, microbatches: int) -> float:
+    """Equal stage times, zero p2p: (S-1)/(M+S-1)."""
+    return (stages - 1) / (microbatches + stages - 1)
+
+
+def min_microbatches_for_bubble(stages: int, target: float) -> int:
+    """Smallest M with closed-form bubble <= target."""
+    m = 1
+    while bubble_closed_form(stages, m) > target:
+        m += 1
+    return m

@@ -1,0 +1,128 @@
+"""Logical activation/param sharding rules.
+
+Model code never names mesh axes directly: it calls shard(x, "<logical>") and
+the active rule set (installed by the launcher via `use_rules`) maps logical
+names to PartitionSpecs on the current mesh. With no rules installed (unit
+tests, single device) shard() is the identity.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: dict[str, Any] = {"mesh": None, "rules": {}}
+
+
+def activation_rules(mesh: Mesh) -> dict[str, P]:
+    """Default logical-name -> PartitionSpec table for a (pod?,data,model) mesh."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp = tuple(a for a in dp if a in mesh.axis_names)
+    mdl = "model" if "model" in mesh.axis_names else None
+    return {
+        "act_btd": P(dp, None, None),            # (batch, seq, embed)
+        "act_btf": P(dp, None, mdl),             # (batch, seq, ffn)
+        "act_bthd": P(dp, None, mdl, None),      # (batch, seq, heads, hd)
+        "act_btghd": P(dp, None, mdl, None, None),  # grouped heads
+        "logits": P(dp, None, mdl),              # (batch, seq, vocab)
+        "moe_becd": P(dp, mdl, None, None),      # (batch, experts, cap, d)
+        "kv_cache": P(None, dp, None, mdl, None),   # (L, batch, seq, heads, hd)
+        "mla_cache": P(None, dp, None, None),    # (L, batch, seq, lora)
+        "ssm_state": P(None, dp, mdl, None, None),  # (L, batch, heads, dk, dv)
+        "batch_tokens": P(dp, None),             # (batch, seq) int tokens
+        "batch_vec": P(dp,),                     # (batch,) int
+        # blocked-attention loop state (flat-head layout):
+        # (b, n_chunks, chunk, H, d) and (b, n_chunks, chunk, H).
+        # Pinning these keeps every pair-scan step local to its head shard
+        # (otherwise GSPMD replicates the carry and all-gathers per step).
+        "attn_acc": P(dp, None, None, mdl, None),
+        "attn_stat": P(dp, None, None, mdl),
+        # chunked q/k/v views (b, n_chunks, chunk, H, d): pinned head-sharded
+        # so the pair scan's dynamic slices are local (otherwise a seq-shard
+        # from the residual stream leaks in and every pair step all-to-alls)
+        "attn_chunked": P(dp, None, None, mdl, None),
+        "attn_stat_nc": P(dp, None, None, mdl),
+        # MoE: token chunks are scanned — replicate the chunk axis over
+        # model; expert weights gathered ONCE per layer (E stays sharded)
+        "moe_chunks": P(None, dp, None, None),
+        "moe_expert_w": P(mdl, None, None),
+        # rwkv/ssm time-chunk scans: chunk axis replicated over model, heads
+        # / d_inner sharded — same per-step-gather hazard as moe_chunks
+        "rwkv_chunks": P(None, dp, None, mdl, None),  # (nc,B,c,H,K)
+        "ssm_chunks_d": P(None, dp, None, mdl),       # (nc,B,c,di)
+        "ssm_chunks_n": P(None, dp, None, None),      # (nc,B,c,N)
+        # decode path: cache slices stay sequence-sharded; scores/softmax
+        # reduce over the sharded seq dim (psum), never resharding the cache
+        "decode_kv": P(dp, None, mdl, None),        # (B, Hkv, Smax, hd)
+        "decode_scores": P(dp, None, None, None, mdl),  # (B,1,h,g,Smax)
+        "decode_ckv": P(dp, mdl, None),              # (B, Smax, kv_lora)
+        "decode_scores4": P(dp, None, None, mdl),    # (B,H,1,Smax)
+    }
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: dict[str, P] | None = None):
+    prev = dict(_CTX)
+    _CTX["mesh"] = mesh
+    _CTX["rules"] = activation_rules(mesh) if rules is None else rules
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.update(prev)
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX["mesh"]
+
+
+def shard(x: jax.Array, name: str) -> jax.Array:
+    """Apply the logical sharding constraint `name` if rules are active."""
+    mesh, rules = _CTX["mesh"], _CTX["rules"]
+    if mesh is None or name not in rules:
+        return x
+    spec = rules[name]
+    if len(spec) > x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def data_axes(mesh: Mesh | None = None) -> tuple[str, ...]:
+    mesh = mesh or _CTX["mesh"]
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shard_cache(cache):
+    """Pin a (stacked, full-model) decode cache tree to its canonical
+    sharding (specs.cache_pspecs) with divisibility sanitization. Needed
+    inside decode's scan body: the cache rides in the loop CARRY, and GSPMD
+    otherwise replicates loop state (observed: 405B decode cache ballooning
+    8.5 -> 76 GB/device)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return cache
+    from repro.sharding.specs import cache_pspecs
+
+    specs = cache_pspecs(cache, dp=data_axes(mesh))
+
+    def apply(x, spec):
+        axes = []
+        for i, names in enumerate(spec):
+            if names is None or i >= x.ndim:
+                axes.append(None)
+                continue
+            names_t = names if isinstance(names, tuple) else (names,)
+            size = 1
+            for n in names_t:
+                size *= mesh.shape[n]
+            axes.append(names if x.shape[i] % size == 0 else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*axes)))
+
+    return jax.tree.map(apply, cache, specs,
+                        is_leaf=lambda s: isinstance(s, P) or not isinstance(
+                            s, (dict, list, tuple)))

@@ -1,0 +1,167 @@
+"""Parameter / cache PartitionSpec builders (path-pattern rules, MaxText
+style). Conventions on a (pod?, data, model) mesh:
+
+  col-parallel  (d -> out):   out dim over 'model'   (wq/wk/wv/w_gate/...)
+  row-parallel  (in -> d):    in dim over 'model'    (wo/w_down/...)
+  experts:                    expert dim over 'model' (EP)
+  embed (V, d):               d over 'model' (local token gather)
+  lm_head (d, V):             V over 'model'
+  LoRA A/B: inherit the factor-adjacent dim of their base weight so the
+  adapter matmuls stay local (DESIGN.md S3.2); the rank dim is replicated.
+
+Leading stack dims (layers L, experts E) are skipped automatically: rules
+fire on the trailing dims of each leaf.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.adapters import LORA_A_SUFFIX, LORA_B_SUFFIX
+from repro.core.reparam import flatten_with_paths, unflatten_paths
+
+PyTree = Any
+
+# (regex on the path's last component, sharded trailing dim index from the
+# right: -1 = col-parallel, -2 = row-parallel, None = replicated)
+_BASE_RULES: list[tuple[str, int | None]] = [
+    (r"^(wq|wk|wv|wq_cross|wk_cross|wv_cross)$", -1),
+    (r"^(wo|wo_cross|w_out|w_out_rwkv)$", -2),
+    (r"^(w_gate|w_up|w_shared_gate|w_shared_up|w_ffn_k)$", -1),
+    (r"^(w_down|w_shared_down|w_ffn_v)$", -2),
+    (r"^(we_gate|we_up|we_down)$", None),          # expert dim handled below
+    (r"^w_router$", None),
+    (r"^(w_uq|w_uk|w_uv)$", -1),                   # MLA up-projections
+    (r"^(w_dq|w_dkv|w_kpe)$", None),               # small latent projections
+    (r"^(w_in|w_dt_up)$", -1),                     # SSM col
+    (r"^(w_dt_down|w_bc)$", -2),                   # SSM row (contract d_inner)
+    (r"^(conv_w|dt_bias|d_skip)$", -1),            # per-channel over d_inner
+    (r"^a_log$", -2),                              # (di, N)
+    (r"^(w_recept|w_key|w_value|w_gate_rwkv|w_decay_b)$", -1),
+    (r"^w_decay_a$", None),
+    (r"^u_bonus$", -2),                            # (H, K): shard heads
+    (r"^embed$", -1),                              # (V, d): shard d
+    (r"^lm_head$", -1),                            # (d, V): shard V
+]
+
+
+def _leaf_rule(name: str) -> int | None:
+    for pat, dim in _BASE_RULES:
+        if re.match(pat, name):
+            return dim
+    return None
+
+
+FSDP_MIN_DIM = 512    # complementary matrix dims >= this also shard on data
+_NO_FSDP = {"embed", "lm_head"}   # their complementary dim is contracted
+#   against batch-sharded activations; data-sharding it would all-reduce
+#   logits-sized partials over 'data'.
+
+
+def _add_fsdp(axes: list, shape: tuple[int, ...], ndim: int):
+    """ZeRO-3/FSDP: shard the largest unsharded trailing matrix dim over
+    'data' so weights divide across the whole mesh (DESIGN.md S6). GSPMD
+    all-gathers the (small) weight shard per layer inside the scan."""
+    for cand in sorted((ndim - 2, ndim - 1),
+                       key=lambda i: -shape[i] if i >= 0 else 0):
+        if cand >= 0 and axes[cand] is None and shape[cand] >= FSDP_MIN_DIM:
+            axes[cand] = "data"
+            return
+
+
+def _spec_for(path: str, shape: tuple[int, ...], n_stack_dims: int) -> P:
+    """n_stack_dims: leading dims that are layer stacks (scan)."""
+    name = path.split("/")[-1]
+    ndim = len(shape)
+    axes: list = [None] * ndim
+
+    is_lora_a = name.endswith(LORA_A_SUFFIX)
+    is_lora_b = name.endswith(LORA_B_SUFFIX)
+    base = name
+    if is_lora_a:
+        base = name[: -len(LORA_A_SUFFIX)]
+    elif is_lora_b:
+        base = name[: -len(LORA_B_SUFFIX)]
+
+    if base.startswith("we_"):
+        # expert-stacked weight (L, E, a, b) or adapter (L, E, a, r):
+        # shard the expert dim (EP) + FSDP the matrix dims.
+        e_dim = ndim - 3
+        if e_dim >= 0:
+            axes[e_dim] = "model"
+        if not (is_lora_a or is_lora_b):
+            _add_fsdp(axes, shape, ndim)
+        return P(*axes)
+
+    dim = _leaf_rule(base)
+    if is_lora_a:
+        # A: (..., in, r). Shard `in` only if the base is row-parallel.
+        if dim == -2 and ndim >= 2:
+            axes[ndim - 2] = "model"
+        return P(*axes)
+    if is_lora_b:
+        # B: (..., r, out). Shard `out` only if the base is col-parallel.
+        if dim == -1 and ndim >= 2:
+            axes[ndim - 1] = "model"
+        return P(*axes)
+    if dim is not None and ndim >= abs(dim):
+        axes[ndim + dim] = "model"
+    # FSDP only for true weight matrices: leaves with a parallelism rule or
+    # >= 3 dims (stacked matrices). Stacked 1D params (norm scales, mus,
+    # biases: (L, d)) stay replicated.
+    if name not in _NO_FSDP and (dim is not None or ndim >= 3):
+        _add_fsdp(axes, shape, ndim)
+    return P(*axes)
+
+
+def model_param_pspecs(param_specs: PyTree) -> PyTree:
+    """Pytree of PartitionSpec matching the model params (+ inlined adapters)."""
+    flat = flatten_with_paths(param_specs)
+    out = {}
+    for path, leaf in flat.items():
+        shape = tuple(int(s) for s in leaf.shape)
+        n_stack = max(0, len(shape) - 2)
+        out[path] = _spec_for(path, shape, n_stack)
+    return unflatten_paths(out)
+
+
+def cache_pspecs(cache_specs: PyTree, dp: tuple[str, ...] = ("data",)
+                 ) -> PyTree:
+    """Caches (leading L, then batch): shard batch over dp and the sequence
+    dim (if any, dim 2 for (L,B,S,...) entries) over 'model' — this is what
+    lets a 2TB 405B decode cache fit (DESIGN.md S6)."""
+    flat = flatten_with_paths(cache_specs)
+    out = {}
+    for path, leaf in flat.items():
+        shape = tuple(int(s) for s in leaf.shape)
+        axes: list = [None] * len(shape)
+        if len(shape) >= 2:
+            axes[1] = dp
+        name = path.split("/")[-1]
+        if name in ("k", "v", "ek", "ev") and len(shape) >= 4:
+            axes[3] = "model"            # head-major cache: S at dim 3
+        elif name in ("ckv", "kpe") and len(shape) >= 3:
+            axes[2] = "model"
+        elif name == "s" and len(shape) >= 3:
+            axes[2] = "model"            # rwkv heads
+        elif name in ("conv", "h") and len(shape) >= 4:
+            axes[-2 if name == "h" else -1] = "model"   # d_inner
+        out[path] = P(*axes)
+    return unflatten_paths(out)
+
+
+def batch_pspecs(batch_specs: PyTree, dp: tuple[str, ...] = ("data",)
+                 ) -> PyTree:
+    """Input batches: shard dim 0 (batch) over dp when divisible."""
+    dp_size_hint = None  # resolved by caller via mesh; GSPMD pads otherwise
+    flat = flatten_with_paths(batch_specs)
+    out = {}
+    for path, leaf in flat.items():
+        axes: list = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1:
+            axes[0] = dp
+        out[path] = P(*axes)
+    return unflatten_paths(out)

@@ -1,0 +1,84 @@
+"""Training loop with checkpoint/auto-resume — used by examples/ and the
+train launcher. Single-process (CPU or one pod); the multi-pod path changes
+only the mesh + shardings, not this loop (steps are pjit-ready)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim import AdamConfig, adam_init
+from repro.train.steps import TaskBundle, make_train_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    lr: float = 1e-2
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    num_microbatches: int = 1
+    resume: bool = True
+    seed: int = 0
+
+
+def run_training(bundle: TaskBundle, batch_fn: Callable[[int], dict],
+                 cfg: LoopConfig, lr_schedule=None,
+                 log_fn: Callable[[dict], None] | None = None) -> dict:
+    """batch_fn(step) -> batch dict (deterministic => resumable)."""
+    from repro.core.generator import init_generator
+
+    key = jax.random.PRNGKey(cfg.seed)
+    base = bundle.init_base(key)
+    gen_ws = (init_generator(bundle.gen_cfg)
+              if bundle.gen_cfg is not None else [])
+    trainable = bundle.init_trainable(jax.random.PRNGKey(cfg.seed + 1))
+    opt_state = adam_init(trainable)
+    start_step = 0
+
+    mgr = None
+    if cfg.ckpt_dir:
+        mgr = CheckpointManager(cfg.ckpt_dir)
+        if cfg.resume and mgr.latest_step() is not None:
+            start_step, restored, meta = mgr.restore()
+            trainable = jax.tree.map(jnp.asarray, restored["trainable"])
+            opt_state = jax.tree.map(jnp.asarray, restored["opt"])
+            from repro.optim.optimizers import OptState
+            opt_state = OptState(mu=opt_state["mu"], nu=opt_state["nu"],
+                                 step=jnp.asarray(opt_state["step"]))
+
+    step_fn = jax.jit(make_train_step(
+        bundle, AdamConfig(lr=cfg.lr),
+        num_microbatches=cfg.num_microbatches, lr_schedule=lr_schedule))
+
+    history = []
+    t0 = time.time()
+    for step in range(start_step, cfg.steps):
+        batch = batch_fn(step)
+        trainable, opt_state, metrics = step_fn(
+            trainable, opt_state, base, gen_ws, batch, jnp.int32(step))
+        if step % cfg.log_every == 0 or step == cfg.steps - 1:
+            rec = {"step": step, "loss": float(metrics["loss"]),
+                   "grad_norm": float(metrics.get("grad_norm", 0.0)),
+                   "elapsed_s": round(time.time() - t0, 1)}
+            history.append(rec)
+            if log_fn:
+                log_fn(rec)
+        if mgr and cfg.ckpt_every and (step + 1) % cfg.ckpt_every == 0:
+            opt_as_tree = {"mu": opt_state.mu, "nu": opt_state.nu,
+                           "step": opt_state.step}
+            mgr.save(step + 1, {"trainable": trainable, "opt": opt_as_tree},
+                     metadata={"loss": float(metrics["loss"])})
+    if mgr:
+        opt_as_tree = {"mu": opt_state.mu, "nu": opt_state.nu,
+                       "step": opt_state.step}
+        mgr.save(cfg.steps, {"trainable": trainable, "opt": opt_as_tree})
+    return {"trainable": trainable, "opt_state": opt_state, "base": base,
+            "gen_ws": gen_ws, "history": history}

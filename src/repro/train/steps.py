@@ -1,0 +1,327 @@
+"""Train / serve step builders for every training mode the paper evaluates.
+
+Modes:
+  mcnc   - paper S4.2: LoRA-factor adapters reparameterized by MCNC chunks;
+           trainable = (alpha, beta); base weights + A0/B0 frozen.
+  lora   - plain LoRA baseline (adapters themselves trainable).
+  nola   - NOLA baseline (coefficients over frozen random bases).
+  pranc  - PRANC baseline = MCNC with a linear depth-1 generator.
+  full   - full fine-tuning baseline (all params trainable).
+
+The returned step functions are pjit-ready pure functions; all state trees
+come with matching PartitionSpec trees. MCNC expansion (the paper's hot
+spot) happens inside every step — training AND serving (the paper's
+on-the-fly multi-adapter regime).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, ShapeSpec
+from repro.core.adapters import (AdapterConfig, init_adapters,
+                                 merge_adapters_into_params)
+from repro.core.baselines import (NolaConfig, expand_nola, init_nola_state,
+                                  plan_nola, pranc_generator)
+from repro.core.generator import GeneratorConfig, init_generator
+from repro.core.reparam import (CompressionPolicy, CompressionPlan,
+                                apply_deltas, expand_tree,
+                                flatten_with_paths, init_mcnc_state,
+                                mcnc_state_partition_specs, plan_compression,
+                                unflatten_paths)
+from repro.kernels.ops import kernel_expand_fn
+from repro.models import encdec, lm
+from repro.optim import AdamConfig, OptState, adam_init, adam_update
+from repro.sharding.specs import (batch_pspecs, cache_pspecs,
+                                  model_param_pspecs)
+
+Array = jax.Array
+PyTree = Any
+
+ADAPTER_POLICY = CompressionPolicy(include_patterns=(r"_lora_[ab]$",),
+                                   exclude_patterns=(), min_numel=1)
+
+
+@dataclasses.dataclass
+class TaskBundle:
+    """Everything a launcher or the dry-run needs for one (arch, mode)."""
+    arch: ArchSpec
+    mode: str
+    model_cfg: Any
+    base_specs: PyTree            # abstract base params (incl. A0/B0)
+    base_pspecs: PyTree
+    trainable_specs: PyTree
+    trainable_pspecs: PyTree
+    gen_cfg: GeneratorConfig | None
+    plan: CompressionPlan | None
+    nola_plan: Any | None
+    adapter_cfg: AdapterConfig | None
+    use_pallas: bool = False
+    interpret: bool = False
+
+    # ------------------------------------------------------------------
+    def gen_weight_specs(self) -> list:
+        if self.gen_cfg is None:
+            return []
+        return jax.eval_shape(lambda: init_generator(self.gen_cfg))
+
+    def init_base(self, key: Array) -> PyTree:
+        init = (encdec.init_params if self.arch.kind == "encdec"
+                else lm.init_params)
+        params = init(self.model_cfg, key)
+        if self.adapter_cfg is not None:
+            adapters = init_adapters(params, self.adapter_cfg)
+            params = merge_adapters_into_params(params, adapters)
+        return params
+
+    def init_trainable(self, key: Array) -> PyTree:
+        if self.mode in ("mcnc", "pranc"):
+            return init_mcnc_state(self.plan)
+        if self.mode == "nola":
+            return init_nola_state(self.nola_plan)
+        if self.mode == "lora":
+            flat = flatten_with_paths(self.base_specs)
+            keys = {p for p in flat if "_lora_" in p}
+            base = self.init_base(key)
+            fb = flatten_with_paths(base)
+            return unflatten_paths({p: fb[p] for p in keys})
+        if self.mode == "full":
+            return self.init_base(key)
+        raise ValueError(self.mode)
+
+    # ------------------------------------------------------------------
+    def assemble(self, trainable: PyTree, base: PyTree,
+                 gen_ws: list) -> PyTree:
+        """Produce the effective model params for a forward pass.
+
+        stop_gradient on the frozen trees is load-bearing: without it the
+        layer-scan transpose materializes fp32 cotangent STACKS for every
+        frozen base weight (params-sized x4 bytes — 12+ GB/device on the
+        405B dry-run) that XLA cannot DCE out of the while carry."""
+        if self.mode != "full":
+            base = jax.lax.stop_gradient(base)
+            gen_ws = jax.lax.stop_gradient(gen_ws)
+        if self.mode in ("mcnc", "pranc"):
+            expand_fn = kernel_expand_fn(self.gen_cfg, gen_ws,
+                                         use_pallas=self.use_pallas,
+                                         interpret=self.interpret)
+            deltas = expand_tree(self.plan, gen_ws, trainable,
+                                 expand_fn=expand_fn)
+            return apply_deltas(base, deltas)
+        if self.mode == "nola":
+            values = expand_nola(self.nola_plan, trainable)
+            flat = dict(flatten_with_paths(base))
+            for path, v in flatten_with_paths(values).items():
+                flat[path] = v.astype(flat[path].dtype)
+            return unflatten_paths(flat)
+        if self.mode == "lora":
+            flat = dict(flatten_with_paths(base))
+            for path, v in flatten_with_paths(trainable).items():
+                flat[path] = v
+            return unflatten_paths(flat)
+        if self.mode == "full":
+            return trainable
+        raise ValueError(self.mode)
+
+    def loss(self, params: PyTree, batch: dict) -> tuple[Array, dict]:
+        if self.arch.kind == "encdec":
+            return encdec.loss_fn(self.model_cfg, params, batch)
+        return lm.loss_fn(self.model_cfg, params, batch)
+
+
+def build_bundle(arch: ArchSpec, mode: str = "mcnc", *, smoke: bool = False,
+                 tp_degree: int = 1, use_pallas: bool = False,
+                 interpret: bool = False,
+                 generator: GeneratorConfig | None = None,
+                 adapter_rank: int | None = None,
+                 n_bases: int = 64) -> TaskBundle:
+    model_cfg = arch.smoke_config if smoke else arch.config
+    specs_fn = (encdec.param_specs if arch.kind == "encdec"
+                else lm.param_specs)
+    base_specs = specs_fn(model_cfg)
+    adapter_cfg = None
+    if mode != "full":
+        adapter_cfg = AdapterConfig(
+            rank=adapter_rank or arch.adapter_rank,
+            seed=17, dtype=model_cfg.param_dtype)
+        abstract_adapters = jax.eval_shape(
+            functools.partial(init_adapters, cfg=adapter_cfg), base_specs)
+        base_specs = merge_adapters_into_params(base_specs,
+                                                abstract_adapters)
+    base_pspecs = model_param_pspecs(base_specs)
+
+    gen_cfg = None
+    plan = None
+    nola_plan = None
+    if mode == "mcnc":
+        gen_cfg = generator or arch.generator
+    elif mode == "pranc":
+        g = generator or arch.generator
+        gen_cfg = pranc_generator(k=g.k, d=g.d, seed=g.seed)
+    if mode in ("mcnc", "pranc"):
+        plan = plan_compression(base_specs, base_pspecs, gen_cfg,
+                                policy=ADAPTER_POLICY, tp_degree=tp_degree)
+        trainable_specs = jax.eval_shape(
+            functools.partial(init_mcnc_state, plan))
+        trainable_pspecs = mcnc_state_partition_specs(plan)
+    elif mode == "nola":
+        nola_plan = plan_nola(base_specs, NolaConfig(n_bases=n_bases))
+        trainable_specs = jax.eval_shape(
+            functools.partial(init_nola_state, nola_plan))
+        trainable_pspecs = jax.tree.map(lambda _: P(), trainable_specs)
+    elif mode == "lora":
+        flat = flatten_with_paths(base_specs)
+        t = {p: v for p, v in flat.items() if "_lora_" in p}
+        trainable_specs = unflatten_paths(t)
+        fp = flatten_with_paths(base_pspecs)
+        trainable_pspecs = unflatten_paths({p: fp[p] for p in t})
+    elif mode == "full":
+        trainable_specs = base_specs
+        trainable_pspecs = base_pspecs
+    else:
+        raise ValueError(mode)
+
+    return TaskBundle(arch=arch, mode=mode, model_cfg=model_cfg,
+                      base_specs=base_specs, base_pspecs=base_pspecs,
+                      trainable_specs=trainable_specs,
+                      trainable_pspecs=trainable_pspecs, gen_cfg=gen_cfg,
+                      plan=plan, nola_plan=nola_plan,
+                      adapter_cfg=adapter_cfg, use_pallas=use_pallas,
+                      interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Train step.
+# ---------------------------------------------------------------------------
+
+def make_train_step(bundle: TaskBundle, opt_cfg: AdamConfig,
+                    num_microbatches: int = 1,
+                    lr_schedule: Callable | None = None):
+    """Returns step(trainable, opt_state, base, gen_ws, batch, step_idx)
+    -> (trainable, opt_state, metrics). Gradient accumulation over
+    microbatches runs as a lax.scan; for MCNC modes the accumulator is the
+    (tiny) compressed state — the paper's compression applied to DP traffic
+    and accumulation memory alike."""
+
+    def loss_for(trainable, base, gen_ws, mbatch):
+        params = bundle.assemble(trainable, base, gen_ws)
+        loss, metrics = bundle.loss(params, mbatch)
+        return loss, metrics
+
+    def step(trainable, opt_state, base, gen_ws, batch, step_idx):
+        grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+        if num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(trainable, base, gen_ws, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                mb = b // num_microbatches
+                return x.reshape(num_microbatches, mb, *x.shape[1:])
+
+            mbatches = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, jnp.float32),
+                trainable)
+
+            def acc_body(carry, mbatch):
+                g_acc, loss_acc = carry
+                (loss, _), grads = grad_fn(trainable, base, gen_ws, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, loss_acc + loss), None
+
+            (g_sum, loss_sum), _ = jax.lax.scan(
+                acc_body, (zero_g, jnp.zeros(())), mbatches)
+            grads = jax.tree.map(lambda g: g / num_microbatches, g_sum)
+            loss = loss_sum / num_microbatches
+            metrics = {"loss": loss}
+
+        lr = lr_schedule(step_idx) if lr_schedule else None
+        trainable, opt_state, opt_metrics = adam_update(
+            opt_cfg, trainable, grads, opt_state, lr=lr)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return trainable, opt_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (prefill + decode) — expansion on the fly, paper Table 4.
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(bundle: TaskBundle, cache_cap: int):
+    cfg = bundle.model_cfg
+
+    def step(trainable, base, gen_ws, batch):
+        params = bundle.assemble(trainable, base, gen_ws)
+        if bundle.arch.kind == "encdec":
+            return encdec.prefill(cfg, params, batch["frames"],
+                                  batch["inputs"], cache_cap)
+        return lm.prefill(cfg, params, batch["inputs"], cache_cap)
+
+    return step
+
+
+def make_decode_step(bundle: TaskBundle):
+    cfg = bundle.model_cfg
+
+    def step(trainable, base, gen_ws, cache, tokens, pos):
+        params = bundle.assemble(trainable, base, gen_ws)
+        if bundle.arch.kind == "encdec":
+            return encdec.decode_step(cfg, params, cache, tokens, pos)
+        return lm.decode_step(cfg, params, cache, tokens, pos)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (assignment: ShapeDtypeStruct stand-ins, no allocation).
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: ArchSpec, shape: ShapeSpec, *, smoke: bool = False
+                ) -> dict:
+    """Abstract batch for one assignment cell."""
+    cfg = arch.smoke_config if smoke else arch.config
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    if arch.kind == "encdec":
+        if shape.kind == "train":
+            return {"frames": sd((b, s, cfg.d_model), f32),
+                    "inputs": sd((b, s), i32), "targets": sd((b, s), i32)}
+        if shape.kind == "prefill":
+            return {"frames": sd((b, s, cfg.d_model), f32),
+                    "inputs": sd((b, s), i32)}
+        return {"tokens": sd((b,), i32)}
+    if getattr(cfg, "input_mode", "tokens") == "embeddings":
+        if shape.kind == "train":
+            return {"inputs": sd((b, s, cfg.d_model), f32),
+                    "targets": sd((b, s), i32)}
+        if shape.kind == "prefill":
+            return {"inputs": sd((b, s, cfg.d_model), f32)}
+        return {"tokens": sd((b, cfg.d_model), f32)}
+    if shape.kind == "train":
+        return {"inputs": sd((b, s), i32), "targets": sd((b, s), i32)}
+    if shape.kind == "prefill":
+        return {"inputs": sd((b, s), i32)}
+    return {"tokens": sd((b,), i32)}
+
+
+def cache_specs(arch: ArchSpec, shape: ShapeSpec, *, smoke: bool = False
+                ) -> PyTree:
+    cfg = arch.smoke_config if smoke else arch.config
+    b, s = shape.global_batch, shape.seq_len
+    if arch.kind == "encdec":
+        fn = functools.partial(encdec.init_cache, cfg, b, s, s)
+    else:
+        fn = functools.partial(lm.init_cache, cfg, b, s)
+    return jax.eval_shape(fn)

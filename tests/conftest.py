@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run on the single real CPU device; ONLY the dry-run subprocesses get
+# placeholder devices (assignment MULTI-POD DRY-RUN step 0 note).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

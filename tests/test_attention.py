@@ -1,0 +1,122 @@
+"""Blocked (flash-style) attention vs the naive oracle — fwd + grads,
+hypothesis shape sweep, decode/cross paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.layers.attention import (block_pair_list, blocked_attention,
+                                    cross_attention, decode_attention)
+
+
+def naive(q, k, v, causal, window=None):
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    sc = jnp.einsum("bqhgd,bkhd->bqhgk", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) / np.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    sc = jnp.where(mask[None, :, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, -1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, d).astype(q.dtype)
+
+
+@given(s=st.integers(3, 40), hkv=st.sampled_from([1, 2, 3]),
+       g=st.sampled_from([1, 2, 4]), chunk=st.sampled_from([4, 8, 16]),
+       causal=st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_blocked_matches_naive_property(s, hkv, g, chunk, causal):
+    d = 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, s, hkv * g, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, s, hkv, d))
+    got = blocked_attention(q, k, v, chunk=chunk, causal=causal)
+    want = naive(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=5e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 9),
+                                           (False, None)])
+def test_grads_match_naive(causal, window):
+    q = jax.random.normal(jax.random.PRNGKey(5), (2, 37, 4, 8))
+    k = jax.random.normal(jax.random.PRNGKey(6), (2, 37, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(7), (2, 37, 2, 8))
+    g_out = jax.random.normal(jax.random.PRNGKey(8), (2, 37, 4, 8))
+
+    def f_b(q, k, v):
+        return jnp.sum(blocked_attention(q, k, v, chunk=8, causal=causal,
+                                         window=window) * g_out)
+
+    def f_n(q, k, v):
+        return jnp.sum(naive(q, k, v, causal, window) * g_out)
+
+    gb = jax.grad(f_b, argnums=(0, 1, 2))(q, k, v)
+    gn = jax.grad(f_n, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gb, gn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4,
+                                   atol=3e-4)
+
+
+def test_pair_list_counts():
+    # causal lower triangle
+    assert len(block_pair_list(4, 4, 8, True, None)) == 10
+    # window limits reach
+    pairs = block_pair_list(8, 8, 8, True, 8)
+    assert all(i - 1 <= j <= i for i, j in pairs)
+    # cross: full rectangle
+    assert len(block_pair_list(3, 5, 8, False, None)) == 15
+
+
+def test_decode_matches_full_attention():
+    b, s, hkv, g, d = 2, 12, 2, 2, 8
+    q_all = jax.random.normal(jax.random.PRNGKey(0), (b, s, hkv * g, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, d))
+    full = naive(q_all, k, v, causal=True)
+    # decode the last position against the HEAD-MAJOR cache (B, H, S, D)
+    out = decode_attention(q_all[:, -1:], k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3), jnp.int32(s))
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(full[:, -1]), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_decode_ring_window():
+    """Ring cache of size W holds the last W tokens in slot p % W; decode
+    must equal windowed attention over the full history."""
+    b, s, h, d, w = 1, 20, 2, 4, 8
+    q_all = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+    full = naive(q_all, k, v, causal=True, window=w)
+    # head-major ring cache (B, H, W, D)
+    ring_k = jnp.zeros((b, h, w, d))
+    ring_v = jnp.zeros((b, h, w, d))
+    for t in range(s):
+        ring_k = ring_k.at[:, :, t % w].set(k[:, t])
+        ring_v = ring_v.at[:, :, t % w].set(v[:, t])
+    out = decode_attention(q_all[:, -1:], ring_k, ring_v, jnp.int32(s),
+                           ring=True)
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(full[:, -1]), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_cross_attention_matches_naive():
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 4, 8))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 17, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 17, 2, 8))
+    got = cross_attention(q, k, v)
+    want = naive(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)

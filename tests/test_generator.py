@@ -1,0 +1,93 @@
+"""Generator unit + property tests (paper S3.1, Table 10, A.6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.generator import (DEFAULT_GENERATOR, LLM_GENERATOR,
+                                  GeneratorConfig, expand_chunks,
+                                  generator_forward, init_generator)
+
+
+def test_seed_determinism():
+    cfg = GeneratorConfig(k=5, d=300, width=32, seed=42)
+    w1 = init_generator(cfg)
+    w2 = init_generator(cfg)
+    for a, b in zip(w1, w2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    w3 = init_generator(GeneratorConfig(k=5, d=300, width=32, seed=43))
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(w1, w3))
+
+
+def test_zero_init_gives_zero_delta():
+    """No biases + sin(0)=0 => alpha=0 maps to exactly 0 (paper A.3)."""
+    for act in ["sine", "relu", "none"]:
+        cfg = GeneratorConfig(k=9, d=256, width=64, activation=act)
+        ws = init_generator(cfg)
+        out = expand_chunks(cfg, ws, jnp.zeros((4, 9)), jnp.ones((4,)))
+        assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_paper_default_compression_rate():
+    """A.4: (9+1)/5000 = 0.002."""
+    assert DEFAULT_GENERATOR.params_per_chunk / DEFAULT_GENERATOR.d == \
+        pytest.approx(0.002)
+
+
+def test_paper_a6_flops_exactly():
+    """Paper A.6: one generator forward = 2*(5*32+32*32+32*5000) + 5000
+    (incl. the beta scale)."""
+    assert LLM_GENERATOR.flops_per_chunk() == \
+        2 * (5 * 32 + 32 * 32 + 32 * 5000) + 5000
+
+
+@given(k=st.integers(1, 16), d=st.integers(8, 600),
+       width=st.integers(4, 100), depth=st.integers(2, 4))
+@settings(max_examples=20, deadline=None)
+def test_shapes_property(k, d, width, depth):
+    cfg = GeneratorConfig(k=k, d=d, width=width, depth=depth)
+    ws = init_generator(cfg)
+    assert len(ws) == depth
+    out = generator_forward(cfg, ws, jnp.ones((3, k)))
+    assert out.shape == (3, d)
+    assert not np.isnan(np.asarray(out)).any()
+
+
+def test_activation_variants_run():
+    for act in ["sine", "sigmoid", "relu", "leaky_relu", "elu", "none"]:
+        cfg = GeneratorConfig(k=4, d=64, width=16, activation=act)
+        ws = init_generator(cfg)
+        out = generator_forward(cfg, ws, jnp.ones((2, 4)))
+        assert out.shape == (2, 64)
+
+
+def test_init_variants():
+    for init, scale in [("uniform", 1.0), ("uniform", 4.0),
+                        ("normal", 1.0), ("normal", 8.0)]:
+        cfg = GeneratorConfig(k=4, d=64, width=16, init=init,
+                              init_scale=scale)
+        ws = init_generator(cfg)
+        assert not np.isnan(np.asarray(ws[1])).any()
+
+
+def test_freq_scales_first_layer_only():
+    cfg1 = GeneratorConfig(k=4, d=64, width=16, freq=1.0, activation="none",
+                           depth=2)
+    cfg2 = GeneratorConfig(k=4, d=64, width=16, freq=2.0, activation="none",
+                           depth=2)
+    ws = init_generator(cfg1)
+    a = jnp.ones((2, 4))
+    o1 = generator_forward(cfg1, ws, a)
+    o2 = generator_forward(cfg2, ws, a)
+    np.testing.assert_allclose(np.asarray(o2), 2 * np.asarray(o1),
+                               rtol=1e-6)
+
+
+def test_normalize_option():
+    cfg = GeneratorConfig(k=4, d=64, width=16, normalize=True)
+    ws = init_generator(cfg)
+    out = generator_forward(cfg, ws, jnp.ones((8, 4)))
+    norms = np.linalg.norm(np.asarray(out), axis=-1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-3)

@@ -1,0 +1,151 @@
+"""End-to-end training-mode tests over the bundle machinery (all the
+paper's methods + baselines on a reduced architecture)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core.generator import GeneratorConfig, init_generator
+from repro.core.reparam import flatten_with_paths
+from repro.optim import AdamConfig, adam_init
+from repro.train.steps import build_bundle, input_specs, make_train_step
+
+GEN = GeneratorConfig(k=5, d=500, width=32, seed=3)
+
+
+def _batch(bundle, b=4, s=32, seed=2):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0,
+                              bundle.model_cfg.vocab)
+    return {"inputs": toks, "targets": jnp.roll(toks, -1, axis=1)}
+
+
+@pytest.fixture(scope="module")
+def arch():
+    return get_arch("yi_6b")
+
+
+def test_mcnc_assemble_identity_at_init(arch):
+    """alpha=0 => assembled params == base params bit-for-bit."""
+    bundle = build_bundle(arch, "mcnc", smoke=True, generator=GEN,
+                          adapter_rank=4)
+    base = bundle.init_base(jax.random.PRNGKey(0))
+    trainable = bundle.init_trainable(jax.random.PRNGKey(1))
+    gen_ws = init_generator(bundle.gen_cfg)
+    assembled = bundle.assemble(trainable, base, gen_ws)
+    fb = flatten_with_paths(base)
+    fa = flatten_with_paths(assembled)
+    for path in fb:
+        np.testing.assert_array_equal(np.asarray(fa[path]),
+                                      np.asarray(fb[path]), err_msg=path)
+
+
+def test_mcnc_trainable_count_matches_plan(arch):
+    bundle = build_bundle(arch, "mcnc", smoke=True, generator=GEN,
+                          adapter_rank=4)
+    trainable = bundle.init_trainable(jax.random.PRNGKey(0))
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(trainable))
+    assert n == bundle.plan.trainable_params
+    # compression rate sanity: (k+1)/d-ish over the adapter set
+    rate = bundle.plan.compression_rate
+    assert rate < 2 * (GEN.k + 1) / GEN.d + 0.05
+
+
+@pytest.mark.parametrize("mode,lr", [("mcnc", 0.05), ("pranc", 0.02),
+                                     ("nola", 0.02), ("lora", 0.01)])
+def test_modes_train_and_loss_decreases(arch, mode, lr):
+    bundle = build_bundle(arch, mode, smoke=True, generator=GEN,
+                          adapter_rank=4, n_bases=8)
+    base = bundle.init_base(jax.random.PRNGKey(0))
+    trainable = bundle.init_trainable(jax.random.PRNGKey(1))
+    gen_ws = (init_generator(bundle.gen_cfg)
+              if bundle.gen_cfg is not None else [])
+    opt = adam_init(trainable)
+    step = jax.jit(make_train_step(bundle, AdamConfig(lr=lr)))
+    batch = _batch(bundle)
+    losses = []
+    for i in range(8):
+        trainable, opt, m = step(trainable, opt, base, gen_ws, batch,
+                                 jnp.int32(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 1e-3, (mode, losses)
+    assert np.isfinite(losses).all()
+
+
+def test_microbatching_matches_full_batch(arch):
+    """Gradient accumulation must give the same first-step update as the
+    unsplit batch (same global batch, loss is a token mean)."""
+    bundle = build_bundle(arch, "mcnc", smoke=True, generator=GEN,
+                          adapter_rank=4)
+    base = bundle.init_base(jax.random.PRNGKey(0))
+    gen_ws = init_generator(bundle.gen_cfg)
+    batch = _batch(bundle, b=4, s=32)
+
+    outs = []
+    for mb in (1, 2, 4):
+        trainable = bundle.init_trainable(jax.random.PRNGKey(1))
+        opt = adam_init(trainable)
+        step = jax.jit(make_train_step(bundle, AdamConfig(lr=0.05),
+                                       num_microbatches=mb))
+        trainable, opt, m = step(trainable, opt, base, gen_ws, batch,
+                                 jnp.int32(0))
+        outs.append(jax.tree.leaves(trainable))
+    for a, b in zip(outs[0], outs[1]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                                   atol=2e-5)
+    for a, b in zip(outs[0], outs[2]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                                   atol=2e-5)
+
+
+def test_pallas_and_ref_expansion_agree_in_training(arch):
+    """One train step with the Pallas (interpret) expansion must match the
+    pure-jnp expansion path."""
+    results = []
+    for use_pallas in (False, True):
+        bundle = build_bundle(arch, "mcnc", smoke=True, generator=GEN,
+                              adapter_rank=4, use_pallas=use_pallas,
+                              interpret=True)
+        base = bundle.init_base(jax.random.PRNGKey(0))
+        trainable = bundle.init_trainable(jax.random.PRNGKey(1))
+        # nudge alphas off zero so the expansion actually matters
+        trainable = jax.tree.map(
+            lambda x: x + 0.1 if x.ndim == 3 else x, trainable)
+        gen_ws = init_generator(bundle.gen_cfg)
+        opt = adam_init(trainable)
+        step = jax.jit(make_train_step(bundle, AdamConfig(lr=0.05)))
+        trainable, opt, m = step(trainable, opt, base, gen_ws,
+                                 _batch(bundle), jnp.int32(0))
+        results.append(float(m["loss"]))
+    assert results[0] == pytest.approx(results[1], rel=1e-4)
+
+
+def test_encdec_bundle_trains():
+    arch = get_arch("seamless_m4t_medium")
+    bundle = build_bundle(arch, "mcnc", smoke=True, generator=GEN,
+                          adapter_rank=4)
+    base = bundle.init_base(jax.random.PRNGKey(0))
+    trainable = bundle.init_trainable(jax.random.PRNGKey(1))
+    gen_ws = init_generator(bundle.gen_cfg)
+    opt = adam_init(trainable)
+    step = jax.jit(make_train_step(bundle, AdamConfig(lr=0.05)))
+    b, s = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                              bundle.model_cfg.vocab)
+    batch = {"frames": jax.random.normal(jax.random.PRNGKey(3),
+                                         (b, s, bundle.model_cfg.d_model)),
+             "inputs": toks, "targets": jnp.roll(toks, -1, axis=1)}
+    losses = []
+    for i in range(5):
+        trainable, opt, m = step(trainable, opt, base, gen_ws, batch,
+                                 jnp.int32(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_input_specs_cover_all_cells():
+    from repro.configs.registry import SHAPES, all_archs
+    for arch in all_archs():
+        for shape in SHAPES.values():
+            spec = input_specs(arch, shape, smoke=True)
+            assert isinstance(spec, dict) and spec

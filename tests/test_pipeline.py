@@ -1,0 +1,42 @@
+"""1F1B schedule simulator vs the closed-form bubble fraction."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.pipeline import (PipelineSpec, bubble_closed_form,
+                                    min_microbatches_for_bubble,
+                                    simulate_1f1b)
+
+
+@given(stages=st.integers(1, 6), microbatches=st.integers(1, 16))
+@settings(max_examples=40, deadline=None)
+def test_matches_closed_form_equal_times(stages, microbatches):
+    """With t_fwd == t_bwd and zero p2p, 1F1B bubble == (S-1)/(M+S-1)."""
+    spec = PipelineSpec(stages=stages, microbatches=microbatches,
+                        t_fwd=1.0, t_bwd=1.0, t_p2p=0.0)
+    out = simulate_1f1b(spec)
+    want = bubble_closed_form(stages, microbatches)
+    assert out["bubble_fraction"] == pytest.approx(want, abs=1e-9)
+
+
+def test_single_stage_has_no_bubble():
+    out = simulate_1f1b(PipelineSpec(stages=1, microbatches=4))
+    assert out["bubble_fraction"] == pytest.approx(0.0)
+
+
+def test_more_microbatches_shrink_bubble():
+    b4 = simulate_1f1b(PipelineSpec(stages=4, microbatches=4))
+    b16 = simulate_1f1b(PipelineSpec(stages=4, microbatches=16))
+    assert b16["bubble_fraction"] < b4["bubble_fraction"]
+
+
+def test_p2p_latency_increases_makespan():
+    a = simulate_1f1b(PipelineSpec(stages=4, microbatches=8, t_p2p=0.0))
+    b = simulate_1f1b(PipelineSpec(stages=4, microbatches=8, t_p2p=0.5))
+    assert b["makespan"] > a["makespan"]
+
+
+def test_min_microbatches_sizing():
+    # 8 stages at <=10% bubble needs M >= 63 (closed form)
+    m = min_microbatches_for_bubble(8, 0.10)
+    assert bubble_closed_form(8, m) <= 0.10
+    assert bubble_closed_form(8, m - 1) > 0.10

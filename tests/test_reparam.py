@@ -1,0 +1,119 @@
+"""Chunking / expansion properties (the shard-aligned layout of DESIGN S3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core.generator import GeneratorConfig, init_generator
+from repro.core.reparam import (CompressionPolicy, LeafPlan, apply_deltas,
+                                default_expand_fn, expand_leaf, expand_tree,
+                                flatten_with_paths, init_mcnc_state,
+                                plan_compression, unflatten_paths)
+
+GEN = GeneratorConfig(k=5, d=64, width=16, seed=7)
+WS = init_generator(GEN)
+EXPAND = default_expand_fn(GEN, WS)
+
+
+def test_flatten_roundtrip():
+    tree = {"a": {"b": 1, "c": {"d": 2}}, "e": 3}
+    flat = flatten_with_paths(tree)
+    assert flat == {"a/b": 1, "a/c/d": 2, "e": 3}
+    assert unflatten_paths(flat) == tree
+
+
+@given(outer=st.integers(1, 3), rows=st.integers(1, 24),
+       cols=st.integers(1, 24), tp=st.sampled_from([1, 2, 4]))
+@settings(max_examples=25, deadline=None)
+def test_expand_leaf_shard_alignment(outer, rows, cols, tp):
+    """Property: shard-aligned expansion == expanding each shard's chunks
+    independently and concatenating along the sharded dim."""
+    rows = rows * tp   # make divisible
+    shape = (outer, rows, cols) if outer > 1 else (rows, cols)
+    j = 1 if outer > 1 else 0
+    lp = LeafPlan(path="w", shape=shape, dtype=jnp.float32, sharded_dim=j,
+                  tp=tp, outer=outer if outer > 1 else 1,
+                  shard_len=rows // tp, inner=cols,
+                  chunks=-(-(1 if outer == 1 else outer) * (rows // tp)
+                           * cols // GEN.d))
+    key = jax.random.PRNGKey(0)
+    alpha = jax.random.normal(key, (tp, lp.chunks, GEN.k))
+    beta = jax.random.normal(jax.random.PRNGKey(1), (tp, lp.chunks))
+    delta = expand_leaf(lp, alpha, beta, GEN.d, EXPAND)
+    assert delta.shape == shape
+    # manual per-shard expansion
+    for s in range(tp):
+        flat = np.asarray(EXPAND(alpha[s], beta[s])).reshape(-1)
+        flat = flat[: lp.shard_numel]
+        shard = flat.reshape(lp.outer, lp.shard_len, lp.inner)
+        got = np.asarray(delta).reshape(lp.outer, tp * lp.shard_len,
+                                        lp.inner)[
+            :, s * lp.shard_len:(s + 1) * lp.shard_len]
+        # f32 matmul association differs between the batched and per-shard
+        # paths; equality is up to rounding.
+        np.testing.assert_allclose(got, shard, rtol=1e-5, atol=1e-7)
+
+
+def test_plan_policy_excludes():
+    specs = {
+        "layers": {"wq": jax.ShapeDtypeStruct((4, 64, 64), jnp.float32),
+                   "ln1_scale": jax.ShapeDtypeStruct((4, 64), jnp.float32)},
+        "embed": jax.ShapeDtypeStruct((100, 64), jnp.float32),
+    }
+    plan = plan_compression(specs, None, GEN,
+                            CompressionPolicy(min_numel=16))
+    assert "layers/wq" in plan.leaves
+    assert "layers/ln1_scale" not in plan.leaves   # norm excluded
+    assert "embed" not in plan.leaves              # embedding excluded
+    assert plan.total_model_params == 4 * 64 * 64 + 4 * 64 + 100 * 64
+
+
+def test_zero_init_state_gives_identical_params():
+    specs = {"w": jnp.ones((8, 32), jnp.float32) * 3.0}
+    plan = plan_compression(specs, None, GEN,
+                            CompressionPolicy(min_numel=1))
+    state = init_mcnc_state(plan)
+    deltas = expand_tree(plan, WS, state)
+    out = apply_deltas(specs, deltas)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(specs["w"]))
+
+
+def test_compression_rate_accounting():
+    specs = {"w": jax.ShapeDtypeStruct((100, 64), jnp.float32)}
+    plan = plan_compression(specs, None, GEN, CompressionPolicy(min_numel=1))
+    n_chunks = -(-100 * 64 // GEN.d)
+    assert plan.trainable_params == n_chunks * (GEN.k + 1)
+    assert plan.compression_rate == pytest.approx(
+        n_chunks * (GEN.k + 1) / 6400)
+
+
+def test_shard_aligned_plan_uses_partition_spec():
+    specs = {"w": jax.ShapeDtypeStruct((64, 128), jnp.float32)}
+    pspecs = {"w": P(None, "model")}
+    plan = plan_compression(specs, pspecs, GEN,
+                            CompressionPolicy(min_numel=1), tp_degree=4)
+    lp = plan.leaves["w"]
+    assert lp.tp == 4 and lp.sharded_dim == 1
+    assert lp.shard_len == 32 and lp.outer == 64 and lp.inner == 1
+    # non-divisible => falls back to replicated chunking
+    pspecs2 = {"w": P("model", None)}
+    specs2 = {"w": jax.ShapeDtypeStruct((63, 128), jnp.float32)}
+    plan2 = plan_compression(specs2, pspecs2, GEN,
+                             CompressionPolicy(min_numel=1), tp_degree=4)
+    assert plan2.leaves["w"].tp == 1
+
+
+def test_pad_tail_ignored():
+    """Last chunk's extra slots don't affect the leaf (paper S3.3)."""
+    specs = {"w": jnp.zeros((5, 7), jnp.float32)}   # 35 < d=64
+    plan = plan_compression(specs, None, GEN, CompressionPolicy(min_numel=1))
+    state = init_mcnc_state(plan)
+    flat = flatten_with_paths(state)
+    flat["w/alpha"] = jnp.ones_like(flat["w/alpha"])
+    deltas = expand_tree(plan, WS, unflatten_paths(flat))
+    full = np.asarray(EXPAND(jnp.ones((1, GEN.k)), jnp.ones((1,))))[0]
+    np.testing.assert_allclose(np.asarray(deltas["w"]).reshape(-1),
+                               full[:35], rtol=1e-6)

@@ -1,0 +1,120 @@
+"""Sharding rules + dry-run integration (multi-device paths run in
+subprocesses with placeholder host devices; see conftest note)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_arch
+from repro.core.adapters import AdapterConfig, init_adapters, merge_adapters_into_params
+from repro.models import lm
+from repro.sharding.specs import model_param_pspecs
+from repro.core.reparam import flatten_with_paths
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_param_pspec_rules():
+    arch = get_arch("yi_6b")
+    specs = lm.param_specs(arch.config)
+    adapters = jax.eval_shape(
+        lambda s: init_adapters(s, AdapterConfig(rank=8)), specs)
+    merged = merge_adapters_into_params(specs, adapters)
+    pspecs = flatten_with_paths(model_param_pspecs(merged))
+    # col-parallel: model on last dim, fsdp(data) on d
+    assert pspecs["layers/wq"] == P(None, "data", "model")
+    # row-parallel: model on -2
+    assert pspecs["layers/wo"] == P(None, "model", "data")
+    assert pspecs["layers/w_down"] == P(None, "model", "data")
+    # adapters: A inherits row-parallel in-dim; B inherits col-parallel out
+    assert pspecs["layers/wo_lora_a"] == P(None, "model", None)
+    assert pspecs["layers/wq_lora_b"] == P(None, None, "model")
+    assert pspecs["layers/wq_lora_a"] == P(None, None, None)
+    # embed: d sharded; lm_head: vocab sharded; norms replicated
+    assert pspecs["embed"] == P(None, "model")
+    assert pspecs["lm_head"] == P(None, "model")
+    assert all(a is None for a in pspecs["layers/ln1_scale"])
+
+
+def test_moe_expert_pspecs():
+    arch = get_arch("deepseek_v2_236b")
+    specs = lm.param_specs(arch.config)
+    pspecs = flatten_with_paths(model_param_pspecs(specs))
+    assert pspecs["layers/we_gate"][1] == "model"     # EP on expert dim
+    assert "data" in tuple(pspecs["layers/we_gate"])  # FSDP on a matrix dim
+
+
+def _run_dryrun(args, devices="8"):
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = devices
+    env["PYTHONPATH"] = SRC
+    env.pop("JAX_PLATFORMS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=900, env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = proc.stdout.strip().splitlines()[-1]
+    return json.loads(line)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k"])
+def test_dryrun_smoke_cells(shape):
+    """lower+compile a reduced config on an 8-device host mesh; verifies
+    the full dry-run plumbing incl. collective accounting."""
+    rec = _run_dryrun(["--arch", "yi_6b", "--shape", shape, "--smoke"])
+    assert rec["status"] == "ok"
+    assert rec["loop_cost"]["flops"] > 0
+    assert rec["memory"]["peak_per_device_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_smoke():
+    rec = _run_dryrun(["--arch", "yi_6b", "--shape", "train_4k", "--smoke",
+                       "--multi-pod"])
+    # multi-pod smoke runs on the production mesh in the real launcher;
+    # in this subprocess the mesh helper needs 512 devices, so we accept a
+    # clean failure message about device count OR success with 512.
+    assert rec["status"] in ("ok",)
+
+
+def test_long500k_skip_policy():
+    from repro.launch.dryrun import run_cell
+    rec = run_cell("llama3_405b", "long_500k")
+    assert rec["status"] == "skipped"
+    assert "quadratic" in rec["reason"]
+
+
+def test_collective_parser_on_known_hlo():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+      %all-reduce.1 = f32[16,64]{1,0} all-reduce(%dot), replica_groups=[2,4]<=[8], to_apply=%add
+      %all-gather.2 = f32[64,64]{1,0} all-gather(%x), replica_groups=[2,4]<=[8], dimensions={0}
+      %rs = f32[8,64]{1,0} reduce-scatter(%y), replica_groups=[2,4]<=[8], to_apply=%add
+    """
+    out = collective_bytes(hlo)
+    assert out["per_kind_bytes"]["all-reduce"] == 16 * 64 * 4
+    assert out["per_kind_bytes"]["all-gather"] == 64 * 64 * 4 // 4
+    assert out["per_kind_bytes"]["reduce-scatter"] == 8 * 64 * 4 * 4
+
+
+def test_hlo_cost_scan_scaling():
+    import jax.numpy as jnp
+    from repro.launch.hlo_cost import analyze
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.sin(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out.sum()
+
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                         jax.ShapeDtypeStruct((64, 64), jnp.float32)
+                         ).compile()
+    r = analyze(c.as_text())
+    expect = 7 * 2 * 64 ** 3
+    assert abs(r["flops"] - expect) / expect < 0.05
