@@ -9,7 +9,7 @@
 
 Each row = a short from-scratch direct-MCNC training run on the teacher
 stream; we validate the paper's TRENDS (monotonicity / ordering), not
-absolute MNIST numbers (no dataset in the container; see DESIGN.md S8).
+absolute MNIST numbers (no dataset in the container; see README.md §Benchmarks).
 """
 from __future__ import annotations
 

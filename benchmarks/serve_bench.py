@@ -1,0 +1,152 @@
+"""Multi-tenant serving benchmark: engine vs the seed's sequential loop.
+
+Mixed-task traffic (>= 4 task adapters) through three serving arms:
+
+  sequential  - the seed repo's loop: one request at a time, MCNC expansion
+                re-run inside EVERY prefill/decode step (paper Table 4's
+                per-step "Generation GFLOPs" paid per token);
+  engine-cold - ServeEngine with the expansion cache disabled (byte budget
+                0): continuous batching, but every admission re-expands;
+  engine      - ServeEngine with the cache on: expansion once per (task,
+                bundle version), steady-state decode is expansion-free and
+                batches all tasks' slots together.
+
+Prints tokens/s per arm plus cache counters. CPU-runnable; --smoke shrinks
+traffic for CI.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--tasks 4] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.core.generator import GeneratorConfig, init_generator
+from repro.serve import (AdapterRegistry, ExpansionCache, Metrics,
+                         ServeEngine, sequential_reference)
+from repro.train.steps import build_bundle
+
+
+def make_traffic(n_requests, tasks, vocab, prompt_lens, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_requests):
+        task = tasks[i % len(tasks)]
+        plen = int(prompt_lens[i % len(prompt_lens)])
+        prompt = rng.integers(0, vocab, plen).tolist()
+        out.append((task, prompt, max_new))
+    return out
+
+
+def run_engine(bundle, base, gen_ws, registry, traffic, *, n_slots,
+               cache_cap, byte_budget):
+    cache = ExpansionCache(byte_budget)
+    engine = ServeEngine(bundle, base, gen_ws, registry, n_slots=n_slots,
+                         cache_cap=cache_cap, expansion_cache=cache,
+                         metrics=Metrics())
+    # warmup: run the FULL traffic once untimed so every (prompt_len,
+    # prefill-group-size) shape is compiled before the measured window —
+    # mirrors run_sequential's per-length warmup; then reset all state
+    for t, p, m in traffic:
+        engine.submit(t, p, m)
+    engine.run_until_idle()
+    cache.clear()
+    cache.reset_stats()
+    engine.metrics = Metrics()      # drop compile-dominated warmup latencies
+
+    t0 = time.perf_counter()
+    reqs = [engine.submit(t, p, m) for t, p, m in traffic]
+    engine.run_until_idle()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.generated) for r in reqs)
+    return tokens, dt, engine
+
+
+def run_sequential(bundle, base, gen_ws, states, traffic, *, cache_cap):
+    # warmup: compile once per distinct prompt length, 2 tokens each
+    dedup = {len(p): (t, p, 2) for t, p, _ in traffic}
+    sequential_reference(bundle, base, gen_ws, states,
+                         list(dedup.values()), cache_cap=cache_cap)
+    t0 = time.perf_counter()
+    outs = sequential_reference(bundle, base, gen_ws, states, traffic,
+                                cache_cap=cache_cap)
+    dt = time.perf_counter() - t0
+    return sum(len(o) for o in outs), dt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--n-slots", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny traffic for CI")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = max(args.tasks, 6)
+        args.max_new = 4
+
+    arch = get_arch("yi_6b")
+    gen = GeneratorConfig(k=5, d=1000, width=32, seed=0)
+    bundle = build_bundle(arch, "mcnc", smoke=True, generator=gen,
+                          adapter_rank=4)
+    base = bundle.init_base(jax.random.PRNGKey(0))
+    gen_ws = init_generator(gen)
+
+    tasks = [f"task{i}" for i in range(args.tasks)]
+    states = {t: bundle.synthetic_trainable(i) for i, t in enumerate(tasks)}
+
+    root = tempfile.mkdtemp(prefix="serve_bench_")
+    registry = AdapterRegistry(root)
+    for t in tasks:
+        registry.publish(t, states[t], gen, adapter={"rank": 4})
+    n_tp = bundle.plan.trainable_params
+    print(f"# {args.tasks} task adapters x {n_tp} trainable params "
+          f"({n_tp * 4 / 1024:.1f} KiB/bundle), {args.requests} requests, "
+          f"{args.max_new} new tokens each")
+
+    prompt_lens = (8, 16) if args.smoke else (8, 16, 24)
+    cache_cap = max(prompt_lens) + args.max_new + 1
+    traffic = make_traffic(args.requests, tasks, bundle.model_cfg.vocab,
+                           prompt_lens, args.max_new)
+
+    seq_tok, seq_dt = run_sequential(bundle, base, gen_ws, states, traffic,
+                                     cache_cap=cache_cap)
+    cold_tok, cold_dt, cold_eng = run_engine(
+        bundle, base, gen_ws, registry, traffic, n_slots=args.n_slots,
+        cache_cap=cache_cap, byte_budget=0)
+    hot_tok, hot_dt, hot_eng = run_engine(
+        bundle, base, gen_ws, registry, traffic, n_slots=args.n_slots,
+        cache_cap=cache_cap, byte_budget=None)
+
+    rows = [("sequential", seq_tok, seq_dt),
+            ("engine-cold-cache", cold_tok, cold_dt),
+            ("engine-cached", hot_tok, hot_dt)]
+    print(f"{'arm':<20}{'gen tokens':>11}{'seconds':>9}{'tok/s':>9}")
+    for name, tok, dt in rows:
+        print(f"{name:<20}{tok:>11}{dt:>9.2f}{tok / dt:>9.1f}")
+    for name, eng in [("cold", cold_eng), ("cached", hot_eng)]:
+        print(f"# {name} cache: {eng.cache.stats()}")
+    snap = hot_eng.metrics.snapshot()
+    print(f"# cached engine: {snap['decode_steps']} decode steps, "
+          f"{snap['prefill_batches']} prefill batches, "
+          f"ttft p50 {snap['ttft_s']['p50'] * 1e3:.1f} ms")
+    speedup = (hot_tok / hot_dt) / (seq_tok / seq_dt)
+    print(f"# cached engine vs sequential: {speedup:.2f}x tokens/s")
+    if speedup <= 1.0:
+        raise SystemExit("expansion cache did not beat sequential baseline")
+
+
+if __name__ == "__main__":
+    main()

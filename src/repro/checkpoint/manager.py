@@ -32,7 +32,7 @@ from repro.core.reparam import flatten_with_paths, unflatten_paths
 PyTree = Any
 
 
-def _tree_to_arrays(tree: PyTree) -> dict[str, np.ndarray]:
+def tree_to_arrays(tree: PyTree) -> dict[str, np.ndarray]:
     flat = flatten_with_paths(tree)
     out = {}
     for path, leaf in flat.items():
@@ -41,7 +41,7 @@ def _tree_to_arrays(tree: PyTree) -> dict[str, np.ndarray]:
     return out
 
 
-def _arrays_to_tree(arrays: dict[str, np.ndarray]) -> PyTree:
+def arrays_to_tree(arrays: dict[str, np.ndarray]) -> PyTree:
     return unflatten_paths({k.replace("|", "/"): v
                             for k, v in arrays.items()})
 
@@ -54,6 +54,70 @@ def _content_hash(arrays: dict[str, np.ndarray]) -> str:
         h.update(str(arrays[key].shape).encode())
         h.update(np.ascontiguousarray(arrays[key]).tobytes())
     return h.hexdigest()
+
+
+def write_artifact(final_dir: str, arrays: dict[str, np.ndarray],
+                   manifest_extra: dict | None = None) -> dict:
+    """Atomically publish {arrays.npz, manifest.json} at `final_dir`.
+
+    Write to a temp dir next to the target, fsync, rename — a crash mid-write
+    never leaves a partial artifact; an existing artifact is replaced whole.
+    The manifest records a content hash verified on read. Shared by the
+    checkpoint manager and the serving adapter registry (repro.serve).
+    Returns the manifest dict.
+    """
+    parent = os.path.dirname(os.path.abspath(final_dir)) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = tempfile.mkdtemp(prefix=".tmp_artifact_", dir=parent)
+    try:
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest = {"hash": _content_hash(arrays), "time": time.time(),
+                    "n_arrays": len(arrays)}
+        manifest.update(manifest_extra or {})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        # Replace via rename-aside, not rmtree-then-rename: a crash between
+        # those two would lose the live artifact entirely (fatal for the
+        # registry's hot-swap of a serving bundle). The dot-prefixed aside
+        # name keeps it invisible to directory listings.
+        aside = None
+        if os.path.exists(final_dir):
+            aside = os.path.join(parent,
+                                 "." + os.path.basename(final_dir) + ".old")
+            if os.path.exists(aside):
+                shutil.rmtree(aside)
+            os.rename(final_dir, aside)
+        try:
+            os.rename(tmp, final_dir)   # atomic publish
+        except Exception:
+            if aside is not None and not os.path.exists(final_dir):
+                os.rename(aside, final_dir)     # restore the old artifact
+            raise
+        if aside is not None:
+            shutil.rmtree(aside, ignore_errors=True)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return manifest
+
+
+def read_artifact(final_dir: str, *, verify: bool = True
+                  ) -> tuple[dict[str, np.ndarray], dict]:
+    """Read an artifact written by write_artifact; verify the content hash."""
+    with open(os.path.join(final_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(final_dir, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    if verify:
+        h = _content_hash(arrays)
+        if h != manifest["hash"]:
+            raise IOError(f"artifact {final_dir} corrupt: hash mismatch")
+    return arrays, manifest
 
 
 class CheckpointManager:
@@ -75,7 +139,7 @@ class CheckpointManager:
         return os.path.join(self.dir, f"step_{step:010d}")
 
     def save(self, step: int, state: PyTree, metadata: dict | None = None):
-        arrays = _tree_to_arrays(state)     # host capture happens now
+        arrays = tree_to_arrays(state)     # host capture happens now
         if self._q is not None:
             self._q.put((step, arrays, metadata or {}))
             return
@@ -98,26 +162,8 @@ class CheckpointManager:
             raise self._errors[0]
 
     def _write(self, step: int, arrays: dict, metadata: dict):
-        final = self._step_dir(step)
-        tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=self.dir)
-        try:
-            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
-                np.savez(f, **arrays)
-                f.flush()
-                os.fsync(f.fileno())
-            manifest = {"step": step, "hash": _content_hash(arrays),
-                        "time": time.time(), "metadata": metadata,
-                        "n_arrays": len(arrays)}
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-                f.flush()
-                os.fsync(f.fileno())
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)       # atomic publish
-        except Exception:
-            shutil.rmtree(tmp, ignore_errors=True)
-            raise
+        write_artifact(self._step_dir(step), arrays,
+                       {"step": step, "metadata": metadata})
         self._gc()
 
     def _gc(self):
@@ -144,13 +190,5 @@ class CheckpointManager:
         step = self.latest_step() if step is None else step
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = self._step_dir(step)
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        with np.load(os.path.join(d, "arrays.npz")) as z:
-            arrays = {k: z[k] for k in z.files}
-        if verify:
-            h = _content_hash(arrays)
-            if h != manifest["hash"]:
-                raise IOError(f"checkpoint {d} corrupt: hash mismatch")
-        return step, _arrays_to_tree(arrays), manifest.get("metadata", {})
+        arrays, manifest = read_artifact(self._step_dir(step), verify=verify)
+        return step, arrays_to_tree(arrays), manifest.get("metadata", {})

@@ -1,6 +1,6 @@
 """hymba-1.5b [hybrid; arXiv:2411.13676]: 32L d=1600 25H (GQA kv=5)
 d_ff=5504 vocab=32001, ssm_state=16 — parallel attention + mamba heads.
-Deviation noted in DESIGN.md: all layers use sliding-window attention
+Deviation noted in README.md §Architectures: all layers use sliding-window attention
 (window=1024) with the mamba path carrying global context, so the long_500k
 decode cache stays O(window) + O(state)."""
 from repro.configs.registry import ArchSpec

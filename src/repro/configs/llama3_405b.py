@@ -1,7 +1,7 @@
 """llama3-405b [dense; arXiv:2407.21783]: 126L d=16384 128H (GQA kv=8)
 d_ff=53248 vocab=128256. Full-FT optimizer state alone would need ~25GB/chip
 on 256 chips; the MCNC-PEFT train step (paper's LLM regime) is what fits —
-see DESIGN.md S5."""
+see README.md §Architectures."""
 from repro.configs.registry import ArchSpec
 from repro.models.lm import ModelConfig
 

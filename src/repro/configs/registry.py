@@ -1,4 +1,4 @@
-"""Assigned architectures x input shapes (see DESIGN.md S5) + paper configs.
+"""Assigned architectures x input shapes (see README.md §Architectures) + paper configs.
 
 Each architecture file exports ARCH: ArchSpec. This registry collects them
 and defines the four assignment shapes. `--arch <id>` in the launchers
@@ -36,10 +36,10 @@ class ArchSpec:
     kind: str                   # lm | encdec
     config: Any                 # ModelConfig | EncDecConfig (full size)
     smoke_config: Any           # reduced same-family config for CPU tests
-    quadratic_attention: bool   # True => long_500k skipped (DESIGN.md S5)
+    quadratic_attention: bool   # True => long_500k skipped (README.md §Architectures)
     adapter_rank: int = 8
     generator: GeneratorConfig = LLM_GENERATOR
-    # train_4k execution knobs (memory fitting; see DESIGN.md S5)
+    # train_4k execution knobs (memory fitting; see README.md §Architectures)
     train_microbatches: int = 1
     seq_shard: bool = True
     notes: str = ""

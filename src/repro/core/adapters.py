@@ -109,9 +109,21 @@ def split_adapters(params: PyTree) -> tuple[PyTree, PyTree]:
 
 def lora_apply(x: Array, a: Array | None, b: Array | None,
                scale: float = 1.0) -> Array:
-    """((x @ A) @ B) * scale, or 0 if no adapter. x: (..., m)."""
+    """((x @ A) @ B) * scale, or 0 if no adapter. x: (..., m).
+
+    Per-example adapters (multi-tenant serving, repro.serve): when a/b carry
+    one extra leading dim matching x's batch dim — a: (B, m, r), b: (B, r, n)
+    against x: (B, ..., m) — each batch row gets its own adapter. This is how
+    mixed-task decode batches apply a different task's LoRA per slot without
+    merging (paper Table 4).
+    """
     if a is None or b is None:
         return jnp.zeros(x.shape[:-1] + (0,), x.dtype)  # caller guards
+    if a.ndim == 3 and x.ndim >= 2 and a.shape[-2] == x.shape[-1] \
+            and a.shape[0] == x.shape[0]:
+        h = jnp.einsum("b...m,bmr->b...r", x, a.astype(x.dtype))
+        y = jnp.einsum("b...r,brn->b...n", h, b.astype(x.dtype))
+        return y * scale
     h = jnp.einsum("...m,mr->...r", x, a.astype(x.dtype))
     y = jnp.einsum("...r,rn->...n", h, b.astype(x.dtype))
     return y * scale
@@ -120,7 +132,7 @@ def lora_apply(x: Array, a: Array | None, b: Array | None,
 def dense(x: Array, w: Array, lora_a: Array | None = None,
           lora_b: Array | None = None, scale: float = 1.0) -> Array:
     """y = x @ W (+ unmerged LoRA path). The universal linear used by every
-    model; adapters are applied unmerged (DESIGN.md S2/serve)."""
+    model; adapters are applied unmerged (README.md §Serving walkthrough)."""
     y = jnp.einsum("...m,mn->...n", x, w.astype(x.dtype))
     if lora_a is not None and lora_b is not None:
         y = y + lora_apply(x, lora_a, lora_b, scale)

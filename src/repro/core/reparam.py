@@ -6,7 +6,7 @@ delta_chunk = beta * phi(alpha). The chunk *order* is an arbitrary fixed
 permutation (paper S3.3 simply uses flatten order and pads the tail), so for
 TPU tensor-parallel execution we chunk within each (tensor, model-shard)
 block instead: expansion becomes 100% local to every device (zero collectives
-added by MCNC). See DESIGN.md S3.2.
+added by MCNC). See README.md §Design notes (shard-aligned chunking).
 
 A leaf of shape S with model-sharded dim j is viewed as a 3D block
 (outer, shard_len, inner) per shard, flattened row-major, and chunked:

@@ -1,5 +1,5 @@
 """Deterministic synthetic data pipelines (no datasets ship in this
-container; see DESIGN.md S8 faithfulness ledger).
+container; see README.md §Benchmarks faithfulness notes).
 
 Design points that matter at cluster scale and are preserved here:
   * shard-aware: each data-parallel rank derives its slice of the global

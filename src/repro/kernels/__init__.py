@@ -1,4 +1,12 @@
 # Compute hot-spot the paper itself optimizes (Table 4: "Generation GFLOPs",
 # serving throughput): on-the-fly MCNC expansion. Pallas TPU kernel + pure-jnp
-# oracle. See EXAMPLE.md for the layout convention.
+# oracle. See README.md (Serving) for the layout convention.
+
+# jax renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams; the kernels use
+# the new name, so alias it on older jax (0.4.x) before they import pltpu.
+from jax.experimental.pallas import tpu as _pltpu
+
+if not hasattr(_pltpu, "CompilerParams"):
+    _pltpu.CompilerParams = _pltpu.TPUCompilerParams
+
 from repro.kernels.ops import mcnc_expand, kernel_expand_fn

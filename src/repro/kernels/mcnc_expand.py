@@ -4,7 +4,7 @@ Computes out = sin(sin(alpha @ W1 * freq) @ W2) @ W3 * beta for N chunks in a
 single kernel: the paper's generator forward (its Table-4 hot spot) without
 HBM round-trips between the three GEMMs.
 
-TPU mapping (DESIGN.md S3.1): grid = (N/bn, d/bd). The hidden activation
+TPU mapping (README.md §Design notes): grid = (N/bn, d/bd). The hidden activation
 h2 = sin(sin(a W1 f) W2) is only (bn, h) — tiny relative to the (bn, d)
 output — so it is computed once per chunk-block (at j == 0) into a VMEM
 scratch buffer and reused across all d-tiles. W1/W2 stay fully resident in

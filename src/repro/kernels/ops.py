@@ -1,6 +1,6 @@
 """Jit'd public wrappers for the MCNC kernels, with padding, custom VJP, and
 an XLA (pure-jnp) fallback used by the dry-run (Pallas targets TPU; interpret
-mode is the CPU correctness path, see DESIGN.md S7)."""
+mode is the CPU correctness path, see README.md §Design notes)."""
 from __future__ import annotations
 
 import functools

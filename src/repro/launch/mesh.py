@@ -3,7 +3,7 @@
 Defined as functions so importing this module never touches jax device
 state. Single pod: (data=16, model=16) = 256 chips. Multi-pod: 2 pods x 256
 = 512 chips with the 'pod' axis as outer data parallelism over DCN
-(DESIGN.md S6).
+(README.md §Design notes, sharding).
 """
 from __future__ import annotations
 

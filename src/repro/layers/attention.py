@@ -229,8 +229,16 @@ def masked_cache_write(cache, new, pos, axis: int):
     this is pure elementwise compute — shard-LOCAL for any sharding of
     `axis`. (A traced-position DUS into the sequence-sharded decode cache
     made GSPMD replicate the entire stacked cache per step: +63 GB/device
-    and a 16.9 GB all-to-all per layer on the 405B dry-run.)"""
+    and a 16.9 GB all-to-all per layer on the 405B dry-run.)
+
+    `pos` may be a scalar (one position for the whole batch) or a (B,)
+    vector (per-slot positions — continuous batching, repro.serve), in which
+    case batch must be cache axis 0.
+    """
     idx = jax.lax.broadcasted_iota(jnp.int32, cache.shape, axis)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 1:
+        pos = pos.reshape((-1,) + (1,) * (cache.ndim - 1))
     return jnp.where(idx == pos, new.astype(cache.dtype), cache)
 
 
@@ -240,9 +248,10 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
     """One-step attention against a HEAD-MAJOR cache.
 
     q: (B, 1, Hq, D); k_cache/v_cache: (B, Hkv, Smax, D); cache_len: ()
-    = number of valid entries INCLUDING the current token (already written).
-    ring=True means the cache is a ring buffer that is fully valid once
-    cache_len >= Smax (sliding-window decode).
+    or (B,) = number of valid entries INCLUDING the current token (already
+    written) — a (B,) vector gives each batch row its own length (pooled
+    slot cache, repro.serve). ring=True means the cache is a ring buffer
+    that is fully valid once cache_len >= Smax (sliding-window decode).
 
     The cache is stored (B, H, S, D) — the layout the score dot consumes —
     because a (B, S, H, D) at-rest layout makes XLA transpose-copy the ENTIRE
@@ -260,14 +269,15 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
     sc = jnp.einsum("bqhgd,bhkd->bqhgk", qg.astype(k_cache.dtype), k_cache,
                     preferred_element_type=jnp.float32) * scale
     sc = shard(sc, "decode_scores")
-    idx = jnp.arange(smax)
+    idx = jnp.arange(smax)[None, :]                      # (1, Smax)
+    cl = jnp.asarray(cache_len).reshape(-1, 1)           # (B or 1, 1)
     if ring:
-        valid = idx < jnp.minimum(cache_len, smax)
+        valid = idx < jnp.minimum(cl, smax)
     else:
-        valid = idx < cache_len
+        valid = idx < cl
         if window is not None:
-            valid &= idx > cache_len - 1 - window
-    sc = jnp.where(valid[None, None, None, None, :], sc, NEG_INF)
+            valid &= idx > cl - 1 - window
+    sc = jnp.where(valid[:, None, None, None, :], sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bqhgk,bhkd->bqhgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)

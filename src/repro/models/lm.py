@@ -220,8 +220,11 @@ def _gqa_train(x, p, cfg: ModelConfig, positions):
 
 
 def _gqa_decode(x, p, cfg: ModelConfig, cache, pos):
-    """x: (B,1,d); cache: {"k": (B,Hkv,Smax,hd), "v": ...} (head-major)."""
-    q, k, v = _gqa_project(x, p, cfg, pos[None])
+    """x: (B,1,d); cache: {"k": (B,Hkv,Smax,hd), "v": ...} (head-major).
+    pos: () shared position, or (B,) per-row positions (pooled slot cache,
+    repro.serve)."""
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos[:, None]
+    q, k, v = _gqa_project(x, p, cfg, positions)
     k = k.transpose(0, 2, 1, 3)                 # (B, Hkv, 1, hd)
     v = v.transpose(0, 2, 1, 3)
     slot = jnp.mod(pos, cache["k"].shape[2]) if cfg.window is not None \
@@ -409,8 +412,12 @@ def prefill(cfg: ModelConfig, params: PyTree, inputs: Array,
 
 def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
                 tokens: Array, pos: Array) -> tuple[Array, PyTree]:
-    """tokens: (B,) int32 (or (B, d) embeddings); pos: () current index.
-    Returns (logits (B, vocab), updated cache)."""
+    """tokens: (B,) int32 (or (B, d) embeddings); pos: () current index,
+    or (B,) per-row indices (continuous batching — GQA/hybrid/RWKV only;
+    MLA decode keeps a shared position). Returns (logits (B, vocab),
+    updated cache)."""
+    if jnp.ndim(pos) == 1:
+        assert cfg.attn_type != "mla", "per-row decode positions need GQA"
     if cfg.input_mode == "embeddings":
         x = tokens[:, None, :].astype(jnp.dtype(cfg.param_dtype))
     else:

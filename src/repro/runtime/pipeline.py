@@ -1,7 +1,7 @@
 """Pipeline-parallel schedule reference: 1F1B (PipeDream-flush) simulator.
 
 The assignment's production mesh (pod, data, model) carries no pipeline
-axis, so PP is not part of the dry-run configs (DESIGN.md §6) — but sizing
+axis, so PP is not part of the dry-run configs (README.md §Design notes) — but sizing
 decisions (how many microbatches make PP competitive with pure FSDP x TP at
 a given depth) still need the bubble math. This module computes exact 1F1B
 timelines for (stages, microbatches, fwd/bwd times, p2p latency) and the

@@ -1,0 +1,17 @@
+# Multi-tenant adapter serving (paper Table 4): one frozen base model, many
+# tasks' MB-scale MCNC bundles expanded on the fly — registry for the bundles,
+# byte-budgeted cache for their expansions, continuous-batching scheduler over
+# a pooled slot KV cache, and the engine tying them to the shared step
+# builders. See README.md (Serving walkthrough).
+from repro.serve.cache import ExpansionCache, tree_bytes
+from repro.serve.engine import ServeEngine, sequential_reference
+from repro.serve.metrics import Metrics
+from repro.serve.registry import AdapterBundle, AdapterRegistry
+from repro.serve.scheduler import (Request, RequestState, Scheduler,
+                                   SlotPool, StepPlan)
+
+__all__ = [
+    "AdapterBundle", "AdapterRegistry", "ExpansionCache", "Metrics",
+    "Request", "RequestState", "Scheduler", "ServeEngine", "SlotPool",
+    "StepPlan", "sequential_reference", "tree_bytes",
+]

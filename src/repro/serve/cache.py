@@ -1,0 +1,103 @@
+"""Byte-budgeted LRU cache of expanded per-task adapter weights.
+
+MCNC's serving hot spot is expansion: turning a task's (alpha, beta) bundle
+into effective LoRA factors A0+dA / B0+dB (paper Table 4 counts exactly this
+as "Generation GFLOPs"). The seed repo re-ran expansion inside *every*
+prefill/decode step; this cache runs it once per (task, bundle version) and
+lets repeat traffic skip it entirely while cold tasks pay it once.
+
+Keys are (task_id, bundle_hash) so a hot-swapped bundle (new hash) can never
+serve stale weights even without an invalidation callback; the registry's
+publish/evict notifications additionally drop dead entries eagerly.
+Values are opaque pytrees (expanded adapter leaves, or pre-merged factors);
+the budget counts their actual array bytes.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any
+
+import jax
+
+PyTree = Any
+
+Key = tuple[str, str]   # (task_id, bundle_hash)
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(tree))
+
+
+class ExpansionCache:
+    """LRU over (task_id, bundle_hash) with a byte budget.
+
+    byte_budget=None means unbounded; byte_budget=0 effectively disables
+    caching (every put is immediately evicted) — the benchmark's cache-off
+    arm uses that instead of a separate code path.
+    """
+
+    def __init__(self, byte_budget: int | None = None):
+        self.byte_budget = byte_budget
+        self._entries: OrderedDict[Key, tuple[PyTree, int]] = OrderedDict()
+        self.bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    # ------------------------------------------------------------------
+    def get(self, task_id: str, bundle_hash: str) -> PyTree | None:
+        key = (task_id, bundle_hash)
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return entry[0]
+
+    def put(self, task_id: str, bundle_hash: str, value: PyTree) -> PyTree:
+        """Insert (returns `value` for call-through convenience)."""
+        key = (task_id, bundle_hash)
+        if key in self._entries:
+            self.bytes -= self._entries.pop(key)[1]
+        nbytes = tree_bytes(value)
+        self._entries[key] = (value, nbytes)
+        self.bytes += nbytes
+        self._evict_to_budget()
+        return value
+
+    def _evict_to_budget(self):
+        if self.byte_budget is None:
+            return
+        while self._entries and self.bytes > self.byte_budget:
+            _, (_, nbytes) = self._entries.popitem(last=False)
+            self.bytes -= nbytes
+            self.evictions += 1
+
+    # ------------------------------------------------------------------
+    def invalidate_task(self, task_id: str):
+        """Drop every version of a task (registry hot-swap/evict callback)."""
+        dead = [k for k in self._entries if k[0] == task_id]
+        for k in dead:
+            self.bytes -= self._entries.pop(k)[1]
+            self.invalidations += 1
+
+    def clear(self):
+        self._entries.clear()
+        self.bytes = 0
+
+    def reset_stats(self):
+        self.hits = self.misses = self.evictions = self.invalidations = 0
+
+    def __contains__(self, key: Key) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "bytes": self.bytes,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations}

@@ -1,0 +1,282 @@
+"""Multi-tenant serving engine: registry + expansion cache + scheduler over
+the shared step builders.
+
+One frozen base model serves many tasks (paper Table 4). Per engine step:
+
+  1. admit waiting requests into free KV slots and prefill them in
+     task-pure batches using that task's *cached* effective adapters
+     (A0+dA, B0+dB — expanded from the MCNC bundle once per bundle version);
+  2. run ONE decode step over every active slot — a mixed multi-task batch
+     against the pooled slot cache, each slot applying its own task's
+     adapters via the per-example LoRA path and its own position
+     (per-row `pos`, see models.lm.decode_step).
+
+Compared to the seed's sequential loop (expansion re-run inside every
+prefill/decode step, one task at a time) this removes expansion from the
+steady-state token path entirely and keeps the batch dimension full across
+tasks. Hot-swap: republishing a task's bundle invalidates its cache entry;
+in-flight requests finish on the weights they started with (slots hold a
+reference), new admissions pick up the new bundle.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reparam import expand_tree, flatten_with_paths, \
+    unflatten_paths
+from repro.kernels.ops import kernel_expand_fn
+from repro.models import lm
+from repro.serve.cache import ExpansionCache
+from repro.serve.metrics import Metrics
+from repro.serve.registry import AdapterRegistry
+from repro.serve.scheduler import (PrefillGroup, Request, Scheduler,
+                                   SlotPool)
+from repro.train.steps import (TaskBundle, make_assembled_decode_step,
+                               make_assembled_prefill_step, make_decode_step,
+                               make_prefill_step)
+
+Array = jax.Array
+PyTree = Any
+
+ADAPTER_MARK = "_lora_"
+
+
+def _adapter_paths(flat_base: dict[str, Array]) -> list[str]:
+    return sorted(p for p in flat_base if ADAPTER_MARK in p)
+
+
+class ServeEngine:
+    """Continuous-batching multi-adapter server for decoder-only GQA models.
+
+    bundle: an mcnc/pranc TaskBundle (arch kind "lm", GQA attention — the
+    pooled cache uses per-row positions, which MLA decode doesn't support).
+    """
+
+    def __init__(self, bundle: TaskBundle, base: PyTree, gen_ws: list,
+                 registry: AdapterRegistry, *, n_slots: int = 8,
+                 cache_cap: int = 128,
+                 expansion_cache: ExpansionCache | None = None,
+                 max_prefill_requests: int = 8,
+                 metrics: Metrics | None = None):
+        if bundle.arch.kind != "lm":
+            raise ValueError("ServeEngine serves decoder-only LMs")
+        if bundle.model_cfg.attn_type == "mla":
+            raise ValueError("pooled per-row decode needs GQA attention")
+        if bundle.mode not in ("mcnc", "pranc"):
+            raise ValueError(f"unsupported mode {bundle.mode!r}")
+        self.bundle = bundle
+        self.cfg = bundle.model_cfg
+        self.base = base
+        self.gen_ws = gen_ws
+        self.registry = registry
+        self.cache = (expansion_cache if expansion_cache is not None
+                      else ExpansionCache())
+        self.metrics = metrics if metrics is not None else Metrics()
+        self.pool = SlotPool(n_slots, cache_cap)
+        self.scheduler = Scheduler(self.pool,
+                                   max_prefill_requests=max_prefill_requests)
+        registry.subscribe(self.cache.invalidate_task)
+
+        self._flat_base = flatten_with_paths(base)
+        self._adapter_paths = _adapter_paths(self._flat_base)
+        param_dtype = jnp.dtype(self.cfg.param_dtype)
+        self.kv = lm.init_cache(self.cfg, n_slots, cache_cap,
+                                dtype=param_dtype)
+
+        self._prefill = jax.jit(make_assembled_prefill_step(bundle,
+                                                            cache_cap))
+        self._decode = jax.jit(make_assembled_decode_step(bundle))
+        self._expand_jit = jax.jit(self._expand_effective)
+
+        # per-slot (cache key, flat effective adapter leaves); slots keep a
+        # REFERENCE so cache eviction/hot-swap never swaps weights mid-flight
+        self._slot_adapters: list[tuple | None] = [None] * n_slots
+        self._stacked_params: PyTree | None = None   # decode params, memoized
+        self._stacked_keys: tuple | None = None
+
+    # ------------------------------------------------------------------
+    # Adapter expansion + cache.
+    # ------------------------------------------------------------------
+    def _expand_effective(self, state: PyTree) -> dict[str, Array]:
+        """(alpha, beta) -> flat {lora_path: A0+dA / B0+dB} effective leaves.
+        Matches TaskBundle.assemble numerics (same expand_fn, same adds)."""
+        expand_fn = kernel_expand_fn(self.bundle.gen_cfg, self.gen_ws,
+                                     use_pallas=self.bundle.use_pallas,
+                                     interpret=self.bundle.interpret)
+        deltas = expand_tree(self.bundle.plan, self.gen_ws, state,
+                             expand_fn=expand_fn)
+        out = {}
+        for path, dlt in flatten_with_paths(deltas).items():
+            b = self._flat_base[path]
+            out[path] = (b + dlt.astype(b.dtype)).astype(b.dtype)
+        return out
+
+    def adapters_for(self, task_id: str) -> tuple[tuple, dict[str, Array]]:
+        """Cached effective adapter leaves for the task's LIVE bundle."""
+        bundle_hash = self.registry.current_hash(task_id)
+        eff = self.cache.get(task_id, bundle_hash)
+        if eff is None:
+            art = self.registry.load(task_id)      # hash-verified read
+            state = jax.tree.map(jnp.asarray, art.state)
+            t0 = time.perf_counter()
+            eff = self._expand_jit(state)
+            jax.block_until_ready(eff)
+            self.metrics.histogram("expansion_s").observe(
+                time.perf_counter() - t0)
+            self.metrics.counter("expansions").inc()
+            self.cache.put(task_id, bundle_hash, eff)
+        return (task_id, bundle_hash), eff
+
+    # ------------------------------------------------------------------
+    # Request API.
+    # ------------------------------------------------------------------
+    def submit(self, task_id: str, prompt: Sequence[int],
+               max_new_tokens: int) -> Request:
+        req = self.scheduler.submit(task_id, prompt, max_new_tokens)
+        req.t_submit = time.perf_counter()
+        self.metrics.counter("requests_submitted").inc()
+        return req
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    # ------------------------------------------------------------------
+    # Engine step.
+    # ------------------------------------------------------------------
+    def step(self) -> list[Request]:
+        """One scheduler iteration: admissions+prefill, then a mixed decode
+        batch. Returns requests finished during this step."""
+        plan = self.scheduler.plan_step()
+        finished: list[Request] = []
+        for group in plan.prefill_groups:
+            self._prefill_group(group, finished)
+        # a request can finish at prefill (max_new_tokens == 1); its slot is
+        # reclaimed below, but it must not join this step's decode batch
+        decode_slots = [s for s in plan.decode_slots
+                        if self.pool.requests[s] is not None
+                        and not self.pool.requests[s].done]
+        if decode_slots:
+            self._decode_once(decode_slots, finished)
+        for req in finished:
+            slot = self.scheduler.finish(req)
+            # drop the slot's adapter reference: without this, evicted or
+            # hot-swapped expansions stay pinned (and keep getting stacked
+            # into decode batches), defeating the cache byte budget
+            self._slot_adapters[slot] = None
+            req.t_finish = time.perf_counter()
+            self.metrics.counter("requests_completed").inc()
+            self.metrics.histogram("request_latency_s").observe(
+                req.t_finish - req.t_submit)
+        self.metrics.gauge("active_slots").set(len(self.pool.active_slots()))
+        return finished
+
+    def run_until_idle(self, max_steps: int = 100_000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_steps):
+            if not self.has_work():
+                return done
+            done.extend(self.step())
+        raise RuntimeError(f"engine did not drain in {max_steps} steps")
+
+    # ------------------------------------------------------------------
+    def _prefill_group(self, group: PrefillGroup, finished: list[Request]):
+        key, eff = self.adapters_for(group.task_id)
+        flat = dict(self._flat_base)
+        flat.update(eff)
+        params = unflatten_paths(flat)
+        prompts = jnp.asarray([r.prompt for r in group.requests],
+                              jnp.int32)
+        logits, group_cache = self._prefill(params, {"inputs": prompts})
+        # Scatter the group's per-layer caches into the pooled slot rows.
+        idx = jnp.asarray(group.slots)
+        self.kv = jax.tree.map(
+            lambda pool, gc: pool.at[:, idx].set(gc.astype(pool.dtype)),
+            self.kv, group_cache)
+        first = np.asarray(jnp.argmax(logits, -1))
+        now = time.perf_counter()
+        for req, tok in zip(group.requests, first):
+            req.generated.append(int(tok))
+            req.t_first_token = now
+            self.metrics.histogram("ttft_s").observe(now - req.t_submit)
+            if req.done:
+                finished.append(req)
+            self._slot_adapters[req.slot] = (key, eff)
+        self.metrics.counter("prefill_batches").inc()
+        self.metrics.counter("prefill_tokens").inc(int(prompts.size))
+        self.metrics.counter("tokens_generated").inc(len(group.requests))
+
+    def _decode_params(self) -> PyTree:
+        """Base params with per-slot stacked adapters (L, B, m, r); memoized
+        on the slot->bundle assignment so steady-state decode reuses it."""
+        keys = tuple(sa[0] if sa else None for sa in self._slot_adapters)
+        if keys == self._stacked_keys and self._stacked_params is not None:
+            return self._stacked_params
+        flat = dict(self._flat_base)
+        for path in self._adapter_paths:
+            per_slot = []
+            for sa in self._slot_adapters:
+                leaf = sa[1][path] if sa else jnp.zeros_like(
+                    self._flat_base[path])
+                per_slot.append(leaf)
+            flat[path] = jnp.stack(per_slot, axis=1)    # (L, B, m, r)
+        self._stacked_params = unflatten_paths(flat)
+        self._stacked_keys = keys
+        return self._stacked_params
+
+    def _decode_once(self, decode_slots: list[int], finished: list[Request]):
+        params = self._decode_params()
+        tokens = np.zeros((self.pool.n_slots,), np.int32)
+        pos = np.zeros((self.pool.n_slots,), np.int32)
+        for s in decode_slots:
+            req = self.pool.requests[s]
+            tokens[s] = req.generated[-1]
+            pos[s] = self.pool.pos[s]
+        logits, self.kv = self._decode(params, self.kv,
+                                       jnp.asarray(tokens),
+                                       jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for s in decode_slots:
+            req = self.pool.requests[s]
+            req.generated.append(int(nxt[s]))
+            self.pool.pos[s] += 1
+            if req.done:
+                finished.append(req)
+        self.metrics.counter("decode_steps").inc()
+        self.metrics.counter("decode_slot_steps").inc(len(decode_slots))
+        self.metrics.counter("tokens_generated").inc(len(decode_slots))
+
+
+# ---------------------------------------------------------------------------
+# Sequential reference: the seed repo's serving loop (one request at a time,
+# expansion inside every step). Ground truth for engine correctness tests and
+# the benchmark's baseline arm.
+# ---------------------------------------------------------------------------
+
+def sequential_reference(bundle: TaskBundle, base: PyTree, gen_ws: list,
+                         task_states: dict[str, PyTree],
+                         requests: Sequence[tuple[str, Sequence[int], int]],
+                         *, cache_cap: int) -> list[list[int]]:
+    """requests: (task_id, prompt, max_new_tokens) tuples, served one by one
+    with per-step expansion. Returns generated token lists."""
+    prefill = jax.jit(make_prefill_step(bundle, cache_cap=cache_cap))
+    decode = jax.jit(make_decode_step(bundle))
+    out: list[list[int]] = []
+    for task_id, prompt, max_new in requests:
+        st = task_states[task_id]
+        prompts = jnp.asarray([list(prompt)], jnp.int32)
+        logits, cache = prefill(st, base, gen_ws, {"inputs": prompts})
+        toks = [int(jnp.argmax(logits, -1)[0])]
+        pos = len(prompt)
+        while len(toks) < max_new:
+            tok = jnp.asarray([toks[-1]], jnp.int32)
+            logits, cache = decode(st, base, gen_ws, cache, tok,
+                                   jnp.int32(pos))
+            toks.append(int(jnp.argmax(logits, -1)[0]))
+            pos += 1
+        out.append(toks)
+    return out

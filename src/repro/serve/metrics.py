@@ -1,0 +1,115 @@
+"""Serving metrics: counters, gauges, and fixed-bucket histograms.
+
+Deliberately dependency-free (no prometheus client in the container): the
+engine records per-request latency and throughput here and `snapshot()`
+renders one plain dict for benchmarks/tests/log lines.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from typing import Iterable
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int | float = 1):
+        self.value += n
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float):
+        self.value = float(v)
+
+
+# Default latency buckets: 100us .. ~100s, log-spaced (seconds).
+DEFAULT_BUCKETS = tuple(1e-4 * (10 ** (i / 3)) for i in range(19))
+
+
+class Histogram:
+    """Fixed upper-bound buckets + exact count/sum; percentile() interpolates
+    within the winning bucket (good enough for serving dashboards)."""
+
+    def __init__(self, buckets: Iterable[float] = DEFAULT_BUCKETS):
+        self.bounds = sorted(float(b) for b in buckets)
+        self.counts = [0] * (len(self.bounds) + 1)   # +1 = overflow
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def observe(self, v: float):
+        v = float(v)
+        self.counts[bisect.bisect_left(self.bounds, v)] += 1
+        self.count += 1
+        self.sum += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def percentile(self, p: float) -> float:
+        """p in [0, 100]. Linear interpolation inside the winning bucket."""
+        if not self.count:
+            return 0.0
+        target = p / 100.0 * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if seen + c >= target and c:
+                lo = self.bounds[i - 1] if i else max(self.min, 0.0)
+                hi = self.bounds[i] if i < len(self.bounds) else self.max
+                frac = (target - seen) / c
+                return lo + (hi - lo) * frac
+            seen += c
+        return self.max
+
+    def summary(self) -> dict:
+        if not self.count:
+            return {"count": 0}
+        return {"count": self.count, "mean": self.mean,
+                "min": self.min, "max": self.max,
+                "p50": self.percentile(50), "p95": self.percentile(95),
+                "p99": self.percentile(99)}
+
+
+class Metrics:
+    """Name -> instrument registry. Instruments are created on first use so
+    callers never pre-declare; snapshot() returns plain python values."""
+
+    def __init__(self):
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        return self._counters.setdefault(name, Counter())
+
+    def gauge(self, name: str) -> Gauge:
+        return self._gauges.setdefault(name, Gauge())
+
+    def histogram(self, name: str,
+                  buckets: Iterable[float] = DEFAULT_BUCKETS) -> Histogram:
+        if name not in self._histograms:
+            self._histograms[name] = Histogram(buckets)
+        return self._histograms[name]
+
+    def snapshot(self) -> dict:
+        out: dict = {}
+        for n, c in sorted(self._counters.items()):
+            out[n] = c.value
+        for n, g in sorted(self._gauges.items()):
+            out[n] = g.value
+        for n, h in sorted(self._histograms.items()):
+            out[n] = h.summary()
+        return out

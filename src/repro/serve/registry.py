@@ -1,0 +1,155 @@
+"""Multi-tenant adapter registry: per-task MCNC bundles as on-disk artifacts.
+
+A *bundle* is everything one task contributes to serving on top of the shared
+frozen base model: the generator config (a few ints + the seed — the whole
+generator, paper S3.1), the trained (alpha, beta) state, the adapter config
+it was trained against, and free-form metadata. Kilobytes-to-MBs per task —
+the paper's transport story (Table 4 / ZipNN framing): ship seeds and
+coefficients, never expanded weights.
+
+Artifacts reuse the checkpoint manager's atomic write/read helpers: publish
+is temp-dir + fsync + rename (a crash never corrupts the live bundle) and
+every load verifies the manifest's content hash. Publishing under an existing
+task id *hot-swaps* it: the bundle hash changes, subscribers (the engine's
+expansion cache) are notified, and the next request picks up the new weights
+without restarting the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from typing import Any, Callable
+
+from repro.checkpoint.manager import (arrays_to_tree, read_artifact,
+                                      tree_to_arrays, write_artifact)
+from repro.core.generator import GeneratorConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterBundle:
+    task_id: str
+    version: int
+    bundle_hash: str            # content hash of the (alpha, beta) arrays
+    gen_cfg: GeneratorConfig
+    state: PyTree               # mcnc (alpha, beta) trees
+    adapter: dict               # adapter config (rank/scale/seed/...)
+    metadata: dict
+
+
+def _safe_task_dir(root: str, task_id: str) -> str:
+    if not task_id or "/" in task_id or task_id.startswith("."):
+        raise ValueError(f"invalid task id {task_id!r}")
+    return os.path.join(root, task_id)
+
+
+class AdapterRegistry:
+    """Save/load/list/evict per-task bundles; one live version per task.
+
+    In-process subscribers get (task_id,) callbacks on publish and evict so
+    caches keyed by (task_id, bundle_hash) can invalidate immediately instead
+    of waiting for a hash miss.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._subscribers: list[Callable[[str], None]] = []
+        # task_id -> (version, bundle_hash); lazily filled from manifests.
+        self._index: dict[str, tuple[int, str]] = {}
+        for task_id in self.list_tasks():
+            try:
+                self._index[task_id] = self._read_head(task_id)
+            except (OSError, ValueError, KeyError):
+                pass    # corrupt bundle surfaces on load(), not on startup
+
+    # ------------------------------------------------------------------
+    def _read_head(self, task_id: str) -> tuple[int, str]:
+        with open(os.path.join(_safe_task_dir(self.root, task_id),
+                               "manifest.json")) as f:
+            m = json.load(f)
+        return int(m.get("version", 1)), m["hash"]
+
+    def subscribe(self, fn: Callable[[str], None]):
+        self._subscribers.append(fn)
+
+    def _notify(self, task_id: str):
+        for fn in self._subscribers:
+            fn(task_id)
+
+    # ------------------------------------------------------------------
+    def publish(self, task_id: str, state: PyTree, gen_cfg: GeneratorConfig,
+                *, adapter: dict | None = None,
+                metadata: dict | None = None) -> AdapterBundle:
+        """Atomically (re)publish a task's bundle; returns the live bundle.
+
+        Re-publishing an existing task id is a hot-swap: version bumps, the
+        old artifact is replaced whole, and subscribers are invalidated.
+        """
+        task_dir = _safe_task_dir(self.root, task_id)
+        version = self._index.get(task_id, (0, ""))[0] + 1
+        arrays = tree_to_arrays(state)
+        manifest = write_artifact(task_dir, arrays, {
+            "task_id": task_id,
+            "version": version,
+            "generator": dataclasses.asdict(gen_cfg),
+            "adapter": adapter or {},
+            "metadata": metadata or {},
+        })
+        self._index[task_id] = (version, manifest["hash"])
+        self._notify(task_id)
+        return AdapterBundle(task_id=task_id, version=version,
+                             bundle_hash=manifest["hash"], gen_cfg=gen_cfg,
+                             state=state, adapter=adapter or {},
+                             metadata=metadata or {})
+
+    def load(self, task_id: str, *, verify: bool = True) -> AdapterBundle:
+        """Load + hash-verify a bundle (raises IOError on corruption)."""
+        task_dir = _safe_task_dir(self.root, task_id)
+        if not os.path.isdir(task_dir):
+            raise KeyError(f"no bundle for task {task_id!r} in {self.root}")
+        arrays, manifest = read_artifact(task_dir, verify=verify)
+        gen_cfg = GeneratorConfig(**manifest["generator"])
+        bundle = AdapterBundle(
+            task_id=task_id, version=int(manifest.get("version", 1)),
+            bundle_hash=manifest["hash"], gen_cfg=gen_cfg,
+            state=arrays_to_tree(arrays),
+            adapter=manifest.get("adapter", {}),
+            metadata=manifest.get("metadata", {}))
+        self._index[task_id] = (bundle.version, bundle.bundle_hash)
+        return bundle
+
+    def current_hash(self, task_id: str) -> str:
+        """The live bundle hash (cache key component) without loading arrays.
+        Raises KeyError for an unknown task, IOError for a present-but-
+        corrupt manifest (so callers can't misread corruption as absence)."""
+        if task_id not in self._index:
+            try:
+                self._index[task_id] = self._read_head(task_id)
+            except FileNotFoundError:
+                raise KeyError(
+                    f"no bundle for task {task_id!r} in {self.root}"
+                ) from None
+            except (OSError, ValueError, KeyError) as e:
+                raise IOError(
+                    f"corrupt bundle manifest for task {task_id!r}: {e}"
+                ) from None
+        return self._index[task_id][1]
+
+    def list_tasks(self) -> list[str]:
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(
+            name for name in os.listdir(self.root)
+            if not name.startswith(".")
+            and os.path.exists(os.path.join(self.root, name, "manifest.json")))
+
+    def evict(self, task_id: str):
+        """Remove a task's bundle from disk and invalidate subscribers."""
+        task_dir = _safe_task_dir(self.root, task_id)
+        shutil.rmtree(task_dir, ignore_errors=True)
+        self._index.pop(task_id, None)
+        self._notify(task_id)

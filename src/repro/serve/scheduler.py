@@ -1,0 +1,174 @@
+"""Continuous-batching request scheduler over a pooled slot-based KV cache.
+
+The engine owns the actual cache arrays — one pooled buffer with `n_slots`
+batch rows, each row `cache_cap` tokens deep. This module is the pure-python
+control plane: request lifecycle, slot assignment/reclaim, and per-iteration
+step plans. Each plan admits waiting requests into free slots (grouped into
+task-pure prefill batches — prompts share one task's adapters) and decodes
+*all* active slots in one mixed multi-task batch (per-slot adapters via
+repro.core.adapters.lora_apply's batched path). This replaces the seed's
+one-task-at-a-time loop: a long request no longer blocks the next task's
+traffic, and freed slots are reused immediately (Orca-style iteration-level
+scheduling).
+
+No jax imports: every decision here is unit-testable without a device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from enum import Enum
+from typing import Iterable
+
+
+class RequestState(Enum):
+    WAITING = "waiting"
+    ACTIVE = "active"       # prefilled, decoding
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    task_id: str
+    prompt: tuple[int, ...]
+    max_new_tokens: int
+    state: RequestState = RequestState.WAITING
+    slot: int | None = None
+    generated: list[int] = dataclasses.field(default_factory=list)
+    # engine-stamped wall times (perf_counter seconds)
+    t_submit: float = 0.0
+    t_first_token: float | None = None
+    t_finish: float | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclasses.dataclass
+class PrefillGroup:
+    """Same-task, same-prompt-length requests prefilled as one batch."""
+    task_id: str
+    requests: list[Request]
+    slots: list[int]
+
+    @property
+    def prompt_len(self) -> int:
+        return self.requests[0].prompt_len
+
+
+@dataclasses.dataclass
+class StepPlan:
+    prefill_groups: list[PrefillGroup]
+    decode_slots: list[int]       # active slots after this step's admissions
+
+    @property
+    def empty(self) -> bool:
+        return not self.prefill_groups and not self.decode_slots
+
+
+class SlotPool:
+    """Slot bookkeeping for the pooled KV cache (arrays live in the engine)."""
+
+    def __init__(self, n_slots: int, cache_cap: int):
+        self.n_slots = n_slots
+        self.cache_cap = cache_cap
+        self.requests: list[Request | None] = [None] * n_slots
+        # per-slot next decode position == number of valid cache entries
+        self.pos: list[int] = [0] * n_slots
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.requests) if r is None]
+
+    def active_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.requests) if r is not None]
+
+    def assign(self, slot: int, request: Request):
+        assert self.requests[slot] is None, f"slot {slot} busy"
+        self.requests[slot] = request
+        self.pos[slot] = request.prompt_len
+        request.slot = slot
+        request.state = RequestState.ACTIVE
+
+    def release(self, slot: int) -> Request:
+        req = self.requests[slot]
+        assert req is not None, f"slot {slot} already free"
+        self.requests[slot] = None
+        self.pos[slot] = 0
+        req.slot = None
+        req.state = RequestState.FINISHED
+        return req
+
+
+class Scheduler:
+    """FIFO admission with task/length grouping for prefill batches.
+
+    max_prefill_requests bounds how many admissions happen per engine step
+    (prefill compute is O(prompt_len) per request, so unbounded admission
+    would stall in-flight decodes — the classic continuous-batching
+    prefill/decode interference knob).
+    """
+
+    def __init__(self, pool: SlotPool, *, max_prefill_requests: int = 8):
+        self.pool = pool
+        self.max_prefill_requests = max_prefill_requests
+        self.waiting: deque[Request] = deque()
+        self._ids = itertools.count()
+
+    # ------------------------------------------------------------------
+    def submit(self, task_id: str, prompt: Iterable[int],
+               max_new_tokens: int) -> Request:
+        prompt = tuple(int(t) for t in prompt)
+        total = len(prompt) + max_new_tokens
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if total > self.pool.cache_cap:
+            raise ValueError(
+                f"request needs {total} cache entries > slot capacity "
+                f"{self.pool.cache_cap}")
+        req = Request(req_id=next(self._ids), task_id=task_id,
+                      prompt=prompt, max_new_tokens=max_new_tokens)
+        self.waiting.append(req)
+        return req
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.pool.active_slots())
+
+    # ------------------------------------------------------------------
+    def plan_step(self) -> StepPlan:
+        """Admit FIFO-eligible waiting requests into free slots, grouped by
+        (task_id, prompt_len) so each group is one prefill batch; then list
+        every active slot for the mixed decode batch."""
+        free = deque(self.pool.free_slots())
+        admitted: list[Request] = []
+        while (self.waiting and free
+               and len(admitted) < self.max_prefill_requests):
+            req = self.waiting.popleft()
+            self.pool.assign(free.popleft(), req)
+            admitted.append(req)
+
+        groups: dict[tuple[str, int], PrefillGroup] = {}
+        for req in admitted:
+            key = (req.task_id, req.prompt_len)
+            if key not in groups:
+                groups[key] = PrefillGroup(task_id=req.task_id,
+                                           requests=[], slots=[])
+            groups[key].requests.append(req)
+            groups[key].slots.append(req.slot)
+
+        return StepPlan(prefill_groups=list(groups.values()),
+                        decode_slots=self.pool.active_slots())
+
+    def finish(self, req: Request) -> int:
+        """Reclaim a finished request's slot; returns the freed slot id."""
+        slot = req.slot
+        self.pool.release(slot)
+        return slot

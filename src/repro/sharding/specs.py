@@ -7,7 +7,7 @@ style). Conventions on a (pod?, data, model) mesh:
   embed (V, d):               d over 'model' (local token gather)
   lm_head (d, V):             V over 'model'
   LoRA A/B: inherit the factor-adjacent dim of their base weight so the
-  adapter matmuls stay local (DESIGN.md S3.2); the rank dim is replicated.
+  adapter matmuls stay local (README.md §Design notes); the rank dim is replicated.
 
 Leading stack dims (layers L, experts E) are skipped automatically: rules
 fire on the trailing dims of each leaf.
@@ -63,7 +63,7 @@ _NO_FSDP = {"embed", "lm_head"}   # their complementary dim is contracted
 
 def _add_fsdp(axes: list, shape: tuple[int, ...], ndim: int):
     """ZeRO-3/FSDP: shard the largest unsharded trailing matrix dim over
-    'data' so weights divide across the whole mesh (DESIGN.md S6). GSPMD
+    'data' so weights divide across the whole mesh (README.md §Design notes). GSPMD
     all-gathers the (small) weight shard per layer inside the scan."""
     for cand in sorted((ndim - 2, ndim - 1),
                        key=lambda i: -shape[i] if i >= 0 else 0):
@@ -132,7 +132,7 @@ def cache_pspecs(cache_specs: PyTree, dp: tuple[str, ...] = ("data",)
                  ) -> PyTree:
     """Caches (leading L, then batch): shard batch over dp and the sequence
     dim (if any, dim 2 for (L,B,S,...) entries) over 'model' — this is what
-    lets a 2TB 405B decode cache fit (DESIGN.md S6)."""
+    lets a 2TB 405B decode cache fit (README.md §Design notes)."""
     flat = flatten_with_paths(cache_specs)
     out = {}
     for path, leaf in flat.items():

@@ -79,6 +79,16 @@ class TaskBundle:
             params = merge_adapters_into_params(params, adapters)
         return params
 
+    def synthetic_trainable(self, i: int, scale: float = 0.3) -> PyTree:
+        """Distinct deterministic non-zero trainable state number `i` — a
+        stand-in for a fine-tuned task in serving demos/benchmarks/tests
+        (mcnc/pranc modes: perturbs the alpha leaves off their zero init)."""
+        st = self.init_trainable(jax.random.PRNGKey(100 + i))
+        return jax.tree.map(
+            lambda x: (x + scale * jax.random.normal(
+                jax.random.PRNGKey(200 + i), x.shape).astype(x.dtype))
+            if x.ndim == 3 else x, st)
+
     def init_trainable(self, key: Array) -> PyTree:
         if self.mode in ("mcnc", "pranc"):
             return init_mcnc_state(self.plan)
@@ -275,6 +285,36 @@ def make_decode_step(bundle: TaskBundle):
 
     def step(trainable, base, gen_ws, cache, tokens, pos):
         params = bundle.assemble(trainable, base, gen_ws)
+        if bundle.arch.kind == "encdec":
+            return encdec.decode_step(cfg, params, cache, tokens, pos)
+        return lm.decode_step(cfg, params, cache, tokens, pos)
+
+    return step
+
+
+def make_assembled_prefill_step(bundle: TaskBundle, cache_cap: int):
+    """Prefill over pre-assembled effective params. The serving engine
+    (repro.serve) hoists MCNC expansion out of the step — expanded adapters
+    come from its per-task cache, so steady-state traffic runs zero
+    expansion FLOPs per token (vs make_prefill_step, which re-expands every
+    call — the correct behavior for training-time eval, not serving)."""
+    cfg = bundle.model_cfg
+
+    def step(params, batch):
+        if bundle.arch.kind == "encdec":
+            return encdec.prefill(cfg, params, batch["frames"],
+                                  batch["inputs"], cache_cap)
+        return lm.prefill(cfg, params, batch["inputs"], cache_cap)
+
+    return step
+
+
+def make_assembled_decode_step(bundle: TaskBundle):
+    """Decode over pre-assembled effective params; accepts per-row positions
+    (see lm.decode_step) for the engine's pooled mixed-task batches."""
+    cfg = bundle.model_cfg
+
+    def step(params, cache, tokens, pos):
         if bundle.arch.kind == "encdec":
             return encdec.decode_step(cfg, params, cache, tokens, pos)
         return lm.decode_step(cfg, params, cache, tokens, pos)

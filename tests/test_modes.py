@@ -72,6 +72,7 @@ def test_modes_train_and_loss_decreases(arch, mode, lr):
     assert np.isfinite(losses).all()
 
 
+@pytest.mark.slow
 def test_microbatching_matches_full_batch(arch):
     """Gradient accumulation must give the same first-step update as the
     unsplit batch (same global batch, loss is a token mean)."""
@@ -98,6 +99,7 @@ def test_microbatching_matches_full_batch(arch):
                                    atol=2e-5)
 
 
+@pytest.mark.slow
 def test_pallas_and_ref_expansion_agree_in_training(arch):
     """One train step with the Pallas (interpret) expansion must match the
     pure-jnp expansion path."""
@@ -120,6 +122,7 @@ def test_pallas_and_ref_expansion_agree_in_training(arch):
     assert results[0] == pytest.approx(results[1], rel=1e-4)
 
 
+@pytest.mark.slow
 def test_encdec_bundle_trains():
     arch = get_arch("seamless_m4t_medium")
     bundle = build_bundle(arch, "mcnc", smoke=True, generator=GEN,

@@ -31,6 +31,7 @@ def test_training_loop_end_to_end(tmp_path):
     assert out["history"][-1]["loss"] < out["history"][0]["loss"]
 
 
+@pytest.mark.slow
 def test_resume_is_deterministic(tmp_path):
     """Train 12 straight vs train 6 + crash + resume 6: identical loss."""
     arch = get_arch("yi_6b")
