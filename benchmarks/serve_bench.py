@@ -1,24 +1,46 @@
-"""Multi-tenant serving benchmark: engine vs the seed's sequential loop.
+"""Multi-tenant serving benchmark: decode hot path across engine generations.
 
-Mixed-task traffic (>= 4 task adapters) through three serving arms:
+Mixed-task traffic (>= 4 task adapters) through five serving arms:
 
-  sequential  - the seed repo's loop: one request at a time, MCNC expansion
-                re-run inside EVERY prefill/decode step (paper Table 4's
-                per-step "Generation GFLOPs" paid per token);
-  engine-cold - ServeEngine with the expansion cache disabled (byte budget
-                0): continuous batching, but every admission re-expands;
-  engine      - ServeEngine with the cache on: expansion once per (task,
-                bundle version), steady-state decode is expansion-free and
-                batches all tasks' slots together.
+  sequential    - the seed repo's loop: one request at a time, MCNC
+                  expansion re-run inside EVERY prefill/decode step (paper
+                  Table 4's per-step "Generation GFLOPs" paid per token);
+  engine-pr1    - the PR-1 engine hot path (ServeEngine legacy_decode=True):
+                  continuous batching + expansion cache, but one jit
+                  dispatch, one argmax device->host sync, a host-side
+                  token/pos array rebuild, and a memoized FULL adapter
+                  restack check per generated token;
+  engine-k1     - the device-resident fused path at horizon K=1: donated
+                  buffers + incremental adapter stacking, still one
+                  dispatch+sync per token (isolates block fusion from
+                  device residency);
+  engine-cold   - fused path, expansion cache disabled (byte budget 0):
+                  every admission re-expands;
+  engine-cached - the full fused path at horizon K (--horizon, default 8):
+                  K decode steps per dispatch, one host sync per K tokens.
 
-Prints tokens/s per arm plus cache counters. CPU-runnable; --smoke shrinks
-traffic for CI.
+The serving model is a deliberately tiny GQA config (below even the yi_6b
+smoke config): this benchmark measures SERVING overhead — dispatch, sync,
+host bookkeeping, adapter restacks — so the per-token layer math is sized
+down until that overhead dominates, the regime the engine optimizes. The
+traffic is decode-heavy (short prompts, long generations) for the same
+reason.
 
-    PYTHONPATH=src python benchmarks/serve_bench.py [--tasks 4] [--smoke]
+Emits a machine-readable JSON report (--out, default BENCH_serve.json next
+to this file): tok/s per arm, decode-step p50/p95, and speedup ratios, so
+the perf trajectory is tracked across PRs. --baseline compares the current
+run's engine-cached-vs-sequential speedup against a committed report and
+fails below `floor = committed * (1 - tolerance)` — ratios, not absolute
+tok/s, so the check transfers across machines.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--horizon K]
+        [--out BENCH_serve.json] [--baseline benchmarks/BENCH_serve.json]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import os
 import sys
 import tempfile
@@ -36,6 +58,17 @@ from repro.serve import (AdapterRegistry, ExpansionCache, Metrics,
                          ServeEngine, sequential_reference)
 from repro.train.steps import build_bundle
 
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def serving_arch():
+    """yi_6b-family GQA arch with a serving-overhead-sized model config."""
+    arch = get_arch("yi_6b")
+    tiny = dataclasses.replace(arch.smoke_config, n_layers=2, d_model=64,
+                               n_heads=4, n_kv_heads=2, head_dim=16,
+                               d_ff=128, vocab=256)
+    return dataclasses.replace(arch, smoke_config=tiny)
+
 
 def make_traffic(n_requests, tasks, vocab, prompt_lens, max_new, seed=0):
     rng = np.random.default_rng(seed)
@@ -49,55 +82,79 @@ def make_traffic(n_requests, tasks, vocab, prompt_lens, max_new, seed=0):
 
 
 def run_engine(bundle, base, gen_ws, registry, traffic, *, n_slots,
-               cache_cap, byte_budget):
+               cache_cap, byte_budget, horizon=8, legacy=False):
     cache = ExpansionCache(byte_budget)
     engine = ServeEngine(bundle, base, gen_ws, registry, n_slots=n_slots,
                          cache_cap=cache_cap, expansion_cache=cache,
+                         decode_horizon=horizon, legacy_decode=legacy,
                          metrics=Metrics())
     # warmup: run the FULL traffic once untimed so every (prompt_len,
-    # prefill-group-size) shape is compiled before the measured window —
-    # mirrors run_sequential's per-length warmup; then reset all state
+    # prefill-group-size) shape AND every decode-block length is compiled
+    # before the measured window. Expansions stay cached (the cached arm
+    # measures steady-state hits; the cold arm's budget-0 cache holds
+    # nothing regardless); stats/metrics reset so the measured window is
+    # clean. Median of 3 runs — engine runs are short enough that host
+    # scheduling jitter otherwise dominates single-run numbers.
     for t, p, m in traffic:
         engine.submit(t, p, m)
     engine.run_until_idle()
-    cache.clear()
-    cache.reset_stats()
-    engine.metrics = Metrics()      # drop compile-dominated warmup latencies
 
-    t0 = time.perf_counter()
-    reqs = [engine.submit(t, p, m) for t, p, m in traffic]
-    engine.run_until_idle()
-    dt = time.perf_counter() - t0
+    times = []
+    for _ in range(3):
+        # reset per rep: the final snapshot/stats describe exactly ONE
+        # traffic replay, consistent with the reported tokens/seconds
+        cache.reset_stats()
+        engine.reset_metrics()      # drops compile-dominated warmup numbers
+        t0 = time.perf_counter()
+        reqs = [engine.submit(t, p, m) for t, p, m in traffic]
+        engine.run_until_idle()
+        times.append(time.perf_counter() - t0)
+    dt = sorted(times)[1]
     tokens = sum(len(r.generated) for r in reqs)
-    return tokens, dt, engine
+    return tokens, dt, engine, [r.generated for r in reqs]
 
 
 def run_sequential(bundle, base, gen_ws, states, traffic, *, cache_cap):
-    # warmup: compile once per distinct prompt length, 2 tokens each
+    # warmup: compile once per distinct prompt length, 2 tokens each;
+    # median of 3 measured runs, same treatment as the engine arms (the
+    # speedup ratios feed a CI gate — don't let one noisy run move them)
     dedup = {len(p): (t, p, 2) for t, p, _ in traffic}
     sequential_reference(bundle, base, gen_ws, states,
                          list(dedup.values()), cache_cap=cache_cap)
-    t0 = time.perf_counter()
-    outs = sequential_reference(bundle, base, gen_ws, states, traffic,
-                                cache_cap=cache_cap)
-    dt = time.perf_counter() - t0
-    return sum(len(o) for o in outs), dt
+    times = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        outs = sequential_reference(bundle, base, gen_ws, states, traffic,
+                                    cache_cap=cache_cap)
+        times.append(time.perf_counter() - t0)
+    dt = sorted(times)[1]
+    return sum(len(o) for o in outs), dt, outs
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tasks", type=int, default=4)
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--n-slots", type=int, default=8)
+    ap.add_argument("--horizon", type=int, default=8,
+                    help="fused decode block length K for the cached arm "
+                         "(1 = per-token dispatch, PR-1 cadence)")
+    ap.add_argument("--out", default=os.path.join(HERE, "BENCH_serve.json"),
+                    help="write the machine-readable report here")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_serve.json to regression-check "
+                         "the engine-cached speedup against")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed relative regression vs the baseline "
+                         "speedup (ratio check, machine-independent)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny traffic for CI")
     args = ap.parse_args()
     if args.smoke:
-        args.requests = max(args.tasks, 6)
-        args.max_new = 4
+        args.requests = max(args.tasks, 8)
 
-    arch = get_arch("yi_6b")
+    arch = serving_arch()
     gen = GeneratorConfig(k=5, d=1000, width=32, seed=0)
     bundle = build_bundle(arch, "mcnc", smoke=True, generator=gen,
                           adapter_rank=4)
@@ -114,23 +171,39 @@ def main():
     n_tp = bundle.plan.trainable_params
     print(f"# {args.tasks} task adapters x {n_tp} trainable params "
           f"({n_tp * 4 / 1024:.1f} KiB/bundle), {args.requests} requests, "
-          f"{args.max_new} new tokens each")
+          f"{args.max_new} new tokens each, horizon K={args.horizon}")
 
-    prompt_lens = (8, 16) if args.smoke else (8, 16, 24)
+    prompt_lens = (8,) if args.smoke else (8, 16, 24)
     cache_cap = max(prompt_lens) + args.max_new + 1
     traffic = make_traffic(args.requests, tasks, bundle.model_cfg.vocab,
                            prompt_lens, args.max_new)
+    ekw = dict(n_slots=args.n_slots, cache_cap=cache_cap)
 
-    seq_tok, seq_dt = run_sequential(bundle, base, gen_ws, states, traffic,
-                                     cache_cap=cache_cap)
-    cold_tok, cold_dt, cold_eng = run_engine(
-        bundle, base, gen_ws, registry, traffic, n_slots=args.n_slots,
-        cache_cap=cache_cap, byte_budget=0)
-    hot_tok, hot_dt, hot_eng = run_engine(
-        bundle, base, gen_ws, registry, traffic, n_slots=args.n_slots,
-        cache_cap=cache_cap, byte_budget=None)
+    seq_tok, seq_dt, seq_out = run_sequential(
+        bundle, base, gen_ws, states, traffic, cache_cap=cache_cap)
+    pr1_tok, pr1_dt, pr1_eng, pr1_out = run_engine(
+        bundle, base, gen_ws, registry, traffic, byte_budget=None,
+        legacy=True, **ekw)
+    k1_tok, k1_dt, k1_eng, k1_out = run_engine(
+        bundle, base, gen_ws, registry, traffic, byte_budget=None,
+        horizon=1, **ekw)
+    cold_tok, cold_dt, cold_eng, cold_out = run_engine(
+        bundle, base, gen_ws, registry, traffic, byte_budget=0,
+        horizon=args.horizon, **ekw)
+    hot_tok, hot_dt, hot_eng, hot_out = run_engine(
+        bundle, base, gen_ws, registry, traffic, byte_budget=None,
+        horizon=args.horizon, **ekw)
+
+    for name, out in [("engine-pr1", pr1_out), ("engine-k1", k1_out),
+                      ("engine-cold", cold_out), ("engine-cached", hot_out)]:
+        if out != seq_out:
+            raise SystemExit(f"{name} tokens diverged from sequential "
+                             "reference")
+    print("# all engine arms token-identical to the sequential reference")
 
     rows = [("sequential", seq_tok, seq_dt),
+            ("engine-pr1", pr1_tok, pr1_dt),
+            ("engine-k1", k1_tok, k1_dt),
             ("engine-cold-cache", cold_tok, cold_dt),
             ("engine-cached", hot_tok, hot_dt)]
     print(f"{'arm':<20}{'gen tokens':>11}{'seconds':>9}{'tok/s':>9}")
@@ -138,13 +211,64 @@ def main():
         print(f"{name:<20}{tok:>11}{dt:>9.2f}{tok / dt:>9.1f}")
     for name, eng in [("cold", cold_eng), ("cached", hot_eng)]:
         print(f"# {name} cache: {eng.cache.stats()}")
+
     snap = hot_eng.metrics.snapshot()
-    print(f"# cached engine: {snap['decode_steps']} decode steps, "
+    dstep = snap.get("decode_step_s", {})
+    print(f"# cached engine: {snap['decode_steps']} decode steps in "
+          f"{snap['decode_blocks']} blocks (one host sync each), "
           f"{snap['prefill_batches']} prefill batches, "
-          f"ttft p50 {snap['ttft_s']['p50'] * 1e3:.1f} ms")
-    speedup = (hot_tok / hot_dt) / (seq_tok / seq_dt)
-    print(f"# cached engine vs sequential: {speedup:.2f}x tokens/s")
-    if speedup <= 1.0:
+          f"{snap['adapter_slot_writes']} incremental adapter writes, "
+          f"{snap['adapter_full_restacks']} full restacks, "
+          f"ttft p50 {snap['ttft_s']['p50'] * 1e3:.1f} ms, decode step "
+          f"p50 {dstep.get('p50', 0) * 1e3:.2f} ms "
+          f"p95 {dstep.get('p95', 0) * 1e3:.2f} ms")
+
+    speedup_seq = (hot_tok / hot_dt) / (seq_tok / seq_dt)
+    speedup_pr1 = (hot_tok / hot_dt) / (pr1_tok / pr1_dt)
+    speedup_k1 = (hot_tok / hot_dt) / (k1_tok / k1_dt)
+    print(f"# cached engine vs sequential: {speedup_seq:.2f}x tokens/s")
+    print(f"# horizon-K (K={args.horizon}) vs PR-1 per-token arm: "
+          f"{speedup_pr1:.2f}x tokens/s")
+    print(f"# horizon-K vs fused K=1 arm: {speedup_k1:.2f}x tokens/s")
+
+    report = {
+        "bench": "serve",
+        "smoke": bool(args.smoke),
+        "config": {"tasks": args.tasks, "requests": args.requests,
+                   "max_new": args.max_new, "n_slots": args.n_slots,
+                   "horizon": args.horizon, "prompt_lens": list(prompt_lens)},
+        "arms": {name: {"tokens": tok, "seconds": round(dt, 4),
+                        "tok_per_s": round(tok / dt, 1)}
+                 for name, tok, dt in rows},
+        "decode_step_s": {k: dstep.get(k, 0.0)
+                          for k in ("p50", "p95", "mean", "count")},
+        "decode_blocks": snap["decode_blocks"],
+        "decode_steps": snap["decode_steps"],
+        "adapter_slot_writes": snap["adapter_slot_writes"],
+        "adapter_full_restacks": snap["adapter_full_restacks"],
+        "speedups": {"cached_vs_sequential": round(speedup_seq, 3),
+                     "horizon_vs_pr1": round(speedup_pr1, 3),
+                     "horizon_vs_k1": round(speedup_k1, 3)},
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.out}")
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            committed = json.load(f)
+        floor = (committed["speedups"]["cached_vs_sequential"]
+                 * (1.0 - args.tolerance))
+        print(f"# regression check: cached-vs-sequential {speedup_seq:.2f}x "
+              f"vs floor {floor:.2f}x (committed "
+              f"{committed['speedups']['cached_vs_sequential']:.2f}x, "
+              f"tolerance {args.tolerance:.0%})")
+        if speedup_seq < floor:
+            raise SystemExit(
+                f"engine-cached speedup {speedup_seq:.2f}x regressed below "
+                f"the committed floor {floor:.2f}x")
+    if speedup_seq <= 1.0:
         raise SystemExit("expansion cache did not beat sequential baseline")
 
 

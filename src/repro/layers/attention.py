@@ -223,7 +223,7 @@ def blocked_attention(q: Array, k: Array, v: Array, *, chunk: int = 512,
 
 
 
-def masked_cache_write(cache, new, pos, axis: int):
+def masked_cache_write(cache, new, pos, axis: int, *, active=None):
     """Write `new` (size-1 along `axis`) into `cache` at dynamic index `pos`
     via a one-hot mask. Unlike dynamic_update_slice at a traced position,
     this is pure elementwise compute — shard-LOCAL for any sharding of
@@ -234,9 +234,18 @@ def masked_cache_write(cache, new, pos, axis: int):
     `pos` may be a scalar (one position for the whole batch) or a (B,)
     vector (per-slot positions — continuous batching, repro.serve), in which
     case batch must be cache axis 0.
+
+    `active`, a (B,) bool mask, suppresses the write for rows where it is
+    False by pointing their write position at -1 (the iota never matches, so
+    the row is returned bit-identical). This is the masked per-row decode
+    path: finished/empty slots in a multi-token decode block flow through
+    the same fused step without touching the pooled cache, at zero extra
+    memory traffic (no second full-cache select).
     """
-    idx = jax.lax.broadcasted_iota(jnp.int32, cache.shape, axis)
     pos = jnp.asarray(pos)
+    if active is not None:
+        pos = jnp.where(active, pos, -1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, cache.shape, axis)
     if pos.ndim == 1:
         pos = pos.reshape((-1,) + (1,) * (cache.ndim - 1))
     return jnp.where(idx == pos, new.astype(cache.dtype), cache)

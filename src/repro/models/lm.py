@@ -219,20 +219,21 @@ def _gqa_train(x, p, cfg: ModelConfig, positions):
     return _attn_out(o, p, cfg), (k, v)
 
 
-def _gqa_decode(x, p, cfg: ModelConfig, cache, pos):
+def _gqa_decode(x, p, cfg: ModelConfig, cache, pos, active=None):
     """x: (B,1,d); cache: {"k": (B,Hkv,Smax,hd), "v": ...} (head-major).
     pos: () shared position, or (B,) per-row positions (pooled slot cache,
-    repro.serve)."""
+    repro.serve). active: optional (B,) bool — rows that are False leave
+    their cache row untouched (masked per-row decode, multi-token blocks)."""
     positions = pos[None] if jnp.ndim(pos) == 0 else pos[:, None]
     q, k, v = _gqa_project(x, p, cfg, positions)
     k = k.transpose(0, 2, 1, 3)                 # (B, Hkv, 1, hd)
     v = v.transpose(0, 2, 1, 3)
     slot = jnp.mod(pos, cache["k"].shape[2]) if cfg.window is not None \
         else pos
-    k_cache = shard(masked_cache_write(cache["k"], k, slot, axis=2),
-                    "decode_kv")
-    v_cache = shard(masked_cache_write(cache["v"], v, slot, axis=2),
-                    "decode_kv")
+    k_cache = shard(masked_cache_write(cache["k"], k, slot, axis=2,
+                                       active=active), "decode_kv")
+    v_cache = shard(masked_cache_write(cache["v"], v, slot, axis=2,
+                                       active=active), "decode_kv")
     o = decode_attention(q, k_cache, v_cache, pos + 1,
                          ring=cfg.window is not None)
     return _attn_out(o, p, cfg), {"k": k_cache, "v": v_cache}
@@ -314,7 +315,14 @@ def _layer_prefill(cfg: ModelConfig, x, p, positions, cache_cap: int):
     return x + _ffn(h2, p, cfg), cache
 
 
-def _layer_decode(cfg: ModelConfig, x, p, cache, pos):
+def _keep_inactive(active, new, old):
+    """Per-row state merge for recurrent caches (ssm/rwkv) that have no
+    positional write to mask: inactive rows keep their old state."""
+    mask = active.reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(mask, new, old.astype(new.dtype))
+
+
+def _layer_decode(cfg: ModelConfig, x, p, cache, pos, active=None):
     if cfg.block_type == "rwkv":
         h = rms_norm(x, p["ln1_scale"])
         a, st = rwkv_time_mix(h, p, cfg.rwkv(),
@@ -324,22 +332,31 @@ def _layer_decode(cfg: ModelConfig, x, p, cache, pos):
         h2 = rms_norm(x, p["ln2_scale"])
         f, x_ffn = rwkv_channel_mix(h2, p, state=cache["x_ffn"])
         x = x + f
-        return x, {"x_att": st["x_att"], "s": st["s"], "x_ffn": x_ffn}
+        new_cache = {"x_att": st["x_att"], "s": st["s"], "x_ffn": x_ffn}
+        if active is not None:
+            new_cache = jax.tree.map(
+                functools.partial(_keep_inactive, active), new_cache, cache)
+        return x, new_cache
     h = rms_norm(x, p["ln1_scale"])
     new_cache = dict(cache)
     if cfg.attn_type == "mla":
+        assert active is None, "masked per-row decode needs GQA"
         a, kv = mla_decode(h, p, cfg.mla(),
                            {"ckv": cache["ckv"], "kpe": cache["kpe"]}, pos)
         new_cache.update(kv)
     else:
-        a, kv = _gqa_decode(h, p, cfg, cache, pos)
+        a, kv = _gqa_decode(h, p, cfg, cache, pos, active=active)
         new_cache.update(kv)
     if cfg.block_type == "hybrid":
         s_out, st = ssm_mix(h, p, cfg.ssm(),
                             state={"conv": cache["conv"], "h": cache["h"]})
         a = (a + s_out) * 0.5
-        new_cache["conv"] = st["conv"]
-        new_cache["h"] = st["h"]
+        new_conv, new_h = st["conv"], st["h"]
+        if active is not None:
+            new_conv = _keep_inactive(active, new_conv, cache["conv"])
+            new_h = _keep_inactive(active, new_h, cache["h"])
+        new_cache["conv"] = new_conv
+        new_cache["h"] = new_h
     x = x + a
     h2 = rms_norm(x, p["ln2_scale"])
     return x + _ffn(h2, p, cfg), new_cache
@@ -411,12 +428,16 @@ def prefill(cfg: ModelConfig, params: PyTree, inputs: Array,
 
 
 def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
-                tokens: Array, pos: Array) -> tuple[Array, PyTree]:
+                tokens: Array, pos: Array,
+                active: Array | None = None) -> tuple[Array, PyTree]:
     """tokens: (B,) int32 (or (B, d) embeddings); pos: () current index,
     or (B,) per-row indices (continuous batching — GQA/hybrid/RWKV only;
-    MLA decode keeps a shared position). Returns (logits (B, vocab),
-    updated cache)."""
-    if jnp.ndim(pos) == 1:
+    MLA decode keeps a shared position). active: optional (B,) bool mask —
+    inactive rows still flow through the batch (SPMD) but leave every cache
+    row bit-identical, so finished/empty serving slots can ride inside a
+    fused multi-token decode block (repro.serve). Returns (logits
+    (B, vocab), updated cache)."""
+    if jnp.ndim(pos) == 1 or active is not None:
         assert cfg.attn_type != "mla", "per-row decode positions need GQA"
     if cfg.input_mode == "embeddings":
         x = tokens[:, None, :].astype(jnp.dtype(cfg.param_dtype))
@@ -438,7 +459,7 @@ def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
             lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0,
                                                    keepdims=False),
             full_cache)
-        h, new_lc = _layer_decode(cfg, h, lp, lc, pos)
+        h, new_lc = _layer_decode(cfg, h, lp, lc, pos, active=active)
         full_cache = jax.tree.map(
             lambda c, n: jax.lax.dynamic_update_index_in_dim(
                 c, n.astype(c.dtype), idx, 0),

@@ -6,17 +6,30 @@ One frozen base model serves many tasks (paper Table 4). Per engine step:
   1. admit waiting requests into free KV slots and prefill them in
      task-pure batches using that task's *cached* effective adapters
      (A0+dA, B0+dB — expanded from the MCNC bundle once per bundle version);
-  2. run ONE decode step over every active slot — a mixed multi-task batch
-     against the pooled slot cache, each slot applying its own task's
-     adapters via the per-example LoRA path and its own position
-     (per-row `pos`, see models.lm.decode_step).
+  2. run ONE fused decode block over every slot — K decode iterations
+     inside a single lax.scan (train.steps.make_assembled_multi_decode_step),
+     greedy-sampled on device, each slot applying its own task's adapters
+     via the per-example LoRA path and its own position; the host syncs a
+     (K, n_slots) token block once per K tokens.
+
+The decode hot path is device-resident end to end: per-slot token / position
+/ remaining-token counters live on device and are threaded through the
+jitted steps with buffer donation (as are the pooled KV cache and the
+stacked adapter buffer), so steady-state decode performs no host-side array
+builds, no per-token dispatch, and no per-token sync. The per-slot adapter
+stack is ONE persistent device buffer updated incrementally with a jitted
+`.at[:, slot].set` writer on assign/release — never rebuilt from scratch
+while assignments are unchanged (the `adapter_full_restacks` counter stays
+at zero by construction; `adapter_slot_writes` counts the incremental
+writes).
 
 Compared to the seed's sequential loop (expansion re-run inside every
 prefill/decode step, one task at a time) this removes expansion from the
 steady-state token path entirely and keeps the batch dimension full across
 tasks. Hot-swap: republishing a task's bundle invalidates its cache entry;
-in-flight requests finish on the weights they started with (slots hold a
-reference), new admissions pick up the new bundle.
+in-flight requests finish on the weights they started with (their slot's
+rows of the stacked buffer are written at assign time and never touched by
+the swap), new admissions pick up the new bundle.
 """
 from __future__ import annotations
 
@@ -37,6 +50,7 @@ from repro.serve.registry import AdapterRegistry
 from repro.serve.scheduler import (PrefillGroup, Request, Scheduler,
                                    SlotPool)
 from repro.train.steps import (TaskBundle, make_assembled_decode_step,
+                               make_assembled_multi_decode_step,
                                make_assembled_prefill_step, make_decode_step,
                                make_prefill_step)
 
@@ -50,11 +64,35 @@ def _adapter_paths(flat_base: dict[str, Array]) -> list[str]:
     return sorted(p for p in flat_base if ADAPTER_MARK in p)
 
 
+def _write_slots(stacked: dict[str, Array], eff: dict[str, Array],
+                 idx: Array) -> dict[str, Array]:
+    """Incremental stacked-adapter write: broadcast one task's effective
+    leaves (L, m, r) into the per-slot stack (L, n_slots, m, r) at `idx`.
+    Jitted with the stack donated — steady state never copies the pool."""
+    return {p: stacked[p].at[:, idx].set(eff[p][:, None].astype(
+        stacked[p].dtype)) for p in stacked}
+
+
+def _scatter_prefill(kv: PyTree, group_cache: PyTree, tokens: Array,
+                     pos: Array, remaining: Array, idx: Array,
+                     first_tok: Array, prompt_len, rem: Array):
+    """Scatter a prefill group's per-layer caches into the pooled slot rows
+    and initialize the group's device-resident decode state (last token,
+    next position, tokens owed). Jitted with the pool + state donated."""
+    kv = jax.tree.map(
+        lambda pool, gc: pool.at[:, idx].set(gc.astype(pool.dtype)),
+        kv, group_cache)
+    return (kv, tokens.at[idx].set(first_tok),
+            pos.at[idx].set(prompt_len), remaining.at[idx].set(rem))
+
+
 class ServeEngine:
     """Continuous-batching multi-adapter server for decoder-only GQA models.
 
     bundle: an mcnc/pranc TaskBundle (arch kind "lm", GQA attention — the
     pooled cache uses per-row positions, which MLA decode doesn't support).
+    decode_horizon: max fused decode block length K (the engine compiles
+    one block per power-of-two K the scheduler plans, so O(log K) variants).
     """
 
     def __init__(self, bundle: TaskBundle, base: PyTree, gen_ws: list,
@@ -62,6 +100,9 @@ class ServeEngine:
                  cache_cap: int = 128,
                  expansion_cache: ExpansionCache | None = None,
                  max_prefill_requests: int = 8,
+                 decode_horizon: int = 8,
+                 interference_horizon: int | None = None,
+                 legacy_decode: bool = False,
                  metrics: Metrics | None = None):
         if bundle.arch.kind != "lm":
             raise ValueError("ServeEngine serves decoder-only LMs")
@@ -77,9 +118,17 @@ class ServeEngine:
         self.cache = (expansion_cache if expansion_cache is not None
                       else ExpansionCache())
         self.metrics = metrics if metrics is not None else Metrics()
+        # legacy_decode reproduces the PR-1 per-token hot path (host-side
+        # token/pos array rebuild + upload, a separate argmax dispatch, one
+        # device->host sync per TOKEN, and memoized full adapter restacks).
+        # Kept as a benchmark baseline arm and an A/B oracle for the fused
+        # block path — not for production serving.
+        self.legacy_decode = legacy_decode
         self.pool = SlotPool(n_slots, cache_cap)
-        self.scheduler = Scheduler(self.pool,
-                                   max_prefill_requests=max_prefill_requests)
+        self.scheduler = Scheduler(
+            self.pool, max_prefill_requests=max_prefill_requests,
+            max_decode_horizon=1 if legacy_decode else decode_horizon,
+            interference_horizon=interference_horizon)
         registry.subscribe(self.cache.invalidate_task)
 
         self._flat_base = flatten_with_paths(base)
@@ -87,17 +136,60 @@ class ServeEngine:
         param_dtype = jnp.dtype(self.cfg.param_dtype)
         self.kv = lm.init_cache(self.cfg, n_slots, cache_cap,
                                 dtype=param_dtype)
+        # device-resident per-slot decode state (donated through every
+        # jitted step; the host never rebuilds or re-uploads these)
+        self._tokens = jnp.zeros((n_slots,), jnp.int32)
+        self._pos = jnp.zeros((n_slots,), jnp.int32)
+        self._remaining = jnp.zeros((n_slots,), jnp.int32)
 
         self._prefill = jax.jit(make_assembled_prefill_step(bundle,
                                                             cache_cap))
-        self._decode = jax.jit(make_assembled_decode_step(bundle))
+        self._scatter = jax.jit(_scatter_prefill,
+                                donate_argnums=(0, 2, 3, 4))
+        self._slot_writer = jax.jit(_write_slots, donate_argnums=(0,))
+        self._decode_blocks: dict[int, Any] = {}   # horizon K -> jitted block
         self._expand_jit = jax.jit(self._expand_effective)
+        self._legacy_decode_fn = (jax.jit(make_assembled_decode_step(bundle))
+                                  if legacy_decode else None)
+        self._legacy_params: PyTree | None = None  # restack memo (legacy)
+        self._legacy_keys: tuple | None = None
 
-        # per-slot (cache key, flat effective adapter leaves); slots keep a
-        # REFERENCE so cache eviction/hot-swap never swaps weights mid-flight
+        # per-slot (cache key, flat effective adapter leaves) bookkeeping;
+        # the authoritative weights live in self._stacked (device) — slots
+        # hold the host-side reference so hot-swap/eviction never mutates an
+        # in-flight slot, and so tests can rebuild the stack from scratch
         self._slot_adapters: list[tuple | None] = [None] * n_slots
-        self._stacked_params: PyTree | None = None   # decode params, memoized
-        self._stacked_keys: tuple | None = None
+        self._zero_adapters = {p: jnp.zeros_like(self._flat_base[p])
+                               for p in self._adapter_paths}
+        # persistent stacked adapter buffer {path: (L, n_slots, m, r)},
+        # updated incrementally via _write_slots — NEVER restacked wholesale
+        self._stacked = {
+            p: jnp.zeros(v.shape[:1] + (n_slots,) + v.shape[1:], v.dtype)
+            for p, v in ((p, self._flat_base[p])
+                         for p in self._adapter_paths)}
+        self._decode_params: PyTree = None
+        self._params_dirty = False
+        self._rebuild_decode_params()
+        # assembled prefill params memo: (task, hash, id(expansion)) -> tree
+        self._assembled: dict[tuple, PyTree] = {}
+
+        self._declare_metrics()
+
+    def _declare_metrics(self):
+        """Pre-create the hot-path instruments so snapshots always carry
+        the sync/restack invariants tests and benchmarks assert on."""
+        for name in ("decode_blocks", "decode_steps", "adapter_slot_writes",
+                     "adapter_full_restacks", "tokens_generated"):
+            self.metrics.counter(name)
+        self.metrics.gauge("tokens_per_s")
+
+    def reset_metrics(self) -> Metrics:
+        """Swap in a fresh Metrics registry (e.g. to drop compile-dominated
+        warmup latencies before a measured window) and re-declare the
+        always-present instruments. Returns the new registry."""
+        self.metrics = Metrics()
+        self._declare_metrics()
+        return self.metrics
 
     # ------------------------------------------------------------------
     # Adapter expansion + cache.
@@ -149,30 +241,52 @@ class ServeEngine:
     # Engine step.
     # ------------------------------------------------------------------
     def step(self) -> list[Request]:
-        """One scheduler iteration: admissions+prefill, then a mixed decode
-        batch. Returns requests finished during this step."""
+        """One scheduler iteration: admissions+prefill, then one fused
+        decode block of `plan.decode_horizon` tokens over every slot.
+        Returns requests finished during this step."""
+        t_step = time.perf_counter()
+        tok0 = self.metrics.counter("tokens_generated").value
         plan = self.scheduler.plan_step()
         finished: list[Request] = []
         for group in plan.prefill_groups:
             self._prefill_group(group, finished)
-        # a request can finish at prefill (max_new_tokens == 1); its slot is
-        # reclaimed below, but it must not join this step's decode batch
-        decode_slots = [s for s in plan.decode_slots
-                        if self.pool.requests[s] is not None
-                        and not self.pool.requests[s].done]
-        if decode_slots:
-            self._decode_once(decode_slots, finished)
+        # a request can finish at prefill (max_new_tokens == 1); its device
+        # `remaining` counter is already 0, so it is masked inside the block
+        # — plan.decode_horizon is 0 only when NO slot owes decode tokens
+        if plan.decode_slots and plan.decode_horizon > 0:
+            if self.legacy_decode:
+                decode_slots = [s for s in plan.decode_slots
+                                if not self.pool.requests[s].done]
+                if decode_slots:
+                    self._decode_once_legacy(decode_slots, finished)
+            else:
+                self._decode_block(plan.decode_horizon, finished)
+        freed: list[int] = []
         for req in finished:
             slot = self.scheduler.finish(req)
             # drop the slot's adapter reference: without this, evicted or
-            # hot-swapped expansions stay pinned (and keep getting stacked
-            # into decode batches), defeating the cache byte budget
+            # hot-swapped expansions stay pinned, defeating the cache byte
+            # budget
             self._slot_adapters[slot] = None
+            freed.append(slot)
             req.t_finish = time.perf_counter()
             self.metrics.counter("requests_completed").inc()
             self.metrics.histogram("request_latency_s").observe(
                 req.t_finish - req.t_submit)
+        if freed and not self.legacy_decode:
+            # zero the freed slots' adapter rows so the stacked buffer stays
+            # bit-equal to a from-scratch restack (and an evicted expansion's
+            # weights don't linger in device memory semantics-wise)
+            self._stacked = self._slot_writer(self._stacked,
+                                              self._zero_adapters,
+                                              jnp.asarray(freed))
+            self._params_dirty = True
+            self.metrics.counter("adapter_slot_writes").inc(len(freed))
         self.metrics.gauge("active_slots").set(len(self.pool.active_slots()))
+        dt = time.perf_counter() - t_step
+        tok = self.metrics.counter("tokens_generated").value - tok0
+        if tok:
+            self.metrics.gauge("tokens_per_s").set(tok / max(dt, 1e-9))
         return finished
 
     def run_until_idle(self, max_steps: int = 100_000) -> list[Request]:
@@ -184,20 +298,58 @@ class ServeEngine:
         raise RuntimeError(f"engine did not drain in {max_steps} steps")
 
     # ------------------------------------------------------------------
+    def _rebuild_decode_params(self):
+        """Re-link the decode params tree onto the current stacked buffers.
+        Host-side dict surgery only (no device work); called when a slot
+        write replaces buffer objects, never in steady-state decode."""
+        flat = dict(self._flat_base)
+        flat.update(self._stacked)
+        self._decode_params = unflatten_paths(flat)
+
+    def _prefill_params(self, key: tuple, eff: dict[str, Array]) -> PyTree:
+        """Assembled (base + one task's effective adapters) prefill params,
+        memoized on (task, bundle hash, expansion identity). Saves the
+        per-group host-side tree rebuild; `id(eff)` keys the exact expansion
+        object so a re-expansion after cache eviction never aliases. Bounded
+        at n_slots entries — the same pinning budget the slots themselves
+        hold — so an evicted expansion is not kept alive indefinitely."""
+        ck = (key[0], key[1], id(eff))
+        params = self._assembled.get(ck)
+        if params is None:
+            flat = dict(self._flat_base)
+            flat.update(eff)
+            params = unflatten_paths(flat)
+            self._assembled[ck] = params
+            while len(self._assembled) > self.pool.n_slots:
+                self._assembled.pop(next(iter(self._assembled)))
+        return params
+
     def _prefill_group(self, group: PrefillGroup, finished: list[Request]):
         key, eff = self.adapters_for(group.task_id)
-        flat = dict(self._flat_base)
-        flat.update(eff)
-        params = unflatten_paths(flat)
+        params = self._prefill_params(key, eff)
         prompts = jnp.asarray([r.prompt for r in group.requests],
                               jnp.int32)
         logits, group_cache = self._prefill(params, {"inputs": prompts})
-        # Scatter the group's per-layer caches into the pooled slot rows.
         idx = jnp.asarray(group.slots)
-        self.kv = jax.tree.map(
-            lambda pool, gc: pool.at[:, idx].set(gc.astype(pool.dtype)),
-            self.kv, group_cache)
-        first = np.asarray(jnp.argmax(logits, -1))
+        first_dev = jnp.argmax(logits, -1).astype(jnp.int32)
+        if self.legacy_decode:
+            # PR-1's prefill scatter: eager per-leaf .at[].set dispatches,
+            # no donation, no device-resident decode state
+            self.kv = jax.tree.map(
+                lambda pool, gc: pool.at[:, idx].set(gc.astype(pool.dtype)),
+                self.kv, group_cache)
+        else:
+            rem = jnp.asarray(
+                [r.max_new_tokens - 1 for r in group.requests], jnp.int32)
+            (self.kv, self._tokens, self._pos,
+             self._remaining) = self._scatter(
+                self.kv, group_cache, self._tokens, self._pos,
+                self._remaining, idx, first_dev, group.prompt_len, rem)
+            # incremental stacked-adapter write for the newly assigned slots
+            self._stacked = self._slot_writer(self._stacked, eff, idx)
+            self._params_dirty = True
+            self.metrics.counter("adapter_slot_writes").inc(len(group.slots))
+        first = np.asarray(first_dev)
         now = time.perf_counter()
         for req, tok in zip(group.requests, first):
             req.generated.append(int(tok))
@@ -210,45 +362,130 @@ class ServeEngine:
         self.metrics.counter("prefill_tokens").inc(int(prompts.size))
         self.metrics.counter("tokens_generated").inc(len(group.requests))
 
-    def _decode_params(self) -> PyTree:
-        """Base params with per-slot stacked adapters (L, B, m, r); memoized
-        on the slot->bundle assignment so steady-state decode reuses it."""
-        keys = tuple(sa[0] if sa else None for sa in self._slot_adapters)
-        if keys == self._stacked_keys and self._stacked_params is not None:
-            return self._stacked_params
-        flat = dict(self._flat_base)
-        for path in self._adapter_paths:
-            per_slot = []
-            for sa in self._slot_adapters:
-                leaf = sa[1][path] if sa else jnp.zeros_like(
-                    self._flat_base[path])
-                per_slot.append(leaf)
-            flat[path] = jnp.stack(per_slot, axis=1)    # (L, B, m, r)
-        self._stacked_params = unflatten_paths(flat)
-        self._stacked_keys = keys
-        return self._stacked_params
+    # unroll the steady-state (max-horizon) block only: replicating the loop
+    # body lets XLA:CPU fuse across iterations (~20%/token at smoke shapes)
+    # but multiplies compile time, which the tail blocks (K=4,2,1 — run a
+    # handful of times per request) would never amortize
+    UNROLL_MIN_K = 8
 
-    def _decode_once(self, decode_slots: list[int], finished: list[Request]):
-        params = self._decode_params()
+    def _block_fn(self, k: int):
+        fn = self._decode_blocks.get(k)
+        if fn is None:
+            unroll = self.UNROLL_MIN_K if k >= self.UNROLL_MIN_K else 1
+            fn = jax.jit(make_assembled_multi_decode_step(self.bundle, k,
+                                                          unroll=unroll),
+                         donate_argnums=(1, 2, 3, 4))
+            self._decode_blocks[k] = fn
+        return fn
+
+    def _decode_block(self, k: int, finished: list[Request]):
+        """One fused K-token decode dispatch + ONE host sync to harvest the
+        (K, n_slots) token block. Validity needs no device mask read-back:
+        the host's own remaining-token bookkeeping mirrors the device
+        counters exactly (both decrement once per emitted token)."""
+        if self._params_dirty:       # slot writes since the last block
+            self._rebuild_decode_params()
+            self._params_dirty = False
+        t0 = time.perf_counter()
+        (tok_block, self.kv, self._tokens, self._pos,
+         self._remaining) = self._block_fn(k)(
+            self._decode_params, self.kv, self._tokens, self._pos,
+            self._remaining)
+        block = np.asarray(tok_block)          # the one sync per K tokens
+        dt = time.perf_counter() - t0
+        harvested = 0
+        for s in self.pool.active_slots():
+            req = self.pool.requests[s]
+            if req.done:                       # finished at prefill, masked
+                continue
+            take = min(k, req.max_new_tokens - len(req.generated))
+            if block[take - 1, s] < 0:         # -1 = device row was inactive
+                raise RuntimeError(
+                    f"slot {s}: host expected {take} tokens but device "
+                    f"counters disagree — state desync")
+            req.generated.extend(int(t) for t in block[:take, s])
+            self.pool.pos[s] += take
+            harvested += take
+            if req.done:
+                finished.append(req)
+        self.metrics.counter("decode_blocks").inc()
+        self.metrics.counter("decode_steps").inc(k)
+        self.metrics.counter("decode_slot_steps").inc(harvested)
+        self.metrics.counter("tokens_generated").inc(harvested)
+        self.metrics.histogram("decode_block_s").observe(dt)
+        self.metrics.histogram("decode_step_s").observe(dt / k)
+        self.metrics.gauge("decode_horizon").set(k)
+
+    # ------------------------------------------------------------------
+    # PR-1 per-token decode path (legacy_decode=True): benchmark baseline.
+    # ------------------------------------------------------------------
+    def _decode_params_legacy(self) -> PyTree:
+        """Base params with per-slot stacked adapters, memoized on the
+        slot->bundle assignment — rebuilt WHOLESALE (jnp.stack over every
+        adapter leaf) whenever any slot changes. This is exactly what the
+        incremental _slot_writer replaces; adapter_full_restacks counts it."""
+        keys = tuple(sa[0] if sa else None for sa in self._slot_adapters)
+        if keys == self._legacy_keys and self._legacy_params is not None:
+            return self._legacy_params
+        flat = dict(self._flat_base)
+        flat.update(self._restack_from_scratch())
+        self._legacy_params = unflatten_paths(flat)
+        self._legacy_keys = keys
+        self.metrics.counter("adapter_full_restacks").inc()
+        return self._legacy_params
+
+    def _restack_from_scratch(self) -> dict[str, Array]:
+        """Wholesale per-slot adapter stack from the host-side slot
+        references — the exact layout the incremental writer maintains."""
+        out = {}
+        for path in self._adapter_paths:
+            per_slot = [sa[1][path] if sa else self._zero_adapters[path]
+                        for sa in self._slot_adapters]
+            out[path] = jnp.stack(per_slot, axis=1).astype(     # (L, B, m, r)
+                self._flat_base[path].dtype)
+        return out
+
+    def _decode_once_legacy(self, decode_slots: list[int],
+                            finished: list[Request]):
+        """One token for every active slot, the PR-1 way: fresh host-side
+        token/pos arrays uploaded every step, a separate argmax dispatch,
+        and a device->host sync per token."""
+        params = self._decode_params_legacy()
+        t0 = time.perf_counter()
         tokens = np.zeros((self.pool.n_slots,), np.int32)
         pos = np.zeros((self.pool.n_slots,), np.int32)
         for s in decode_slots:
             req = self.pool.requests[s]
             tokens[s] = req.generated[-1]
             pos[s] = self.pool.pos[s]
-        logits, self.kv = self._decode(params, self.kv,
-                                       jnp.asarray(tokens),
-                                       jnp.asarray(pos))
+        logits, self.kv = self._legacy_decode_fn(params, self.kv,
+                                                 jnp.asarray(tokens),
+                                                 jnp.asarray(pos))
         nxt = np.asarray(jnp.argmax(logits, -1))
+        dt = time.perf_counter() - t0
         for s in decode_slots:
             req = self.pool.requests[s]
             req.generated.append(int(nxt[s]))
             self.pool.pos[s] += 1
             if req.done:
                 finished.append(req)
+        self.metrics.counter("decode_blocks").inc()
         self.metrics.counter("decode_steps").inc()
         self.metrics.counter("decode_slot_steps").inc(len(decode_slots))
         self.metrics.counter("tokens_generated").inc(len(decode_slots))
+        self.metrics.histogram("decode_block_s").observe(dt)
+        self.metrics.histogram("decode_step_s").observe(dt)
+        self.metrics.gauge("decode_horizon").set(1)
+
+    # ------------------------------------------------------------------
+    def stacked_reference(self) -> dict[str, Array]:
+        """From-scratch restack of the per-slot adapter stack (the pre-
+        incremental semantics). Test oracle ONLY: the serving path never
+        calls this — `adapter_full_restacks` counts how often production
+        code rebuilds wholesale, and it stays 0 by construction (no serving
+        code path increments it; it exists so tests can assert the
+        invariant from a metrics snapshot)."""
+        return self._restack_from_scratch()
 
 
 # ---------------------------------------------------------------------------

@@ -85,21 +85,39 @@ class Histogram:
 
 class Metrics:
     """Name -> instrument registry. Instruments are created on first use so
-    callers never pre-declare; snapshot() returns plain python values."""
+    callers never pre-declare; snapshot() returns plain python values.
+
+    A name belongs to exactly one instrument kind: requesting an existing
+    name as a different kind raises ValueError. (Before this check, a
+    counter, gauge, and histogram could silently share a name and the last
+    one written won the snapshot key — a dashboard reading `decode_steps`
+    would see whichever instrument sorted last.)
+    """
 
     def __init__(self):
+        self._kinds: dict[str, str] = {}
         self._counters: dict[str, Counter] = {}
         self._gauges: dict[str, Gauge] = {}
         self._histograms: dict[str, Histogram] = {}
 
+    def _claim(self, name: str, kind: str):
+        prev = self._kinds.setdefault(name, kind)
+        if prev != kind:
+            raise ValueError(
+                f"metric {name!r} is already a {prev}; refusing to shadow "
+                f"it with a {kind} (snapshot keys would collide)")
+
     def counter(self, name: str) -> Counter:
+        self._claim(name, "counter")
         return self._counters.setdefault(name, Counter())
 
     def gauge(self, name: str) -> Gauge:
+        self._claim(name, "gauge")
         return self._gauges.setdefault(name, Gauge())
 
     def histogram(self, name: str,
                   buckets: Iterable[float] = DEFAULT_BUCKETS) -> Histogram:
+        self._claim(name, "histogram")
         if name not in self._histograms:
             self._histograms[name] = Histogram(buckets)
         return self._histograms[name]

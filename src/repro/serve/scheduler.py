@@ -67,6 +67,12 @@ class PrefillGroup:
 class StepPlan:
     prefill_groups: list[PrefillGroup]
     decode_slots: list[int]       # active slots after this step's admissions
+    # tokens to decode in one fused device block this step. 0 = no decode
+    # work (e.g. every active request finishes at prefill). Tracks the
+    # soonest-finishing slot (within the power-of-two rounding) so a
+    # finished request's slot is reclaimed near the block boundary, never
+    # held hostage by a much longer block.
+    decode_horizon: int = 1
 
     @property
     def empty(self) -> bool:
@@ -113,11 +119,29 @@ class Scheduler:
     (prefill compute is O(prompt_len) per request, so unbounded admission
     would stall in-flight decodes — the classic continuous-batching
     prefill/decode interference knob).
+
+    max_decode_horizon bounds the fused decode block length K: each engine
+    step decodes up to K tokens per slot in one device dispatch (one host
+    sync per K tokens). K is additionally clamped to the soonest-finishing
+    active request, so slots free at block boundaries, and — when requests
+    are queued waiting for a slot — to `interference_horizon`, the second
+    interference knob: a long block would delay the next admission's
+    prefill (and its TTFT) by up to K token-times. The planned K is rounded
+    down to a power of two so the engine compiles O(log K) block variants,
+    not one per distinct remaining-token count.
     """
 
-    def __init__(self, pool: SlotPool, *, max_prefill_requests: int = 8):
+    def __init__(self, pool: SlotPool, *, max_prefill_requests: int = 8,
+                 max_decode_horizon: int = 8,
+                 interference_horizon: int | None = None):
+        if max_decode_horizon < 1:
+            raise ValueError("max_decode_horizon must be >= 1")
         self.pool = pool
         self.max_prefill_requests = max_prefill_requests
+        self.max_decode_horizon = max_decode_horizon
+        self.interference_horizon = (max_decode_horizon
+                                     if interference_horizon is None
+                                     else max(1, interference_horizon))
         self.waiting: deque[Request] = deque()
         self._ids = itertools.count()
 
@@ -146,7 +170,8 @@ class Scheduler:
     def plan_step(self) -> StepPlan:
         """Admit FIFO-eligible waiting requests into free slots, grouped by
         (task_id, prompt_len) so each group is one prefill batch; then list
-        every active slot for the mixed decode batch."""
+        every active slot for the mixed decode batch and plan the fused
+        decode horizon for this step."""
         free = deque(self.pool.free_slots())
         admitted: list[Request] = []
         while (self.waiting and free
@@ -165,7 +190,41 @@ class Scheduler:
             groups[key].slots.append(req.slot)
 
         return StepPlan(prefill_groups=list(groups.values()),
-                        decode_slots=self.pool.active_slots())
+                        decode_slots=self.pool.active_slots(),
+                        decode_horizon=self._plan_horizon())
+
+    def _plan_horizon(self) -> int:
+        """Fused decode block length for this step's active slots.
+
+        Per-slot tokens still owed AFTER this step's prefills emit their
+        first token (admitted requests have generated nothing yet at plan
+        time, so their prefill token is discounted here). min() over slots
+        that owe anything bounds K at the soonest finish; slots owing
+        nothing (max_new_tokens == 1 admissions) are masked inside the
+        block by the engine's device-side counters, not counted here.
+        """
+        owed = []
+        for slot in self.pool.active_slots():
+            req = self.pool.requests[slot]
+            pending = req.max_new_tokens - len(req.generated)
+            if not req.generated:        # admitted this step: prefill emits 1
+                pending -= 1
+            if pending > 0:
+                owed.append(pending)
+        if not owed:
+            return 0
+        k = min(min(owed), self.max_decode_horizon)
+        if self.waiting:
+            k = min(k, self.interference_horizon)
+        # round UP to a power of two (then re-cap): the engine compiles
+        # O(log K) block variants, and a short tail rides one bigger block
+        # instead of a cascade of small dispatches (owed 3 -> one K=4 block,
+        # not K=2 + K=1). The request whose last token lands mid-block is
+        # masked on device by its remaining-token counter. Overshoot past
+        # the soonest finish / interference clamp is < 2x and re-capped at
+        # max_decode_horizon; interference_horizon=1 stays exactly 1.
+        k = 1 << max(k - 1, 0).bit_length()
+        return min(k, self.max_decode_horizon)
 
     def finish(self, req: Request) -> int:
         """Reclaim a finished request's slot; returns the freed slot id."""

@@ -322,6 +322,63 @@ def make_assembled_decode_step(bundle: TaskBundle):
     return step
 
 
+def make_assembled_multi_decode_step(bundle: TaskBundle, horizon: int,
+                                     unroll: int = 1):
+    """Fused `horizon`-token greedy decode block over pre-assembled params.
+
+    Runs `horizon` decode iterations inside ONE lax.scan, so the serving
+    engine pays one jit dispatch and one device->host sync per `horizon`
+    tokens instead of per token — at CPU smoke shapes (and on TPU, where
+    each dispatch crosses PCIe) the per-token loop measures Python, not
+    hardware. All loop state is device-resident and batched per slot:
+
+      tokens    (B,) int32  last emitted token per slot (next model input)
+      pos       (B,) int32  next cache write position per slot
+      remaining (B,) int32  tokens the slot still owes; 0 = inactive
+
+    Rows with remaining == 0 (empty slots, or requests that finish
+    mid-horizon) stay in the batch for SPMD shape stability but are masked:
+    they neither write KV (lm.decode_step active=) nor advance their
+    counters, and they emit -1 in the token block. Greedy argmax sampling
+    happens on device; the returned (horizon, B) block is the only thing
+    the host ever reads back.
+
+    Returns step(params, cache, tokens, pos, remaining) ->
+    (tok_block (horizon, B) int32, cache, tokens, pos, remaining).
+
+    `unroll` is forwarded to the scan: at smoke shapes XLA:CPU pays
+    per-iteration overhead it can partially fuse away when the loop body is
+    replicated (~20% per token at unroll=8), at the price of program size
+    and compile time — callers should unroll only their hottest horizon.
+    """
+    if bundle.arch.kind != "lm":
+        raise ValueError("multi-step decode serves decoder-only LMs")
+    if horizon < 1:
+        raise ValueError(f"horizon must be >= 1, got {horizon}")
+    cfg = bundle.model_cfg
+
+    def step(params, cache, tokens, pos, remaining):
+        def body(carry, _):
+            cache, tokens, pos, remaining = carry
+            active = remaining > 0
+            logits, cache = lm.decode_step(cfg, params, cache, tokens, pos,
+                                           active=active)
+            nxt = jnp.argmax(logits, -1).astype(tokens.dtype)
+            tokens = jnp.where(active, nxt, tokens)
+            pos = jnp.where(active, pos + 1, pos)
+            remaining = jnp.where(active, remaining - 1, remaining)
+            emit = jnp.where(active, nxt, -1)
+            return (cache, tokens, pos, remaining), emit
+
+        carry, tok_block = jax.lax.scan(
+            body, (cache, tokens, pos, remaining), None, length=horizon,
+            unroll=min(unroll, horizon))
+        cache, tokens, pos, remaining = carry
+        return tok_block, cache, tokens, pos, remaining
+
+    return step
+
+
 # ---------------------------------------------------------------------------
 # Input specs (assignment: ShapeDtypeStruct stand-ins, no allocation).
 # ---------------------------------------------------------------------------

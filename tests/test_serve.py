@@ -332,3 +332,164 @@ def test_engine_slot_reuse_more_requests_than_slots(served, tmp_path):
         assert req.generated == ref
     # 4 requests through 2 slots
     assert eng.metrics.snapshot()["requests_completed"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Fused decode blocks: horizon planning, mid-horizon finishes, device-resident
+# state, and the incremental stacked adapter buffer.
+# ---------------------------------------------------------------------------
+
+def test_scheduler_plans_pow2_horizon_bounded_by_soonest_finish():
+    pool = SlotPool(n_slots=4, cache_cap=64)
+    sched = Scheduler(pool, max_decode_horizon=8)
+    for m in (4, 6, 12):
+        sched.submit("t", [1, 2], m)
+    plan = sched.plan_step()
+    # admitted this step: prefill will emit 1 token each -> owed 3, 5, 11;
+    # soonest finish 3 rounds UP to one K=4 block (not K=2 + K=1)
+    assert plan.decode_horizon == 4
+    for s in plan.decode_slots:
+        pool.requests[s].generated.extend([0] * 4)    # simulate one block
+    assert sched.plan_step().decode_horizon == 2      # owed 1, 3, 8 -> 1 -> 2
+
+
+def test_scheduler_horizon_zero_when_all_finish_at_prefill():
+    pool = SlotPool(n_slots=2, cache_cap=16)
+    sched = Scheduler(pool, max_decode_horizon=8)
+    sched.submit("t", [1, 2, 3], 1)
+    assert sched.plan_step().decode_horizon == 0
+
+
+def test_scheduler_interference_clamps_horizon_when_queue_waits():
+    pool = SlotPool(n_slots=1, cache_cap=64)
+    sched = Scheduler(pool, max_decode_horizon=8, interference_horizon=1)
+    sched.submit("t", [1, 2], 20)
+    sched.submit("t", [1, 2], 20)                     # waits for the slot
+    assert sched.plan_step().decode_horizon == 1      # exact under clamp
+    sched2 = Scheduler(SlotPool(1, 64), max_decode_horizon=8)
+    sched2.submit("t", [1, 2], 20)
+    sched2.submit("t", [1, 2], 20)
+    assert sched2.plan_step().decode_horizon == 8     # default: no extra clamp
+
+
+def test_engine_mid_horizon_finish_matches_sequential(served, tmp_path):
+    """Requests whose last token lands strictly inside a fused block (K
+    straddles it) must stop exactly on budget and stay token-identical to
+    the sequential reference."""
+    bundle, base, gen_ws = served
+    tasks = ["t0", "t1", "t2"]
+    states = {t: perturbed_state(bundle, i) for i, t in enumerate(tasks)}
+    reg = AdapterRegistry(str(tmp_path))
+    for t in tasks:
+        reg.publish(t, states[t], GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=4, cache_cap=24,
+                      decode_horizon=8)
+    # owed after prefill: 3, 5, 7 -> first block K=4 straddles t0's last
+    # token (and t1 finishes mid-tail later)
+    traffic = [("t0", [1, 2, 3, 4], 4), ("t1", [5, 6, 7, 8], 6),
+               ("t2", [2, 4, 6, 8], 8)]
+    reqs = [eng.submit(t, p, m) for t, p, m in traffic]
+    eng.run_until_idle()
+    want = sequential_reference(bundle, base, gen_ws, states, traffic,
+                                cache_cap=24)
+    for req, ref in zip(reqs, want):
+        assert req.generated == ref, req.task_id
+    for req, (_, _, m) in zip(reqs, traffic):
+        assert len(req.generated) == m                # stopped on budget
+
+
+def test_engine_legacy_decode_matches_fused(served, tmp_path):
+    """The PR-1 per-token arm (legacy_decode) and the fused block path must
+    be token-identical — the benchmark's speedup compares equal outputs."""
+    bundle, base, gen_ws = served
+    states = {"a": perturbed_state(bundle, 1), "b": perturbed_state(bundle, 2)}
+    reg = AdapterRegistry(str(tmp_path))
+    for t, st in states.items():
+        reg.publish(t, st, GEN)
+    traffic = [("a", [1, 2, 3], 5), ("b", [4, 5, 6, 7], 6), ("a", [8, 9], 4)]
+    outs = {}
+    for legacy in (False, True):
+        eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=2, cache_cap=16,
+                          decode_horizon=4, legacy_decode=legacy)
+        reqs = [eng.submit(t, p, m) for t, p, m in traffic]
+        eng.run_until_idle()
+        outs[legacy] = [r.generated for r in reqs]
+    assert outs[False] == outs[True]
+
+
+def test_engine_one_sync_per_block_and_zero_restacks(served, tmp_path):
+    """Steady-state decode: at most one host<->device sync per K-token block
+    (decode_blocks counts syncs) and ZERO full adapter restacks — the
+    stacked buffer is only ever written incrementally per slot."""
+    bundle, base, gen_ws = served
+    reg = AdapterRegistry(str(tmp_path))
+    reg.publish("t", perturbed_state(bundle, 0), GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=2, cache_cap=32,
+                      decode_horizon=8)
+    for _ in range(2):
+        eng.submit("t", [3, 1, 4, 1, 5], 17)          # owed 16 = 2 K=8 blocks
+    eng.run_until_idle()
+    snap = eng.metrics.snapshot()
+    assert snap["decode_blocks"] == 2                 # 32 decode tokens
+    assert snap["decode_steps"] == 16
+    assert snap["adapter_full_restacks"] == 0
+    # counts slots written: one batched assign write (2 slots) + one
+    # batched release write (2 slots)
+    assert snap["adapter_slot_writes"] == 4
+    assert snap["tokens_per_s"] > 0                   # derived gauge updated
+
+
+def test_incremental_stack_equals_restack_after_churn(served, tmp_path):
+    """After assign/release/hot-swap churn the persistent device-resident
+    stacked adapter buffer must be bit-equal to a from-scratch restack."""
+    bundle, base, gen_ws = served
+    reg = AdapterRegistry(str(tmp_path))
+    reg.publish("a", perturbed_state(bundle, 1), GEN)
+    reg.publish("b", perturbed_state(bundle, 2), GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=3, cache_cap=20,
+                      decode_horizon=4)
+    # wave 1: fill slots, then drain (slots released -> zeroed rows)
+    for t, m in [("a", 3), ("b", 5), ("a", 2)]:
+        eng.submit(t, [1, 2, 3], m)
+    eng.run_until_idle()
+    # hot-swap task a, then a second wave that reassigns a subset of slots;
+    # compare MID-FLIGHT (post-swap expansions live in slots 0-1, slot 2
+    # zeroed by the release above)
+    reg.publish("a", perturbed_state(bundle, 5), GEN)
+    eng.submit("a", [4, 5, 6], 9)
+    eng.submit("b", [7, 8, 9], 9)
+    eng.step()
+    ref = eng.stacked_reference()
+    assert set(ref) == set(eng._stacked)
+    assert any(np.asarray(v).any() for v in ref.values())   # non-trivial
+    for path, want in ref.items():
+        np.testing.assert_array_equal(np.asarray(eng._stacked[path]),
+                                      np.asarray(want), err_msg=path)
+    eng.run_until_idle()
+    # drained: every slot released, buffer back to the all-zero restack
+    for path, want in eng.stacked_reference().items():
+        np.testing.assert_array_equal(np.asarray(eng._stacked[path]),
+                                      np.asarray(want), err_msg=path)
+    assert eng.metrics.snapshot()["adapter_full_restacks"] == 0
+
+
+def test_masked_cache_write_active_rows():
+    from repro.layers.attention import masked_cache_write
+    cache = jnp.zeros((2, 1, 4, 3))                   # (B, H, S, D)
+    new = jnp.ones((2, 1, 1, 3))
+    pos = jnp.asarray([1, 2])
+    active = jnp.asarray([True, False])
+    out = masked_cache_write(cache, new, pos, axis=2, active=active)
+    assert np.asarray(out[0, 0, 1]).sum() == 3        # active row written
+    np.testing.assert_array_equal(np.asarray(out[1]), 0)  # inactive skipped
+
+
+def test_metrics_rejects_cross_kind_name_collision():
+    m = Metrics()
+    m.counter("x").inc()
+    with pytest.raises(ValueError):
+        m.gauge("x")
+    with pytest.raises(ValueError):
+        m.histogram("x")
+    m.counter("x").inc()                              # same kind still fine
+    assert m.snapshot()["x"] == 2
