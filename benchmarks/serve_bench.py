@@ -17,7 +17,14 @@ Mixed-task traffic (>= 4 task adapters) through five serving arms:
   engine-cold   - fused path, expansion cache disabled (byte budget 0):
                   every admission re-expands;
   engine-cached - the full fused path at horizon K (--horizon, default 8):
-                  K decode steps per dispatch, one host sync per K tokens.
+                  K decode steps per dispatch, one host sync per K tokens;
+  engine-mesh   - (--mesh DxM only) the same fused path sharded over a
+                  (data, model) device mesh (CPU-simulated host devices are
+                  requested automatically before jax initializes). This arm
+                  exists to prove the sharded engine is token-identical and
+                  to record its CPU-sim throughput — D*M interpreted host
+                  "devices" time-slice real cores, so its tok/s is NOT a
+                  hardware speedup claim.
 
 The serving model is a deliberately tiny GQA config (below even the yi_6b
 smoke config): this benchmark measures SERVING overhead — dispatch, sync,
@@ -49,6 +56,15 @@ import time
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# --mesh must be known BEFORE jax initializes: CPU-simulated devices only
+# exist if XLA_FLAGS requests them up front (importing the jax-free helpers
+# is safe; querying devices is what locks the backend in)
+from repro.launch.mesh import ensure_host_device_flags, mesh_spec_from_argv
+
+_MESH_SPEC = mesh_spec_from_argv(sys.argv)
+if _MESH_SPEC:
+    ensure_host_device_flags(_MESH_SPEC)
 
 import jax
 
@@ -82,12 +98,12 @@ def make_traffic(n_requests, tasks, vocab, prompt_lens, max_new, seed=0):
 
 
 def run_engine(bundle, base, gen_ws, registry, traffic, *, n_slots,
-               cache_cap, byte_budget, horizon=8, legacy=False):
+               cache_cap, byte_budget, horizon=8, legacy=False, mesh=None):
     cache = ExpansionCache(byte_budget)
     engine = ServeEngine(bundle, base, gen_ws, registry, n_slots=n_slots,
                          cache_cap=cache_cap, expansion_cache=cache,
                          decode_horizon=horizon, legacy_decode=legacy,
-                         metrics=Metrics())
+                         metrics=Metrics(), mesh=mesh)
     # warmup: run the FULL traffic once untimed so every (prompt_len,
     # prefill-group-size) shape AND every decode-block length is compiled
     # before the measured window. Expansions stay cached (the cached arm
@@ -148,6 +164,9 @@ def main():
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="allowed relative regression vs the baseline "
                          "speedup (ratio check, machine-independent)")
+    ap.add_argument("--mesh", default=None,
+                    help="add a sharded-engine arm on a DxM (data, model) "
+                         "mesh of CPU-simulated devices, e.g. --mesh 2x4")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny traffic for CI")
     args = ap.parse_args()
@@ -174,7 +193,10 @@ def main():
           f"{args.max_new} new tokens each, horizon K={args.horizon}")
 
     prompt_lens = (8,) if args.smoke else (8, 16, 24)
-    cache_cap = max(prompt_lens) + args.max_new + 1
+    # every arm uses the same cap; the rounding only pads (numerics-free)
+    from repro.launch.mesh import round_serve_cache_cap
+    cache_cap = round_serve_cache_cap(max(prompt_lens) + args.max_new + 1,
+                                      args.mesh)
     traffic = make_traffic(args.requests, tasks, bundle.model_cfg.vocab,
                            prompt_lens, args.max_new)
     ekw = dict(n_slots=args.n_slots, cache_cap=cache_cap)
@@ -193,19 +215,35 @@ def main():
     hot_tok, hot_dt, hot_eng, hot_out = run_engine(
         bundle, base, gen_ws, registry, traffic, byte_budget=None,
         horizon=args.horizon, **ekw)
+    mesh_row = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.mesh)
+        mesh_tok, mesh_dt, mesh_eng, mesh_out = run_engine(
+            bundle, base, gen_ws, registry, traffic, byte_budget=None,
+            horizon=args.horizon, mesh=mesh, **ekw)
+        if mesh_out != seq_out:
+            raise SystemExit(f"engine-mesh ({args.mesh}) tokens diverged "
+                             "from sequential reference")
+        if mesh_eng.metrics.snapshot()["adapter_full_restacks"] != 0:
+            raise SystemExit("engine-mesh performed a full adapter restack")
+        mesh_row = ("engine-mesh", mesh_tok, mesh_dt)
 
     for name, out in [("engine-pr1", pr1_out), ("engine-k1", k1_out),
                       ("engine-cold", cold_out), ("engine-cached", hot_out)]:
         if out != seq_out:
             raise SystemExit(f"{name} tokens diverged from sequential "
                              "reference")
-    print("# all engine arms token-identical to the sequential reference")
+    print("# all engine arms token-identical to the sequential reference"
+          + (f" (incl. mesh {args.mesh})" if mesh_row else ""))
 
     rows = [("sequential", seq_tok, seq_dt),
             ("engine-pr1", pr1_tok, pr1_dt),
             ("engine-k1", k1_tok, k1_dt),
             ("engine-cold-cache", cold_tok, cold_dt),
             ("engine-cached", hot_tok, hot_dt)]
+    if mesh_row:
+        rows.append(mesh_row)
     print(f"{'arm':<20}{'gen tokens':>11}{'seconds':>9}{'tok/s':>9}")
     for name, tok, dt in rows:
         print(f"{name:<20}{tok:>11}{dt:>9.2f}{tok / dt:>9.1f}")
@@ -230,13 +268,18 @@ def main():
     print(f"# horizon-K (K={args.horizon}) vs PR-1 per-token arm: "
           f"{speedup_pr1:.2f}x tokens/s")
     print(f"# horizon-K vs fused K=1 arm: {speedup_k1:.2f}x tokens/s")
+    if mesh_row:
+        print(f"# mesh arm ({args.mesh}, CPU-simulated devices): "
+              f"{mesh_tok / mesh_dt:.1f} tok/s, token-identical, "
+              "0 full restacks")
 
     report = {
         "bench": "serve",
         "smoke": bool(args.smoke),
         "config": {"tasks": args.tasks, "requests": args.requests,
                    "max_new": args.max_new, "n_slots": args.n_slots,
-                   "horizon": args.horizon, "prompt_lens": list(prompt_lens)},
+                   "horizon": args.horizon, "prompt_lens": list(prompt_lens),
+                   "mesh": args.mesh},
         "arms": {name: {"tokens": tok, "seconds": round(dt, 4),
                         "tok_per_s": round(tok / dt, 1)}
                  for name, tok, dt in rows},
@@ -250,6 +293,17 @@ def main():
                      "horizon_vs_pr1": round(speedup_pr1, 3),
                      "horizon_vs_k1": round(speedup_k1, 3)},
     }
+    if mesh_row:
+        # CPU-sim ratio: D*M interpreted host devices time-slice the same
+        # cores, so this measures sharding OVERHEAD, not hardware speedup —
+        # recorded (not gated) to track the trajectory across PRs
+        report["mesh"] = {
+            "spec": args.mesh, "n_devices": len(jax.devices()),
+            "tok_per_s": round(mesh_tok / mesh_dt, 1),
+            "token_identical": True,
+            "cached_vs_mesh": round((hot_tok / hot_dt)
+                                    / (mesh_tok / mesh_dt), 3),
+        }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -15,7 +15,12 @@ This driver exercises the full serving stack (repro.serve):
   4. hot-swap one task's bundle mid-demo and serve from the new weights
      without restarting anything.
 
-    PYTHONPATH=src python examples/serve_adapters.py [--tasks 4]
+With --mesh DxM the SAME engine runs sharded over a (data, model) device
+mesh (CPU-simulated host devices are requested automatically): frozen base
+tensor-parallel, KV pool slots-over-data / sequence-over-model, expansion
+output model-axis tiled — token-identical to the single-device run.
+
+    PYTHONPATH=src python examples/serve_adapters.py [--tasks 4] [--mesh 2x4]
 """
 import argparse
 import os
@@ -24,6 +29,14 @@ import tempfile
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# --mesh must be seen BEFORE jax initializes its backends so XLA_FLAGS can
+# request the CPU-simulated host devices (see launch.mesh helpers)
+from repro.launch.mesh import ensure_host_device_flags, mesh_spec_from_argv
+
+_MESH_SPEC = mesh_spec_from_argv(sys.argv)
+if _MESH_SPEC:
+    ensure_host_device_flags(_MESH_SPEC)
 
 import jax
 import numpy as np
@@ -43,7 +56,19 @@ def main():
     ap.add_argument("--n-slots", type=int, default=8)
     ap.add_argument("--horizon", type=int, default=8,
                     help="fused decode block length K (tokens per dispatch)")
+    ap.add_argument("--mesh", default=None,
+                    help="run the engine sharded over a DxM (data, model) "
+                         "mesh of CPU-simulated devices, e.g. 2x4")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.mesh)
+        print(f"mesh {args.mesh}: {len(jax.devices())} host devices, axes "
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))} — base "
+              "params tensor-parallel, KV pool slots/data + seq/model, "
+              "adapter stacks slots/data, expansion output model-tiled")
 
     arch = get_arch("yi_6b")
     gen = GeneratorConfig(k=5, d=1000, width=32, seed=0)
@@ -65,11 +90,13 @@ def main():
           f"{bundle.plan.represented_params * 2 / 1e6:.1f} MB of raw "
           f"adapters each)")
 
-    cap = args.prompt_len + args.decode_steps + 1
+    from repro.launch.mesh import round_serve_cache_cap
+    cap = round_serve_cache_cap(args.prompt_len + args.decode_steps + 1,
+                                args.mesh)
     engine = ServeEngine(bundle, base, gen_ws, registry,
                          n_slots=args.n_slots, cache_cap=cap,
                          decode_horizon=args.horizon,
-                         expansion_cache=ExpansionCache())
+                         expansion_cache=ExpansionCache(), mesh=mesh)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()

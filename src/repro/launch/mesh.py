@@ -7,6 +7,8 @@ state. Single pod: (data=16, model=16) = 256 chips. Multi-pod: 2 pods x 256
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
 
@@ -33,3 +35,66 @@ def make_mesh(shape, axes):
         n *= s
     return jax.make_mesh(tuple(shape), tuple(axes),
                          devices=jax.devices()[:n])
+
+
+def parse_mesh_spec(spec: str) -> tuple[int, int]:
+    """'DxM' -> (data, model), e.g. '2x4' -> (2, 4). Both factors >= 1."""
+    try:
+        d, m = (int(s) for s in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"mesh spec must look like '2x4', got {spec!r}")
+    if d < 1 or m < 1:
+        raise ValueError(f"mesh factors must be >= 1, got {spec!r}")
+    return d, m
+
+
+def mesh_spec_from_argv(argv) -> str | None:
+    """Extract a --mesh DxM value from raw argv. Entry scripts (bench,
+    example) call this before argparse: the device count implied by --mesh
+    must reach XLA_FLAGS before jax initializes its backends."""
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--mesh="):
+            return a.split("=", 1)[1]
+    return None
+
+
+def ensure_host_device_flags(spec: str):
+    """Request D*M CPU-simulated host devices via XLA_FLAGS unless a
+    device-count flag is already present. Importing jax is harmless at this
+    point; creating a backend (any device query) is not — call this first."""
+    d, m = parse_mesh_spec(spec)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={d * m}"
+        ).strip()
+
+
+def round_serve_cache_cap(min_cap: int, mesh_spec: str | None = None,
+                          multiple: int = 8) -> int:
+    """Round a serving KV cache capacity up so the pooled sequence dim
+    divides the mesh's model axis (specs.cache_pspecs puts S on 'model';
+    sanitize_pspec silently degrades a non-divisible dim to replicated).
+    Pure padding — decode masks past each slot's position, so numerics are
+    unchanged. Without a mesh spec, rounds to `multiple` for shape reuse."""
+    if mesh_spec:
+        multiple = max(multiple, parse_mesh_spec(mesh_spec)[1])
+    return -(-min_cap // multiple) * multiple
+
+
+def make_serve_mesh(spec: str = "2x4"):
+    """(data, model) mesh for the sharded serving engine (repro.serve).
+    On a CPU host the caller must export
+    XLA_FLAGS=--xla_force_host_platform_device_count=<D*M> BEFORE anything
+    initializes jax (the pattern the dry-run launcher and CI use)."""
+    d, m = parse_mesh_spec(spec)
+    n = d * m
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"serve mesh {spec} needs {n} devices, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} before importing anything that initializes jax")
+    return jax.make_mesh((d, m), ("data", "model"), devices=devices[:n])

@@ -61,7 +61,7 @@ def _wkv_chunk(r, k, v, logw, u, s0):
     r_dec = r * jnp.exp(cw_excl)
     y = jnp.einsum("bihk,bhkn->bihn", r_dec, s0)
     # intra-chunk (j < i): A_ij = sum_k r_i k_j exp(cw_{i-1} - cw_j)
-    e = jnp.exp(jnp.clip(cw_excl[:, :, None] - cw[:, None, :], a_max=0.0))
+    e = jnp.exp(jnp.clip(cw_excl[:, :, None] - cw[:, None, :], max=0.0))
     c = r.shape[1]
     mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
     a = jnp.einsum("bihk,bjhk,bijhk->bijh", r, k, e)
@@ -99,7 +99,7 @@ def rwkv_time_mix(x: Array, p: dict, cfg: RWKVConfig,
     dd = jnp.tanh(xw @ p["w_decay_a"].astype(jnp.float32)) \
         @ p["w_decay_b"].astype(jnp.float32)
     logw = -jnp.exp(jnp.clip(p["decay_base"].astype(jnp.float32) + dd,
-                             a_max=15.0))               # < 0
+                             max=15.0))               # < 0
     logw = logw.reshape(bsz, s, h, kd)
     u = p["u_bonus"].astype(jnp.float32)                # (H, K)
 

@@ -422,8 +422,13 @@ def prefill(cfg: ModelConfig, params: PyTree, inputs: Array,
         return shard(h, "act_btd"), lc
 
     x, cache = jax.lax.scan(body, x, params["layers"])
+    # Pin the stacked cache to its canonical layout (cache_pspecs) before it
+    # leaves the jit: the serving engine scatters prefill group caches into a
+    # pooled slot cache placed with exactly this sharding, so the scatter is
+    # a local per-shard write instead of a reshard (identity off-mesh).
+    cache = shard_cache(cache)
     x_last = rms_norm(x[:, -1:], params["final_norm_scale"])
-    logits = dense(x_last, params["lm_head"])[:, 0]
+    logits = shard(dense(x_last, params["lm_head"])[:, 0], "decode_logits")
     return logits, cache
 
 
@@ -469,7 +474,9 @@ def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
     (x, new_cache), _ = jax.lax.scan(
         body, (x, cache), (params["layers"], jnp.arange(n_layers)))
     x = rms_norm(x[:, -1:], params["final_norm_scale"])
-    logits = dense(x, params["lm_head"])[:, 0]
+    # vocab tiled on model straight out of the lm_head matmul: greedy argmax
+    # in the fused serve decode block reduces shard-locally (identity off-mesh)
+    logits = shard(dense(x, params["lm_head"])[:, 0], "decode_logits")
     return logits, new_cache
 
 

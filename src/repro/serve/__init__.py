@@ -9,9 +9,10 @@ from repro.serve.metrics import Metrics
 from repro.serve.registry import AdapterBundle, AdapterRegistry
 from repro.serve.scheduler import (Request, RequestState, Scheduler,
                                    SlotPool, StepPlan)
+from repro.serve.trace import run_trace
 
 __all__ = [
     "AdapterBundle", "AdapterRegistry", "ExpansionCache", "Metrics",
     "Request", "RequestState", "Scheduler", "ServeEngine", "SlotPool",
-    "StepPlan", "sequential_reference", "tree_bytes",
+    "StepPlan", "run_trace", "sequential_reference", "tree_bytes",
 ]

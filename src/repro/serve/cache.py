@@ -42,6 +42,8 @@ class ExpansionCache:
         self.bytes = 0
         self.hits = 0
         self.misses = 0
+        self.puts = 0
+        self.replacements = 0       # puts that overwrote a live key
         self.evictions = 0
         self.invalidations = 0
 
@@ -59,8 +61,10 @@ class ExpansionCache:
     def put(self, task_id: str, bundle_hash: str, value: PyTree) -> PyTree:
         """Insert (returns `value` for call-through convenience)."""
         key = (task_id, bundle_hash)
+        self.puts += 1
         if key in self._entries:
             self.bytes -= self._entries.pop(key)[1]
+            self.replacements += 1
         nbytes = tree_bytes(value)
         self._entries[key] = (value, nbytes)
         self.bytes += nbytes
@@ -89,6 +93,12 @@ class ExpansionCache:
 
     def reset_stats(self):
         self.hits = self.misses = self.evictions = self.invalidations = 0
+        self.puts = self.replacements = 0
+
+    def lru_keys(self) -> list[Key]:
+        """Keys in eviction order (least-recently-used first). Tests assert
+        the LRU discipline against a reference model through this."""
+        return list(self._entries)
 
     def __contains__(self, key: Key) -> bool:
         return key in self._entries
@@ -97,7 +107,14 @@ class ExpansionCache:
         return len(self._entries)
 
     def stats(self) -> dict:
+        # invariant while counters cover the cache's whole history, i.e.
+        # absent reset_stats()/clear() (asserted by tests/test_serve_cache.py):
+        # entries == puts - replacements - evictions - invalidations. A
+        # reset_stats() on a warm cache deliberately zeroes the flow
+        # counters without touching live entries (the bench uses that to
+        # scope stats to a measured window), which breaks the equation.
         return {"entries": len(self._entries), "bytes": self.bytes,
                 "hits": self.hits, "misses": self.misses,
+                "puts": self.puts, "replacements": self.replacements,
                 "evictions": self.evictions,
                 "invalidations": self.invalidations}

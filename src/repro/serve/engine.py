@@ -30,15 +30,25 @@ tasks. Hot-swap: republishing a task's bundle invalidates its cache entry;
 in-flight requests finish on the weights they started with (their slot's
 rows of the stacked buffer are written at assign time and never touched by
 the swap), new admissions pick up the new bundle.
+
+Mesh serving: pass `mesh=` (a (data, model) Mesh, launch.mesh.make_serve_mesh)
+and the same engine runs tensor/data parallel — frozen base, KV pool, and
+stacked adapter buffers placed per sharding.specs, MCNC expansion sharded
+with model-axis-tiled output, and explicit in/out shardings on every
+donated hot-path jit (README.md §Sharded serving). Control flow, cache
+behavior, and metrics are identical either way; tests/test_serve.py holds
+the two token-identical on the same request trace.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.reparam import expand_tree, flatten_with_paths, \
     unflatten_paths
@@ -49,6 +59,9 @@ from repro.serve.metrics import Metrics
 from repro.serve.registry import AdapterRegistry
 from repro.serve.scheduler import (PrefillGroup, Request, Scheduler,
                                    SlotPool)
+from repro.sharding.rules import data_axes, sanitize_pspec, use_rules
+from repro.sharding.specs import (cache_pspecs, effective_adapter_pspecs,
+                                  stacked_adapter_pspecs)
 from repro.train.steps import (TaskBundle, make_assembled_decode_step,
                                make_assembled_multi_decode_step,
                                make_assembled_prefill_step, make_decode_step,
@@ -93,6 +106,17 @@ class ServeEngine:
     pooled cache uses per-row positions, which MLA decode doesn't support).
     decode_horizon: max fused decode block length K (the engine compiles
     one block per power-of-two K the scheduler plans, so O(log K) variants).
+    mesh: optional (data, model) jax Mesh (launch.mesh.make_serve_mesh).
+    When set, the engine is tensor/data parallel end to end: the frozen base
+    is placed per sharding.specs.model_param_pspecs, the pooled slot KV
+    cache per cache_pspecs (slots over data, sequence over model), the
+    persistent stacked adapter buffers per stacked_adapter_pspecs, MCNC
+    expansion runs as a sharded computation (alphas replicated in, effective
+    leaves model-axis tiled out), and every hot-path jit carries explicit
+    in/out shardings matching those placements so the token path never
+    reshards. The scheduler, cache, and metrics behavior is IDENTICAL to the
+    single-device engine — the differential harness in tests/test_serve.py
+    holds the two token-identical on the same request trace.
     """
 
     def __init__(self, bundle: TaskBundle, base: PyTree, gen_ws: list,
@@ -100,19 +124,24 @@ class ServeEngine:
                  cache_cap: int = 128,
                  expansion_cache: ExpansionCache | None = None,
                  max_prefill_requests: int = 8,
+                 max_prefill_group: int | None = None,
                  decode_horizon: int = 8,
                  interference_horizon: int | None = None,
                  legacy_decode: bool = False,
-                 metrics: Metrics | None = None):
+                 metrics: Metrics | None = None,
+                 mesh: Mesh | None = None):
         if bundle.arch.kind != "lm":
             raise ValueError("ServeEngine serves decoder-only LMs")
         if bundle.model_cfg.attn_type == "mla":
             raise ValueError("pooled per-row decode needs GQA attention")
         if bundle.mode not in ("mcnc", "pranc"):
             raise ValueError(f"unsupported mode {bundle.mode!r}")
+        if mesh is not None and legacy_decode:
+            raise ValueError("legacy_decode is a single-device benchmark "
+                             "arm; it has no sharded variant")
         self.bundle = bundle
         self.cfg = bundle.model_cfg
-        self.base = base
+        self.mesh = mesh
         self.gen_ws = gen_ws
         self.registry = registry
         self.cache = (expansion_cache if expansion_cache is not None
@@ -127,10 +156,12 @@ class ServeEngine:
         self.pool = SlotPool(n_slots, cache_cap)
         self.scheduler = Scheduler(
             self.pool, max_prefill_requests=max_prefill_requests,
+            max_prefill_group=max_prefill_group,
             max_decode_horizon=1 if legacy_decode else decode_horizon,
             interference_horizon=interference_horizon)
         registry.subscribe(self.cache.invalidate_task)
 
+        self.base = base
         self._flat_base = flatten_with_paths(base)
         self._adapter_paths = _adapter_paths(self._flat_base)
         param_dtype = jnp.dtype(self.cfg.param_dtype)
@@ -142,13 +173,21 @@ class ServeEngine:
         self._pos = jnp.zeros((n_slots,), jnp.int32)
         self._remaining = jnp.zeros((n_slots,), jnp.int32)
 
+        # mesh mode: compute every buffer's canonical NamedSharding, place
+        # the frozen base / KV pool / slot state accordingly, and thread
+        # explicit shardings through the jits below (single-device: no-op)
+        sharding_kw = self._setup_sharding()
+
         self._prefill = jax.jit(make_assembled_prefill_step(bundle,
                                                             cache_cap))
         self._scatter = jax.jit(_scatter_prefill,
-                                donate_argnums=(0, 2, 3, 4))
-        self._slot_writer = jax.jit(_write_slots, donate_argnums=(0,))
+                                donate_argnums=(0, 2, 3, 4),
+                                **sharding_kw["scatter"])
+        self._slot_writer = jax.jit(_write_slots, donate_argnums=(0,),
+                                    **sharding_kw["slot_writer"])
         self._decode_blocks: dict[int, Any] = {}   # horizon K -> jitted block
-        self._expand_jit = jax.jit(self._expand_effective)
+        self._expand_jit = jax.jit(self._expand_effective,
+                                   **sharding_kw["expand"])
         self._legacy_decode_fn = (jax.jit(make_assembled_decode_step(bundle))
                                   if legacy_decode else None)
         self._legacy_params: PyTree | None = None  # restack memo (legacy)
@@ -159,14 +198,17 @@ class ServeEngine:
         # hold the host-side reference so hot-swap/eviction never mutates an
         # in-flight slot, and so tests can rebuild the stack from scratch
         self._slot_adapters: list[tuple | None] = [None] * n_slots
-        self._zero_adapters = {p: jnp.zeros_like(self._flat_base[p])
-                               for p in self._adapter_paths}
+        self._zero_adapters = self._place_eff(
+            {p: jnp.zeros_like(self._flat_base[p])
+             for p in self._adapter_paths})
         # persistent stacked adapter buffer {path: (L, n_slots, m, r)},
         # updated incrementally via _write_slots — NEVER restacked wholesale
         self._stacked = {
             p: jnp.zeros(v.shape[:1] + (n_slots,) + v.shape[1:], v.dtype)
             for p, v in ((p, self._flat_base[p])
                          for p in self._adapter_paths)}
+        if mesh is not None:
+            self._stacked = jax.device_put(self._stacked, self._stacked_sh)
         self._decode_params: PyTree = None
         self._params_dirty = False
         self._rebuild_decode_params()
@@ -174,6 +216,89 @@ class ServeEngine:
         self._assembled: dict[tuple, PyTree] = {}
 
         self._declare_metrics()
+
+    # ------------------------------------------------------------------
+    # Mesh placement (tentpole: sharded serving).
+    # ------------------------------------------------------------------
+    def _setup_sharding(self) -> dict:
+        """Mesh-mode buffer placement. Computes one canonical NamedSharding
+        per device-resident buffer (sanitized for divisibility so producers
+        and consumers agree buffer-for-buffer), commits the frozen base, the
+        pooled KV cache, and the slot counters to it, and returns the
+        explicit sharding kwargs for the hot-path jits. Single-device mode
+        returns empty kwargs and touches nothing."""
+        empty = {"scatter": {}, "slot_writer": {}, "expand": {}}
+        if self.mesh is None:
+            self._repl_sh = None
+            return empty
+        mesh = self.mesh
+        dp = data_axes(mesh)
+        self._repl_sh = NamedSharding(mesh, P())
+
+        def named(spec, shape):
+            return NamedSharding(mesh, sanitize_pspec(spec, shape, mesh))
+
+        # frozen base (incl. A0/B0): tensor-parallel per the bundle pspecs
+        flat_pspecs = flatten_with_paths(self.bundle.base_pspecs)
+        self._base_sh = {p: named(flat_pspecs[p], v.shape)
+                         for p, v in self._flat_base.items()}
+        self.base = jax.device_put(self.base,
+                                   unflatten_paths(self._base_sh))
+        self._flat_base = flatten_with_paths(self.base)
+
+        # pooled slot KV cache: slots over data, sequence over model — the
+        # exact layout lm.decode_step's shard_cache pins on the loop carry,
+        # so the fused block never reshards the pool
+        kv_pspecs = cache_pspecs(self.kv, dp=dp)
+        self._kv_sh = jax.tree.map(lambda v, s: named(s, v.shape),
+                                   self.kv, kv_pspecs)
+        self.kv = jax.device_put(self.kv, self._kv_sh)
+        self._tokens, self._pos, self._remaining = jax.device_put(
+            (self._tokens, self._pos, self._remaining), self._repl_sh)
+
+        # effective adapter leaves (expansion outputs / cache values) keep
+        # the exact spec their path has inside the full param tree; stacked
+        # per-slot buffers add the slot dim over data
+        eff_pspecs = effective_adapter_pspecs(self.bundle.base_specs)
+        self._eff_sh = {p: named(eff_pspecs[p], self._flat_base[p].shape)
+                        for p in self._adapter_paths}
+        st_pspecs = stacked_adapter_pspecs(self.bundle.base_specs, dp=dp)
+        n_slots = self.pool.n_slots
+        self._stacked_sh = {
+            p: named(st_pspecs[p], self._flat_base[p].shape[:1]
+                     + (n_slots,) + self._flat_base[p].shape[1:])
+            for p in self._adapter_paths}
+        # decode params tree = base overlaid with the stacked buffers
+        flat_sh = dict(self._base_sh)
+        flat_sh.update(self._stacked_sh)
+        self._decode_params_sh = unflatten_paths(flat_sh)
+        vec = self._repl_sh
+        return {
+            # donated buffers keep their placement across every step: the
+            # out shardings repeat the canonical in shardings verbatim
+            "scatter": {"out_shardings": (self._kv_sh, vec, vec, vec)},
+            "slot_writer": {"out_shardings": self._stacked_sh},
+            # sharded MCNC expansion: (alpha, beta) go in replicated (they
+            # are KBs), the generator output lands model-axis tiled so the
+            # expanded factors are pre-sharded for prefill assembly AND for
+            # the incremental slot writes into the stacked buffer
+            "expand": {"out_shardings": self._eff_sh},
+        }
+
+    def _place_eff(self, eff: dict[str, Array]) -> dict[str, Array]:
+        """Commit flat effective-adapter leaves to their canonical sharding
+        (identity off-mesh, and for leaves already placed there)."""
+        if self.mesh is None:
+            return eff
+        return jax.device_put(eff, {p: self._eff_sh[p] for p in eff})
+
+    def _rules(self):
+        """Logical sharding-rule context for device work (identity
+        off-mesh): jit traces must see the active mesh so the shard() /
+        shard_cache() constraints inside models.lm and train.steps fire."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return use_rules(self.mesh)
 
     def _declare_metrics(self):
         """Pre-create the hot-path instruments so snapshots always carry
@@ -215,8 +340,13 @@ class ServeEngine:
         if eff is None:
             art = self.registry.load(task_id)      # hash-verified read
             state = jax.tree.map(jnp.asarray, art.state)
+            if self.mesh is not None:
+                # alphas/betas replicate (KBs); the jit's out_shardings tile
+                # the expanded leaves on the model axis
+                state = jax.device_put(state, self._repl_sh)
             t0 = time.perf_counter()
-            eff = self._expand_jit(state)
+            with self._rules():
+                eff = self._expand_jit(state)
             jax.block_until_ready(eff)
             self.metrics.histogram("expansion_s").observe(
                 time.perf_counter() - t0)
@@ -244,6 +374,10 @@ class ServeEngine:
         """One scheduler iteration: admissions+prefill, then one fused
         decode block of `plan.decode_horizon` tokens over every slot.
         Returns requests finished during this step."""
+        with self._rules():
+            return self._step_impl()
+
+    def _step_impl(self) -> list[Request]:
         t_step = time.perf_counter()
         tok0 = self.metrics.counter("tokens_generated").value
         plan = self.scheduler.plan_step()
@@ -279,7 +413,7 @@ class ServeEngine:
             # weights don't linger in device memory semantics-wise)
             self._stacked = self._slot_writer(self._stacked,
                                               self._zero_adapters,
-                                              jnp.asarray(freed))
+                                              np.asarray(freed, np.int32))
             self._params_dirty = True
             self.metrics.counter("adapter_slot_writes").inc(len(freed))
         self.metrics.gauge("active_slots").set(len(self.pool.active_slots()))
@@ -327,20 +461,23 @@ class ServeEngine:
     def _prefill_group(self, group: PrefillGroup, finished: list[Request]):
         key, eff = self.adapters_for(group.task_id)
         params = self._prefill_params(key, eff)
-        prompts = jnp.asarray([r.prompt for r in group.requests],
-                              jnp.int32)
+        # host-built arrays stay numpy (uncommitted): in mesh mode a
+        # jnp.asarray would commit them to device 0 and poison every jit
+        # they meet with a mixed-device error
+        prompts = np.asarray([r.prompt for r in group.requests], np.int32)
         logits, group_cache = self._prefill(params, {"inputs": prompts})
-        idx = jnp.asarray(group.slots)
+        idx = np.asarray(group.slots, np.int32)
         first_dev = jnp.argmax(logits, -1).astype(jnp.int32)
         if self.legacy_decode:
             # PR-1's prefill scatter: eager per-leaf .at[].set dispatches,
             # no donation, no device-resident decode state
+            jidx = jnp.asarray(idx)
             self.kv = jax.tree.map(
-                lambda pool, gc: pool.at[:, idx].set(gc.astype(pool.dtype)),
+                lambda pool, gc: pool.at[:, jidx].set(gc.astype(pool.dtype)),
                 self.kv, group_cache)
         else:
-            rem = jnp.asarray(
-                [r.max_new_tokens - 1 for r in group.requests], jnp.int32)
+            rem = np.asarray(
+                [r.max_new_tokens - 1 for r in group.requests], np.int32)
             (self.kv, self._tokens, self._pos,
              self._remaining) = self._scatter(
                 self.kv, group_cache, self._tokens, self._pos,
@@ -372,9 +509,21 @@ class ServeEngine:
         fn = self._decode_blocks.get(k)
         if fn is None:
             unroll = self.UNROLL_MIN_K if k >= self.UNROLL_MIN_K else 1
+            kw = {}
+            if self.mesh is not None:
+                # the token path carries EXPLICIT in/out shardings: params
+                # (base + stacked adapters) and the KV pool enter in their
+                # canonical placement and leave in the same one, so a block
+                # is donation-stable and reshard-free end to end; the
+                # (K, n_slots) token block replicates for the host harvest
+                vec = self._repl_sh
+                kw = dict(
+                    in_shardings=(self._decode_params_sh, self._kv_sh,
+                                  vec, vec, vec),
+                    out_shardings=(vec, self._kv_sh, vec, vec, vec))
             fn = jax.jit(make_assembled_multi_decode_step(self.bundle, k,
                                                           unroll=unroll),
-                         donate_argnums=(1, 2, 3, 4))
+                         donate_argnums=(1, 2, 3, 4), **kw)
             self._decode_blocks[k] = fn
         return fn
 

@@ -12,6 +12,10 @@ traffic, and freed slots are reused immediately (Orca-style iteration-level
 scheduling).
 
 No jax imports: every decision here is unit-testable without a device.
+Plans are also device-layout-agnostic by contract: the same trace produces
+the same admission order, prefill groups, and horizons whether the engine
+runs on one device or a (data, model) mesh — the sharded-vs-single-device
+differential oracle (tests/test_serve.py) leans on exactly that.
 """
 from __future__ import annotations
 
@@ -133,11 +137,15 @@ class Scheduler:
 
     def __init__(self, pool: SlotPool, *, max_prefill_requests: int = 8,
                  max_decode_horizon: int = 8,
-                 interference_horizon: int | None = None):
+                 interference_horizon: int | None = None,
+                 max_prefill_group: int | None = None):
         if max_decode_horizon < 1:
             raise ValueError("max_decode_horizon must be >= 1")
+        if max_prefill_group is not None and max_prefill_group < 1:
+            raise ValueError("max_prefill_group must be >= 1")
         self.pool = pool
         self.max_prefill_requests = max_prefill_requests
+        self.max_prefill_group = max_prefill_group
         self.max_decode_horizon = max_decode_horizon
         self.interference_horizon = (max_decode_horizon
                                      if interference_horizon is None
@@ -180,9 +188,21 @@ class Scheduler:
             self.pool.assign(free.popleft(), req)
             admitted.append(req)
 
-        groups: dict[tuple[str, int], PrefillGroup] = {}
+        # max_prefill_group splits an oversized (task, len) batch into
+        # bounded chunks: prefill rows are independent, so the split is
+        # token-identical, but it caps the distinct batch shapes the engine
+        # compiles (and lets a mesh engine keep group sizes aligned to its
+        # data axis)
+        groups: dict[tuple, PrefillGroup] = {}
+        chunk: dict[tuple[str, int], int] = {}
         for req in admitted:
-            key = (req.task_id, req.prompt_len)
+            base = (req.task_id, req.prompt_len)
+            key = base + (chunk.get(base, 0),)
+            if (self.max_prefill_group is not None and key in groups
+                    and len(groups[key].requests)
+                    >= self.max_prefill_group):
+                chunk[base] = chunk.get(base, 0) + 1
+                key = base + (chunk[base],)
             if key not in groups:
                 groups[key] = PrefillGroup(task_id=req.task_id,
                                            requests=[], slots=[])

@@ -1,0 +1,117 @@
+"""Canonical request-trace harness for engine differential tests.
+
+A *trace* is a JSON-serializable description of one serving session:
+deterministic task states (TaskBundle.synthetic_trainable indices), engine
+knobs, and an ordered request list. `run_trace` replays it through a
+ServeEngine built from scratch and returns the generated tokens plus the
+cache/engine counters — everything two engines must agree on.
+
+The module doubles as a subprocess driver (`python -m repro.serve.trace`):
+the sharded-vs-single-device differential oracle in tests/test_serve.py runs
+the mesh engine in a child process whose XLA_FLAGS force
+--xla_force_host_platform_device_count=8 (host placeholder devices must be
+requested before jax initializes, so the parent pytest process — already
+holding one real CPU device — cannot host the mesh itself). Everything the
+child builds is derived from seeds, so parent and child construct bit-equal
+bundles, bases, and task states.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import sys
+import tempfile
+from typing import Any, Sequence
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.core.generator import GeneratorConfig, init_generator
+from repro.serve.engine import ServeEngine
+from repro.serve.registry import AdapterRegistry
+from repro.train.steps import TaskBundle, build_bundle
+
+# counters two engines replaying one trace must agree on exactly
+COMPARED_COUNTERS = ("requests_completed", "tokens_generated",
+                     "decode_blocks", "decode_steps", "decode_slot_steps",
+                     "adapter_slot_writes", "adapter_full_restacks",
+                     "prefill_batches", "expansions")
+
+DEFAULT_GEN = {"k": 5, "d": 600, "width": 32, "seed": 0}
+
+
+def build_fixture(trace: dict) -> tuple[TaskBundle, Any, list]:
+    """Deterministic (bundle, base, gen_ws) from a trace's seed config."""
+    gen = GeneratorConfig(**trace.get("gen", DEFAULT_GEN))
+    bundle = build_bundle(get_arch(trace.get("arch", "yi_6b")), "mcnc",
+                          smoke=True, generator=gen,
+                          adapter_rank=trace.get("adapter_rank", 4))
+    base = bundle.init_base(jax.random.PRNGKey(trace.get("base_seed", 0)))
+    return bundle, base, init_generator(gen)
+
+
+def publish_tasks(trace: dict, bundle: TaskBundle, registry: AdapterRegistry
+                  ) -> dict[str, Any]:
+    """Publish each task's deterministic synthetic state; returns states
+    (for sequential_reference oracles)."""
+    gen = GeneratorConfig(**trace.get("gen", DEFAULT_GEN))
+    states = {}
+    for task_id, idx in trace["tasks"].items():
+        states[task_id] = bundle.synthetic_trainable(int(idx))
+        registry.publish(task_id, states[task_id], gen)
+    return states
+
+
+def run_trace(trace: dict, *, mesh=None, registry_root: str | None = None
+              ) -> dict:
+    """Build an engine per the trace and replay its requests. Returns
+    {"tokens": [per-request generated tokens, trace order],
+     "cache": ExpansionCache.stats(), "counters": {name: value}}."""
+    bundle, base, gen_ws = build_fixture(trace)
+    with contextlib.ExitStack() as stack:
+        # self-managed registries are temporary: bundles are read (and
+        # expanded) while the trace drains, then the artifacts can go
+        root = registry_root or stack.enter_context(
+            tempfile.TemporaryDirectory(prefix="serve_trace_"))
+        registry = AdapterRegistry(root)
+        publish_tasks(trace, bundle, registry)
+        engine = ServeEngine(bundle, base, gen_ws, registry, mesh=mesh,
+                             **trace.get("engine", {}))
+        reqs = [engine.submit(t, p, m) for t, p, m in trace["requests"]]
+        engine.run_until_idle()
+    snap = engine.metrics.snapshot()
+    return {
+        "tokens": [list(r.generated) for r in reqs],
+        "cache": engine.cache.stats(),
+        "counters": {k: snap.get(k, 0) for k in COMPARED_COUNTERS},
+    }
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default="-",
+                    help="trace JSON path, or '-' for stdin")
+    ap.add_argument("--mesh", default=None,
+                    help="run sharded on a DxM (data, model) mesh, e.g. 2x4 "
+                         "(requires XLA_FLAGS to provide D*M devices)")
+    args = ap.parse_args(argv)
+    if args.trace == "-":
+        trace = json.load(sys.stdin)
+    else:
+        with open(args.trace) as f:
+            trace = json.load(f)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.mesh)
+    out = run_trace(trace, mesh=mesh)
+    out["n_devices"] = len(jax.devices())
+    out["mesh"] = args.mesh
+    json.dump(out, sys.stdout)
+    sys.stdout.write("\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,6 +59,18 @@ def activation_rules(mesh: Mesh) -> dict[str, P]:
         "decode_scores": P(dp, None, None, None, mdl),  # (B,1,h,g,Smax)
         "decode_ckv": P(dp, mdl, None),              # (B, Smax, kv_lora)
         "decode_scores4": P(dp, None, None, mdl),    # (B,H,1,Smax)
+        # serving (repro.serve) rules. NB the pooled slot KV cache itself is
+        # a PARAM-side placement, not an activation rule: its layout (slots
+        # over data, sequence over model) comes from specs.cache_pspecs and
+        # is pinned by shard_cache on the decode loop carry.
+        # decode-step logits (B, vocab): vocab tiled on model straight out
+        # of the lm_head matmul so greedy argmax reduces shard-locally
+        "decode_logits": P(dp, mdl),
+        # per-slot decode counters (tokens/pos/remaining, (n_slots,) int32)
+        # stay REPLICATED: they are bytes-sized, host-harvested every block,
+        # and replicating them avoids a reshard boundary between the
+        # host-built scatter indices and the fused decode block
+        "serve_slot_vec": P(),
     }
 
 
@@ -79,7 +91,14 @@ def current_mesh() -> Mesh | None:
 
 
 def shard(x: jax.Array, name: str) -> jax.Array:
-    """Apply the logical sharding constraint `name` if rules are active."""
+    """Apply the logical sharding constraint `name` if rules are active.
+
+    Constraints deliberately allow GSPMD's uneven (padded) shardings for
+    non-divisible dims — a padded shard still holds ~1/N of the tensor,
+    which is the whole point for big weights/caches. Only canonical
+    PLACEMENTS (device_put / jit out_shardings / the shard_cache loop-carry
+    pin) sanitize via sanitize_pspec, because producers and consumers must
+    reconstruct the identical sharding from (spec, shape) alone."""
     mesh, rules = _CTX["mesh"], _CTX["rules"]
     if mesh is None or name not in rules:
         return x
@@ -96,6 +115,26 @@ def data_axes(mesh: Mesh | None = None) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def sanitize_pspec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec axes whose mesh-axis product does not divide the dim (and
+    axes beyond the rank). GSPMD tolerates uneven shardings via padding, but
+    a canonical *placement* (device_put / out_shardings / loop-carry pins)
+    must be reproducible from (spec, shape) alone so producers and consumers
+    agree buffer-for-buffer — the serving engine and shard_cache both
+    sanitize through here for exactly that reason."""
+    axes = []
+    for i, names in enumerate(spec):
+        if names is None or i >= len(shape):
+            axes.append(None)
+            continue
+        names_t = names if isinstance(names, tuple) else (names,)
+        size = 1
+        for n in names_t:
+            size *= mesh.shape[n]
+        axes.append(names if shape[i] % size == 0 else None)
+    return P(*axes)
+
+
 def shard_cache(cache):
     """Pin a (stacked, full-model) decode cache tree to its canonical
     sharding (specs.cache_pspecs) with divisibility sanitization. Needed
@@ -110,18 +149,8 @@ def shard_cache(cache):
     specs = cache_pspecs(cache, dp=data_axes(mesh))
 
     def apply(x, spec):
-        axes = []
-        for i, names in enumerate(spec):
-            if names is None or i >= x.ndim:
-                axes.append(None)
-                continue
-            names_t = names if isinstance(names, tuple) else (names,)
-            size = 1
-            for n in names_t:
-                size *= mesh.shape[n]
-            axes.append(names if x.shape[i] % size == 0 else None)
         return jax.lax.with_sharding_constraint(
-            x, NamedSharding(mesh, P(*axes)))
+            x, NamedSharding(mesh, sanitize_pspec(spec, x.shape, mesh)))
 
     return jax.tree.map(apply, cache, specs,
                         is_leaf=lambda s: isinstance(s, P) or not isinstance(

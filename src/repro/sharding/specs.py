@@ -153,6 +153,50 @@ def cache_pspecs(cache_specs: PyTree, dp: tuple[str, ...] = ("data",)
     return unflatten_paths(out)
 
 
+# ---------------------------------------------------------------------------
+# Serving (repro.serve) buffer specs. The engine's device-resident state on a
+# (data, model) mesh:
+#
+#   frozen base params          model_param_pspecs (tensor parallel + FSDP)
+#   pooled slot KV cache        cache_pspecs: (L, slot, Hkv, S, hd) — slot
+#                               over data, sequence over model (the
+#                               psum-over-seq decode layout, rules.decode_kv)
+#   effective adapter leaves    effective_adapter_pspecs: the (L, m, r) /
+#                               (L, r, n) expansion-cache values inherit the
+#                               EXACT spec their path has inside the full
+#                               param tree, so jitting MCNC expansion with
+#                               these as out_shardings makes the generator
+#                               output land model-axis tiled — pre-sharded
+#                               for both prefill assembly and slot stacking
+#   stacked per-slot adapters   stacked_adapter_pspecs: slot dim (inserted at
+#                               axis 1 -> (L, slot, m, r)) over data to match
+#                               the decode batch, trailing dims inherit the
+#                               leaf spec (per-example LoRA stays local)
+# ---------------------------------------------------------------------------
+
+def effective_adapter_pspecs(base_specs: PyTree) -> dict[str, P]:
+    """Flat {adapter_path: PartitionSpec} for expanded effective adapter
+    leaves (A0+dA / B0+dB) — identical to the leaf's spec in the merged
+    param tree (model_param_pspecs), keyed for the engine's flat caches."""
+    flat = flatten_with_paths(model_param_pspecs(base_specs))
+    return {p: s for p, s in flat.items()
+            if LORA_A_SUFFIX in p or LORA_B_SUFFIX in p}
+
+
+def stacked_adapter_pspecs(base_specs: PyTree,
+                           dp: tuple[str, ...] = ("data",)) -> dict[str, P]:
+    """Flat specs for the engine's persistent per-slot adapter stacks
+    {path: (L, n_slots, m, r)}: the slot dim (axis 1) shards over dp —
+    aligned with the decode batch so the batched LoRA einsum contracts
+    shard-locally — and the trailing dims keep the leaf's param spec."""
+    out = {}
+    for path, spec in effective_adapter_pspecs(base_specs).items():
+        axes = list(spec)
+        lead = axes[0] if axes else None
+        out[path] = P(lead, dp, *axes[1:])
+    return out
+
+
 def batch_pspecs(batch_specs: PyTree, dp: tuple[str, ...] = ("data",)
                  ) -> PyTree:
     """Input batches: shard dim 0 (batch) over dp when divisible."""

@@ -37,6 +37,7 @@ from repro.core.reparam import (CompressionPolicy, CompressionPlan,
 from repro.kernels.ops import kernel_expand_fn
 from repro.models import encdec, lm
 from repro.optim import AdamConfig, OptState, adam_init, adam_update
+from repro.sharding.rules import shard
 from repro.sharding.specs import (batch_pspecs, cache_pspecs,
                                   model_param_pspecs)
 
@@ -368,6 +369,15 @@ def make_assembled_multi_decode_step(bundle: TaskBundle, horizon: int,
             pos = jnp.where(active, pos + 1, pos)
             remaining = jnp.where(active, remaining - 1, remaining)
             emit = jnp.where(active, nxt, -1)
+            # pin the per-slot counters riding the scan carry to the serve
+            # rule (replicated): under a mesh GSPMD must not invent a
+            # different loop-state sharding mid-block, or the engine's
+            # explicit donated in/out shardings stop matching buffer-for-
+            # buffer (identity when no rules are installed)
+            tokens, pos, remaining, emit = (
+                shard(tokens, "serve_slot_vec"), shard(pos, "serve_slot_vec"),
+                shard(remaining, "serve_slot_vec"),
+                shard(emit, "serve_slot_vec"))
             return (cache, tokens, pos, remaining), emit
 
         carry, tok_block = jax.lax.scan(

@@ -1,9 +1,14 @@
 """Per-kernel shape/dtype sweep: Pallas (interpret mode, assignment rule)
-vs the pure-jnp oracle, forward and backward."""
+vs the pure-jnp oracle, forward and backward — fixed shapes plus randomized
+(N, k, width, d) property sweeps through the padding wrapper in ops.py."""
+import random
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core.generator import GeneratorConfig, init_generator
 from repro.kernels import ops, ref
@@ -100,6 +105,62 @@ def test_generator_weights_get_zero_grads():
     assert float(jnp.abs(g1).max()) == 0.0
     assert float(jnp.abs(g2).max()) == 0.0
     assert float(jnp.abs(g3).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Randomized differential sweep: arbitrary (N, k, width, d) through the
+# public ops.py wrapper (interpret mode). Shapes are drawn from a seed so
+# the sweep runs identically under real hypothesis and the conftest shim;
+# deliberately NOT rounded to the kernel's (bn, bd, 128) tiles — every draw
+# exercises the pad-then-slice wrapper path, the exact seam where an
+# off-by-one would silently truncate or read padding.
+# ---------------------------------------------------------------------------
+
+def _draw_shape(seed: int) -> tuple[int, int, int, int]:
+    rng = random.Random(seed)
+    return (rng.randint(1, 90), rng.randint(1, 16), rng.randint(2, 70),
+            rng.randint(1, 600))
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_fwd_randomized_shapes_match_ref(seed):
+    n, k, h, d = _draw_shape(seed)
+    cfg, (w1, w2, w3), alpha, beta = _mk(n, k, h, d, jnp.float32,
+                                         seed=seed % 97)
+    r = ref.mcnc_expand_ref(alpha, beta, w1, w2, w3, cfg.freq)
+    p = ops.mcnc_expand(alpha, beta, w1, w2, w3, cfg.freq,
+                        use_pallas=True, interpret=True)
+    assert p.shape == (n, d) and p.dtype == alpha.dtype
+    np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                               rtol=2e-5, atol=2e-6)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=4, deadline=None)
+def test_bwd_randomized_shapes_match_ref(seed):
+    """Custom VJP (Pallas backward kernel, interpret mode) vs jax.grad of
+    the jnp oracle on non-aligned shapes: the padded cotangent g must not
+    leak pad rows/cols into (d_alpha, d_beta)."""
+    n, k, h, d = _draw_shape(seed + 31)
+    cfg, (w1, w2, w3), alpha, beta = _mk(n, k, h, d, jnp.float32,
+                                         seed=seed % 89)
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+    def loss_p(a, b):
+        return jnp.sum(ops.mcnc_expand(a, b, w1, w2, w3, cfg.freq,
+                                       use_pallas=True, interpret=True) * g)
+
+    def loss_r(a, b):
+        return jnp.sum(ref.mcnc_expand_ref(a, b, w1, w2, w3, cfg.freq) * g)
+
+    da_p, db_p = jax.grad(loss_p, argnums=(0, 1))(alpha, beta)
+    da_r, db_r = jax.grad(loss_r, argnums=(0, 1))(alpha, beta)
+    assert da_p.shape == alpha.shape and db_p.shape == beta.shape
+    np.testing.assert_allclose(np.asarray(da_p), np.asarray(da_r),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(db_p), np.asarray(db_r),
+                               rtol=2e-4, atol=2e-5)
 
 
 def test_kernel_expand_fn_dispatch():

@@ -1,8 +1,12 @@
 """Serving subsystem: registry round-trip + corruption rejection, LRU
 expansion cache under a byte budget, scheduler slot lifecycle, engine
-mixed-batch correctness vs the sequential reference, and adapter hot-swap."""
+mixed-batch correctness vs the sequential reference, adapter hot-swap, and
+the sharded-vs-single-device differential oracle (mesh engine in a
+multi-device subprocess vs the in-process single-device engine)."""
 import json
 import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -12,12 +16,13 @@ import pytest
 from repro.configs.registry import get_arch
 from repro.core.generator import GeneratorConfig, init_generator
 from repro.serve import (AdapterRegistry, ExpansionCache, ServeEngine,
-                         sequential_reference)
+                         run_trace, sequential_reference)
 from repro.serve.metrics import Histogram, Metrics
 from repro.serve.scheduler import Scheduler, SlotPool
 from repro.train.steps import build_bundle
 
 GEN = GeneratorConfig(k=5, d=600, width=32, seed=0)
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 @pytest.fixture(scope="module")
@@ -493,3 +498,171 @@ def test_metrics_rejects_cross_kind_name_collision():
         m.histogram("x")
     m.counter("x").inc()                              # same kind still fine
     assert m.snapshot()["x"] == 2
+
+
+def test_scheduler_max_prefill_group_splits_token_identically():
+    """max_prefill_group bounds prefill batch shapes by splitting (task,
+    len) groups into chunks; admission order and slot assignment must be
+    unchanged (prefill rows are independent, so the split is numerics-free
+    by construction — this pins the bookkeeping side)."""
+    pool = SlotPool(n_slots=8, cache_cap=32)
+    sched = Scheduler(pool, max_prefill_group=2)
+    reqs = [sched.submit("a", [1, 2], 4) for _ in range(5)]
+    sched.submit("b", [1, 2], 4)
+    plan = sched.plan_step()
+    sizes = [(g.task_id, len(g.requests)) for g in plan.prefill_groups]
+    assert sizes == [("a", 2), ("a", 2), ("a", 1), ("b", 1)]
+    # chunks preserve admission order and slot assignment
+    flat = [r for g in plan.prefill_groups for r in g.requests
+            if g.task_id == "a"]
+    assert flat == reqs
+    assert [r.slot for r in flat] == [0, 1, 2, 3, 4]
+    # default: one unsplit group per (task, len)
+    sched2 = Scheduler(SlotPool(8, 32))
+    for _ in range(5):
+        sched2.submit("a", [1, 2], 4)
+    assert [len(g.requests) for g in sched2.plan_step().prefill_groups] == [5]
+
+
+# ---------------------------------------------------------------------------
+# Sharded serving: the (2, 4) mesh engine must be indistinguishable from the
+# single-device engine on the same request trace — token-identical outputs
+# AND matching cache/engine counters (the tentpole's primary correctness
+# gate). The mesh side runs in a subprocess because host placeholder devices
+# (XLA_FLAGS=--xla_force_host_platform_device_count) must be requested
+# before jax initializes; in-process variants below run under the CI
+# multi-device lane, which starts pytest itself with 8 host devices.
+# ---------------------------------------------------------------------------
+
+DIFF_TRACE = {
+    "gen": {"k": 5, "d": 600, "width": 32, "seed": 0},
+    "adapter_rank": 4,
+    "tasks": {"t0": 0, "t1": 1, "t2": 2},
+    "engine": {"n_slots": 4, "cache_cap": 32, "decode_horizon": 8},
+    # 6 requests through 4 slots: slot reuse, mixed tasks, mid-horizon
+    # finishes (owed 3/5/7 against K=8), repeat traffic for cache hits
+    "requests": [["t0", [1, 2, 3, 4, 5, 6], 4], ["t1", [7, 8, 9, 10], 6],
+                 ["t2", [2, 4, 6, 8, 10, 12], 8], ["t0", [9, 9, 9, 9], 5],
+                 ["t1", [1, 3, 5, 7, 9, 11], 3], ["t2", [5, 5, 5, 5], 7]],
+}
+
+
+def _run_trace_subprocess(trace, *, mesh=None, devices=8):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={devices}"
+        ).strip()
+    cmd = [sys.executable, "-m", "repro.serve.trace", "--trace", "-"]
+    if mesh:
+        cmd += ["--mesh", mesh]
+    proc = subprocess.run(cmd, input=json.dumps(trace), capture_output=True,
+                          text=True, timeout=900, env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow              # ~35s: compiles the full engine twice (the
+#                                sharded copy in a fresh 8-device subprocess)
+def test_sharded_engine_differential_oracle():
+    """THE sharded-serving gate: identical request traces through a (2, 4)
+    mesh engine and the single-device engine produce token-identical
+    outputs, identical cache hit/miss/byte accounting, and identical
+    engine counters (blocks, steps, slot writes, zero full restacks)."""
+    single = run_trace(DIFF_TRACE)
+    sharded = _run_trace_subprocess(DIFF_TRACE, mesh="2x4")
+    assert sharded["n_devices"] == 8
+    assert sharded["tokens"] == single["tokens"]
+    assert sharded["cache"] == single["cache"]
+    assert sharded["counters"] == single["counters"]
+    assert sharded["counters"]["adapter_full_restacks"] == 0
+    # the trace exercises what it claims to
+    assert single["cache"]["hits"] >= 1 and single["cache"]["misses"] == 3
+    assert single["counters"]["requests_completed"] == len(
+        DIFF_TRACE["requests"])
+
+
+needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (CI multi-device lane sets "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@needs_mesh
+def test_mesh_engine_in_process_matches_single_device(served, tmp_path):
+    """Multi-device lane: mesh and single-device engines side by side in one
+    process, sharing the module fixture — tokens equal, and the sharded
+    invariants (zero restacks, incremental stack == from-scratch restack)
+    hold under the mesh."""
+    from repro.launch.mesh import make_serve_mesh
+    bundle, base, gen_ws = served
+    tasks = ["t0", "t1", "t2"]
+    states = {t: perturbed_state(bundle, i) for i, t in enumerate(tasks)}
+    reg = AdapterRegistry(str(tmp_path))
+    for t in tasks:
+        reg.publish(t, states[t], GEN)
+    traffic = _traffic(bundle, tasks, 6, max_new=5)
+    outs = {}
+    for mesh in (None, make_serve_mesh("2x4")):
+        eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=4, cache_cap=32,
+                          decode_horizon=8, mesh=mesh)
+        reqs = [eng.submit(t, p, m) for t, p, m in traffic]
+        eng.run_until_idle()
+        outs[mesh is None] = [r.generated for r in reqs]
+        assert eng.metrics.snapshot()["adapter_full_restacks"] == 0
+        if mesh is not None:
+            for path, want in eng.stacked_reference().items():
+                np.testing.assert_array_equal(
+                    np.asarray(eng._stacked[path]), np.asarray(want),
+                    err_msg=path)
+    assert outs[True] == outs[False]
+
+
+@needs_mesh
+def test_mesh_engine_buffer_placements(served, tmp_path):
+    """The mesh engine's device-resident buffers land on their canonical
+    shardings: KV pool slots over data / sequence over model, stacked
+    adapters slot-over-data with param-spec trailing dims, expansion output
+    model-axis tiled, slot counters replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_serve_mesh
+    bundle, base, gen_ws = served
+    mesh = make_serve_mesh("2x4")
+
+    def placed(arr, *spec):
+        return arr.sharding.is_equivalent_to(NamedSharding(mesh, P(*spec)),
+                                             arr.ndim)
+
+    reg = AdapterRegistry(str(tmp_path))
+    reg.publish("t", perturbed_state(bundle, 0), GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=4, cache_cap=32,
+                      decode_horizon=4, mesh=mesh)
+    # KV pool (L, slot, Hkv, S, hd): slots over data, sequence over model
+    assert placed(eng.kv["k"], None, ("data",), None, "model", None)
+    # wo is row-parallel -> its lora_a shards the in dim on model; the
+    # stacked buffer adds the slot dim on data at axis 1
+    assert placed(eng._stacked["layers/wo_lora_a"],
+                  None, ("data",), "model", None)
+    _, eff = eng.adapters_for("t")
+    assert placed(eff["layers/wo_lora_a"], None, "model", None)
+    assert placed(eng._tokens)               # replicated slot counters
+    # serve a request end to end and re-check the pool placement survived
+    # the donated scatter/decode round trips
+    eng.submit("t", [1, 2, 3], 6)
+    eng.run_until_idle()
+    assert placed(eng.kv["k"], None, ("data",), None, "model", None)
+
+
+def test_mesh_engine_rejects_legacy_decode(served, tmp_path):
+    bundle, base, gen_ws = served
+
+    class FakeMesh:          # constructor-time validation only
+        pass
+
+    reg = AdapterRegistry(str(tmp_path))
+    with pytest.raises(ValueError):
+        ServeEngine(bundle, base, gen_ws, reg, legacy_decode=True,
+                    mesh=FakeMesh())

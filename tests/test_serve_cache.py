@@ -1,0 +1,137 @@
+"""Property-based tests for the byte-budgeted LRU ExpansionCache.
+
+Strategy note: op sequences are derived from an integer seed via
+random.Random so the tests run identically under real `hypothesis` and the
+deterministic shim in conftest.py (which only provides scalar strategies).
+Each sequence is checked against a pure-python reference model (an
+OrderedDict LRU evicting from the front) — contents, LRU order, byte
+accounting, and the counter-reconciliation invariant must all agree.
+"""
+import random
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.cache import ExpansionCache
+
+TASKS = ("a", "b", "c", "d")
+HASHES = ("h1", "h2", "h3")
+SIZES = (10, 40, 90, 130)
+
+
+def _val(nbytes):
+    return {"x": np.zeros(nbytes, np.uint8)}
+
+
+class _RefModel:
+    """Executable spec of the cache semantics."""
+
+    def __init__(self, budget):
+        self.budget = budget
+        self.entries = {}            # key -> nbytes, dict = insertion order
+        self.evicted = 0
+
+    def _touch(self, key):
+        self.entries[key] = self.entries.pop(key)      # move to MRU end
+
+    def get(self, key):
+        if key in self.entries:
+            self._touch(key)
+            return True
+        return False
+
+    def put(self, key, nbytes):
+        if key in self.entries:
+            del self.entries[key]
+        self.entries[key] = nbytes
+        if self.budget is None:
+            return
+        while self.entries and sum(self.entries.values()) > self.budget:
+            victim = next(iter(self.entries))
+            del self.entries[victim]
+            self.evicted += 1
+
+    def invalidate(self, task):
+        dead = [k for k in self.entries if k[0] == task]
+        for k in dead:
+            del self.entries[k]
+        return len(dead)
+
+    @property
+    def bytes(self):
+        return sum(self.entries.values())
+
+
+def _ops_from_seed(seed: int, n_ops: int):
+    rng = random.Random(seed)
+    ops = []
+    for _ in range(n_ops):
+        kind = rng.choice(("put", "put", "get", "get", "invalidate"))
+        if kind == "invalidate":
+            ops.append(("invalidate", rng.choice(TASKS)))
+        else:
+            ops.append((kind, rng.choice(TASKS), rng.choice(HASHES),
+                        rng.choice(SIZES)))
+    return ops
+
+
+def _replay(seed: int, budget):
+    cache = ExpansionCache(byte_budget=budget)
+    model = _RefModel(budget)
+    for op in _ops_from_seed(seed, n_ops=60):
+        if op[0] == "put":
+            _, t, h, size = op
+            cache.put(t, h, _val(size))
+            model.put((t, h), size)
+        elif op[0] == "get":
+            _, t, h, _ = op
+            hit = cache.get(t, h) is not None
+            assert hit == model.get((t, h))
+        else:
+            cache.invalidate_task(op[1])
+            model.invalidate(op[1])
+        s = cache.stats()
+        # byte budget is never exceeded, and byte accounting is exact
+        if budget is not None:
+            assert s["bytes"] <= budget
+        assert s["bytes"] == model.bytes
+        # LRU discipline: same keys in the same eviction order
+        assert cache.lru_keys() == list(model.entries)
+        # counter reconciliation: every live entry is a put that was neither
+        # replaced, evicted, nor invalidated
+        assert s["entries"] == (s["puts"] - s["replacements"]
+                                - s["evictions"] - s["invalidations"])
+        assert s["evictions"] == model.evicted
+    return cache
+
+
+@given(seed=st.integers(0, 10_000), budget=st.integers(0, 400))
+@settings(max_examples=25, deadline=None)
+def test_cache_matches_reference_model_bounded(seed, budget):
+    _replay(seed, budget)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_cache_matches_reference_model_unbounded(seed):
+    cache = _replay(seed, None)
+    assert cache.stats()["evictions"] == 0
+
+
+@given(seed=st.integers(0, 10_000), budget=st.integers(1, 200))
+@settings(max_examples=10, deadline=None)
+def test_cache_hits_plus_misses_equals_gets(seed, budget):
+    cache = ExpansionCache(byte_budget=budget)
+    gets = 0
+    for op in _ops_from_seed(seed, n_ops=40):
+        if op[0] == "put":
+            cache.put(op[1], op[2], _val(op[3]))
+        elif op[0] == "get":
+            cache.get(op[1], op[2])
+            gets += 1
+        else:
+            cache.invalidate_task(op[1])
+    s = cache.stats()
+    assert s["hits"] + s["misses"] == gets
+    assert len(cache) == s["entries"]

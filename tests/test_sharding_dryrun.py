@@ -40,6 +40,44 @@ def test_param_pspec_rules():
     assert all(a is None for a in pspecs["layers/ln1_scale"])
 
 
+def test_sanitize_pspec_drops_nondivisible():
+    import types
+    from repro.sharding.rules import sanitize_pspec
+    mesh = types.SimpleNamespace(shape={"data": 2, "model": 4})
+    assert sanitize_pspec(P("data", "model"), (4, 8), mesh) == \
+        P("data", "model")
+    assert sanitize_pspec(P("data", "model"), (3, 8), mesh) == \
+        P(None, "model")                       # 3 % 2 != 0 -> replicated
+    assert sanitize_pspec(P(("data", "model"), None), (8, 3), mesh) == \
+        P(("data", "model"), None)             # tuple axes: product divides
+    assert sanitize_pspec(P(("data", "model"),), (4,), mesh) == P(None)
+    assert sanitize_pspec(P(None, "model"), (4,), mesh) == \
+        P(None, None)                          # beyond rank -> dropped
+
+
+def test_serve_adapter_pspecs():
+    """Effective adapter leaves inherit their in-tree spec; the stacked
+    per-slot serve buffers insert the slot dim over data at axis 1."""
+    from repro.sharding.specs import (effective_adapter_pspecs,
+                                      stacked_adapter_pspecs)
+    arch = get_arch("yi_6b")
+    specs = lm.param_specs(arch.config)
+    adapters = jax.eval_shape(
+        lambda s: init_adapters(s, AdapterConfig(rank=8)), specs)
+    merged = merge_adapters_into_params(specs, adapters)
+    eff = effective_adapter_pspecs(merged)
+    assert eff["layers/wo_lora_a"] == P(None, "model", None)
+    assert eff["layers/wq_lora_b"] == P(None, None, "model")
+    assert eff["layers/wq_lora_a"] == P(None, None, None)
+    # exactly the adapter leaves of the merged tree — nothing dropped
+    assert set(eff) == {p for p in flatten_with_paths(merged)
+                        if "_lora_" in p}
+    stacked = stacked_adapter_pspecs(merged)
+    assert set(stacked) == set(eff)
+    assert stacked["layers/wo_lora_a"] == P(None, ("data",), "model", None)
+    assert stacked["layers/wq_lora_b"] == P(None, ("data",), None, "model")
+
+
 def test_moe_expert_pspecs():
     arch = get_arch("deepseek_v2_236b")
     specs = lm.param_specs(arch.config)
