@@ -20,7 +20,15 @@ mesh (CPU-simulated host devices are requested automatically): frozen base
 tensor-parallel, KV pool slots-over-data / sequence-over-model, expansion
 output model-axis tiled — token-identical to the single-device run.
 
+Bundles land on disk in wire format v2 (quantized + entropy-coded; spec in
+docs/ARCHITECTURE.md): --quant int8 shrinks each task's artifact ~5x, and
+--quantized-cache makes the engine hold the CODED bundles in its expansion
+cache (LRU bytes charge the quantized arrays, not the expanded fp32
+leaves) and dequantize inside the jitted expansion — same tokens,
+orders-of-magnitude smaller cache entries.
+
     PYTHONPATH=src python examples/serve_adapters.py [--tasks 4] [--mesh 2x4]
+        [--quant int8] [--quantized-cache]
 """
 import argparse
 import os
@@ -59,6 +67,13 @@ def main():
     ap.add_argument("--mesh", default=None,
                     help="run the engine sharded over a DxM (data, model) "
                          "mesh of CPU-simulated devices, e.g. 2x4")
+    ap.add_argument("--quant", default="int8",
+                    choices=["none", "int8", "nf4"],
+                    help="bundle quantization scheme for published "
+                         "artifacts (wire format v2)")
+    ap.add_argument("--quantized-cache", action="store_true",
+                    help="hold CODED bundles in the expansion cache and "
+                         "dequantize inside the jitted expansion")
     args = ap.parse_args()
 
     mesh = None
@@ -83,12 +98,17 @@ def main():
     registry = AdapterRegistry(tempfile.mkdtemp(prefix="adapters_"))
     for i in range(args.tasks):
         registry.publish(f"task{i}", bundle.synthetic_trainable(i), gen,
-                         adapter={"rank": 4})
+                         adapter={"rank": 4}, quant=args.quant)
     n_tp = bundle.plan.trainable_params
+    task0_dir = os.path.join(registry.root, "task0")
+    disk = sum(os.path.getsize(os.path.join(task0_dir, f))
+               for f in os.listdir(task0_dir))
     print(f"{args.tasks} task adapters x {n_tp} trainable params each "
-          f"(~{n_tp * 4 / 1024:.1f} KiB/task vs "
-          f"{bundle.plan.represented_params * 2 / 1e6:.1f} MB of raw "
-          f"adapters each)")
+          f"(~{n_tp * 4 / 1024:.1f} KiB fp32 state; {disk / 1024:.1f} KiB "
+          f"artifact on disk as v2/{args.quant} incl. manifest+header — "
+          f"benchmarks/bundle_bench.py measures ratios at realistic state "
+          f"sizes; vs {bundle.plan.represented_params * 2 / 1e6:.1f} MB of "
+          f"raw adapters each)")
 
     from repro.launch.mesh import round_serve_cache_cap
     cap = round_serve_cache_cap(args.prompt_len + args.decode_steps + 1,
@@ -96,6 +116,7 @@ def main():
     engine = ServeEngine(bundle, base, gen_ws, registry,
                          n_slots=args.n_slots, cache_cap=cap,
                          decode_horizon=args.horizon,
+                         quantized_cache=args.quantized_cache,
                          expansion_cache=ExpansionCache(), mesh=mesh)
 
     rng = np.random.default_rng(0)
@@ -115,7 +136,8 @@ def main():
     print(f"served {total} tokens across {args.tasks} adapter sets in "
           f"{dt:.2f}s ({total / dt:.1f} tok/s on CPU) — mixed-task decode "
           "batches, expansion cached per bundle (Table 4 regime)")
-    print(f"expansion cache: {engine.cache.stats()}")
+    mode = "coded bundles" if args.quantized_cache else "expanded adapters"
+    print(f"expansion cache ({mode}): {engine.cache.stats()}")
     snap = engine.metrics.snapshot()
     dstep = snap.get("decode_step_s", {})
     print(f"decode hot path: {snap['decode_steps']} decode steps fused into "

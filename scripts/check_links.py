@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""Markdown link check over README.md + docs/ — no-network, CI-fast.
+
+Verifies every relative markdown link `[text](target)` resolves:
+  * the target file exists (relative to the file containing the link);
+  * a `#fragment` (with or without a file part) matches a heading's
+    GitHub-style anchor in the target document.
+
+http(s)/mailto links are skipped (no network in CI); bare anchors like
+`(#section)` are checked against the current file. Exit 1 lists every
+broken link as path:line: target, so new docs cannot rot silently.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")   # skip images
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+
+
+def md_files() -> list[str]:
+    """README.md plus every markdown file under docs/."""
+    out = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        for root, _dirs, files in os.walk(docs):
+            out.extend(os.path.join(root, f) for f in sorted(files)
+                       if f.endswith(".md"))
+    return [p for p in out if os.path.exists(p)]
+
+
+def github_anchor(heading: str) -> str:
+    """GitHub's heading -> anchor id: lowercase, strip punctuation except
+    hyphens/underscores, spaces to hyphens (inline code ticks dropped)."""
+    text = heading.strip().lower().replace("`", "")
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set[str]:
+    """All heading anchors defined in one markdown file."""
+    out = set()
+    with open(path) as f:
+        in_code = False
+        for line in f:
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+                continue
+            if in_code:
+                continue
+            m = HEADING_RE.match(line)
+            if m:
+                out.add(github_anchor(m.group(1)))
+    return out
+
+
+def check_file(path: str) -> list[str]:
+    """Broken-link report lines for one markdown file."""
+    broken = []
+    base = os.path.dirname(path)
+    rel = os.path.relpath(path, REPO)
+    with open(path) as f:
+        lines = f.readlines()
+    in_code = False
+    for i, line in enumerate(lines, 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            file_part, _, frag = target.partition("#")
+            dest = (os.path.normpath(os.path.join(base, file_part))
+                    if file_part else path)
+            if not os.path.exists(dest):
+                broken.append(f"{rel}:{i}: {target} (missing file)")
+                continue
+            if frag and dest.endswith(".md"):
+                if github_anchor(frag) not in anchors_of(dest):
+                    broken.append(f"{rel}:{i}: {target} (missing anchor)")
+    return broken
+
+
+def main() -> int:
+    """Check every markdown file; print broken links and return 1 if any."""
+    files = md_files()
+    broken: list[str] = []
+    for path in files:
+        broken.extend(check_file(path))
+    if broken:
+        print(f"{len(broken)} broken markdown links:")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"markdown links OK across {len(files)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

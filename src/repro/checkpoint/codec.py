@@ -1,0 +1,379 @@
+"""Bundle wire-format v2: per-tensor quantization + lossless entropy coding.
+
+MCNC's storage claim is that a task ships as a seed plus a small coefficient
+state. Format v1 (``write_artifact``) stores that state as raw float32 in an
+uncompressed ``arrays.npz`` — no compression at all on the one artifact the
+paper says should be small. This module supplies the v2 pipeline:
+
+  1. **Quantize** (lossy, optional): per-tensor symmetric int8 (NOLA shows
+     coefficient vectors tolerate aggressive quantization) or nf4-style
+     4-bit block quantization, with scale planes stored as float16;
+  2. **Byte-group** (lossless transform): multi-byte elements are split into
+     per-byte planes (all exponent-carrying high bytes together, all
+     mantissa low bytes together — the ZipNN observation that model-tensor
+     exponents are massively compressible while mantissas are not);
+  3. **Entropy-code** (lossless): each segment runs through a pluggable
+     byte-stream codec (zlib by default; ``register_codec`` adds more).
+
+The on-disk artifact is a single ``payload.bin`` — a fixed 12-byte preamble,
+a canonical-JSON header describing every tensor segment, and the coded
+segment bytes — next to the usual ``manifest.json``. The full layout, field
+tables, and versioning rules live in docs/ARCHITECTURE.md ("Bundle wire
+format"); keep that spec in sync with this module.
+
+Decoding is split so servers can defer the lossy inverse: ``decode_payload``
+undoes only the lossless stages and returns :class:`QuantTensor` parts, and
+``dequantize_jnp`` runs the dequantization math inside a jitted computation
+(the serve engine fuses it into MCNC expansion, so its ExpansionCache can
+hold int8 codes instead of float32 state — see repro.serve.engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+import zlib
+from typing import Callable
+
+import numpy as np
+
+MAGIC = b"MCNC"
+WIRE_VERSION = 2
+# preamble: 4s magic, u16 wire version, u16 flags, u32 stored header bytes,
+# u32 raw header bytes (flag bit 0: header JSON is zlib-compressed — tensor
+# records are repetitive enough that this is ~10x, and for MCNC-sized
+# bundles the header would otherwise rival the int8 payload itself)
+PREAMBLE = struct.Struct("<4sHHII")
+FLAG_HEADER_ZLIB = 1
+
+QUANT_SCHEMES = ("none", "int8", "nf4")
+
+# nf4 codebook (QLoRA appendix E): the 16 quantiles of N(0, 1) normalized to
+# [-1, 1] — the information-theoretically optimal 4-bit grid for normally
+# distributed weights, which MCNC alpha perturbations empirically are
+NF4_CODES = np.array([
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0], dtype=np.float32)
+
+NF4_BLOCK = 64
+
+
+def canonical_json(obj) -> str:
+    """Deterministic JSON (sorted keys, no whitespace) — hash/header input."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+# ---------------------------------------------------------------------------
+# Pluggable lossless byte-stream codecs.
+# ---------------------------------------------------------------------------
+
+_CODECS: dict[str, tuple[Callable[[bytes], bytes],
+                         Callable[[bytes], bytes]]] = {}
+
+
+def register_codec(name: str, encode: Callable[[bytes], bytes],
+                   decode: Callable[[bytes], bytes]):
+    """Register a lossless byte-stream codec under `name`.
+
+    `encode`/`decode` map bytes -> bytes and must round-trip exactly. The
+    name is recorded per segment in the v2 header, so decoders pick the
+    right inverse without any out-of-band knowledge."""
+    _CODECS[name] = (encode, decode)
+
+
+def get_codec(name: str) -> tuple[Callable[[bytes], bytes],
+                                  Callable[[bytes], bytes]]:
+    """Look up a registered codec; raises ValueError on unknown names."""
+    try:
+        return _CODECS[name]
+    except KeyError:
+        raise ValueError(f"unknown bundle codec {name!r} "
+                         f"(registered: {sorted(_CODECS)})") from None
+
+
+register_codec("raw", lambda b: b, lambda b: b)
+register_codec("zlib", lambda b: zlib.compress(b, 6), zlib.decompress)
+
+
+# ---------------------------------------------------------------------------
+# Byte-grouping (ZipNN-style lossless transform).
+# ---------------------------------------------------------------------------
+
+def group_bytes(raw: bytes, itemsize: int) -> bytes:
+    """Regroup an array's bytes into per-byte planes (byte 0 of every
+    element, then byte 1 of every element, ...). For IEEE floats this
+    clusters the low-entropy sign/exponent bytes away from the high-entropy
+    mantissa bytes, which is worth 2-4x to the downstream entropy coder on
+    float scale planes. Lossless; inverse is ungroup_bytes."""
+    if itemsize <= 1 or not raw:
+        return raw
+    a = np.frombuffer(raw, np.uint8).reshape(-1, itemsize)
+    return np.ascontiguousarray(a.T).tobytes()
+
+
+def ungroup_bytes(raw: bytes, itemsize: int) -> bytes:
+    """Inverse of group_bytes."""
+    if itemsize <= 1 or not raw:
+        return raw
+    a = np.frombuffer(raw, np.uint8).reshape(itemsize, -1)
+    return np.ascontiguousarray(a.T).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Quantization schemes.
+# ---------------------------------------------------------------------------
+
+def quantize_int8(arr: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-tensor symmetric int8: codes in [-127, 127], one fp16 scale.
+
+    The scale is rounded to fp16 BEFORE the codes are computed, so encode
+    and decode agree on the exact grid (otherwise the fp16 rounding of the
+    scale would add a second, unaccounted error term). Max abs error is
+    scale/2 plus the fp16 rounding of the max element."""
+    a = np.asarray(arr, np.float32).reshape(-1)
+    amax = float(np.max(np.abs(a))) if a.size else 0.0
+    scale = np.float16(min(amax / 127.0, 6.0e4))   # clamp: no inf in fp16
+    s = np.float32(scale)
+    if s == 0.0:
+        codes = np.zeros(a.shape, np.int8)
+    else:
+        codes = np.clip(np.rint(a / s), -127, 127).astype(np.int8)
+    return codes, np.asarray(scale, np.float16).reshape(())
+
+
+def dequantize_int8_np(codes: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    """codes * scale in float32 (bit-identical to the jnp path on CPU)."""
+    return codes.astype(np.float32) * np.float32(scale)
+
+
+def quantize_nf4(arr: np.ndarray, block: int = NF4_BLOCK
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """nf4-style block quantization: per-block fp16 absmax + 4-bit codebook
+    indices packed two per byte. Returns (packed_codes, absmax_per_block)."""
+    a = np.asarray(arr, np.float32).reshape(-1)
+    n = a.size
+    nblocks = max(1, -(-n // block))
+    pad = nblocks * block - n
+    if pad:
+        a = np.concatenate([a, np.zeros((pad,), np.float32)])
+    blocks = a.reshape(nblocks, block)
+    absmax = np.float16(np.clip(np.max(np.abs(blocks), axis=1), 0, 6.0e4))
+    s = absmax.astype(np.float32)
+    norm = blocks / np.where(s == 0.0, 1.0, s)[:, None]
+    idx = np.argmin(np.abs(norm[:, :, None] - NF4_CODES[None, None, :]),
+                    axis=2).astype(np.uint8).reshape(-1)
+    packed = ((idx[0::2] << 4) | idx[1::2]).astype(np.uint8)
+    return packed, absmax
+
+
+def dequantize_nf4_np(packed: np.ndarray, absmax: np.ndarray, numel: int,
+                      block: int = NF4_BLOCK) -> np.ndarray:
+    """Inverse of quantize_nf4 (flat float32 of length `numel`)."""
+    hi = (packed >> 4).astype(np.uint8)
+    lo = (packed & 0xF).astype(np.uint8)
+    idx = np.stack([hi, lo], axis=1).reshape(-1)
+    vals = NF4_CODES[idx] * np.repeat(absmax.astype(np.float32), block)
+    return vals[:numel]
+
+
+# ---------------------------------------------------------------------------
+# Per-tensor container.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QuantTensor:
+    """One tensor's decoded-but-not-dequantized representation.
+
+    `parts` holds the scheme's raw arrays ({"raw": x} for scheme "none",
+    {"codes", "scales"} for int8/nf4); `meta` is the hashable static
+    description a jitted dequantizer closes over."""
+    scheme: str                      # "none" | "int8" | "nf4"
+    dtype: str                       # original dtype string, e.g. "float32"
+    shape: tuple[int, ...]
+    block: int                       # nf4 block size (0 otherwise)
+    parts: dict[str, np.ndarray]
+
+    @property
+    def meta(self) -> tuple:
+        """Hashable (scheme, dtype, shape, block) — static arg for jit."""
+        return (self.scheme, self.dtype, tuple(self.shape), self.block)
+
+    def dequantize(self) -> np.ndarray:
+        """Host-side lossy inverse; returns the original-dtype ndarray."""
+        return dequantize_np(self.parts, self.meta)
+
+
+def dequantize_np(parts: dict[str, np.ndarray], meta: tuple) -> np.ndarray:
+    """Numpy dequantization (mirrors dequantize_jnp bit-for-bit on CPU)."""
+    scheme, dtype, shape, block = meta
+    if scheme == "none":
+        return np.asarray(parts["raw"]).reshape(shape)
+    if scheme == "int8":
+        out = dequantize_int8_np(np.asarray(parts["codes"]),
+                                 np.asarray(parts["scales"]))
+    elif scheme == "nf4":
+        numel = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        out = dequantize_nf4_np(np.asarray(parts["codes"]),
+                                np.asarray(parts["scales"]), numel, block)
+    else:
+        raise ValueError(f"unknown quant scheme {scheme!r}")
+    return out.reshape(shape).astype(np.dtype(dtype))
+
+
+def dequantize_jnp(parts: dict, meta: tuple):
+    """jnp dequantization for use INSIDE a jitted computation.
+
+    `parts` are device arrays (the serve engine's quantized cache values),
+    `meta` the hashable QuantTensor.meta. The int8 path is exactly
+    codes.f32 * scale.f32, so host (numpy) and device (jitted, CPU/TPU)
+    dequantization agree bitwise for int8 — the quantized-cache engine is
+    token-identical to dequantize-on-load by construction, not by luck."""
+    import jax.numpy as jnp          # deferred: keep this module jax-free
+    scheme, dtype, shape, block = meta
+    if scheme == "none":
+        return jnp.reshape(parts["raw"], shape)
+    if scheme == "int8":
+        out = (parts["codes"].astype(jnp.float32)
+               * parts["scales"].astype(jnp.float32))
+    elif scheme == "nf4":
+        numel = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        packed = parts["codes"]
+        idx = jnp.stack([packed >> 4, packed & 0xF], axis=1).reshape(-1)
+        vals = jnp.asarray(NF4_CODES)[idx]
+        amax = jnp.repeat(parts["scales"].astype(jnp.float32), block)
+        out = (vals * amax)[:numel]
+    else:
+        raise ValueError(f"unknown quant scheme {scheme!r}")
+    return out.reshape(shape).astype(jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# v2 payload encode/decode.
+# ---------------------------------------------------------------------------
+
+def _quantize_tensor(arr: np.ndarray, quant: str) -> QuantTensor:
+    """Apply the bundle-level quant scheme to one tensor. Only floating
+    tensors are quantized; integer/bool tensors ship raw (lossless) under
+    any scheme, so a mixed tree never silently corrupts index arrays."""
+    shape = tuple(int(d) for d in arr.shape)
+    if quant == "none" or not np.issubdtype(arr.dtype, np.floating):
+        return QuantTensor("none", str(arr.dtype), shape, 0,
+                           {"raw": np.ascontiguousarray(arr)})
+    if quant == "int8":
+        codes, scale = quantize_int8(arr)
+        return QuantTensor("int8", str(arr.dtype), shape, 0,
+                           {"codes": codes, "scales": scale})
+    if quant == "nf4":
+        codes, absmax = quantize_nf4(arr)
+        return QuantTensor("nf4", str(arr.dtype), shape, NF4_BLOCK,
+                           {"codes": codes, "scales": absmax})
+    raise ValueError(f"unknown quant scheme {quant!r} "
+                     f"(expected one of {QUANT_SCHEMES})")
+
+
+def encode_arrays(arrays: dict[str, np.ndarray], *, quant: str = "none",
+                  codec: str = "zlib") -> tuple[bytes, dict]:
+    """Encode a flat {name: ndarray} dict into a v2 payload.
+
+    Returns (payload_bytes, header_dict). The payload embeds the header, so
+    hashing the payload covers the codec metadata — see
+    manager.bundle_hash_v2. Tensors are laid out in sorted-name order;
+    every segment records its own codec, byte-group width, offset, and
+    coded/raw byte counts (docs/ARCHITECTURE.md has the field tables)."""
+    enc, _ = get_codec(codec)
+    tensors_hdr: list[dict] = []
+    blobs: list[bytes] = []
+    offset = 0
+    for name in sorted(arrays):
+        qt = _quantize_tensor(np.asarray(arrays[name]), quant)
+        segments = []
+        for role in sorted(qt.parts):
+            part = np.ascontiguousarray(qt.parts[role])
+            itemsize = part.dtype.itemsize
+            raw = part.tobytes()
+            grouped = group_bytes(raw, itemsize)
+            coded = enc(grouped)
+            segments.append({
+                "role": role, "dtype": str(part.dtype),
+                "shape": [int(d) for d in part.shape],
+                "byte_group": itemsize if itemsize > 1 else 0,
+                "codec": codec, "offset": offset,
+                "nbytes": len(coded), "raw_nbytes": len(raw)})
+            blobs.append(coded)
+            offset += len(coded)
+        tensors_hdr.append({
+            "name": name, "scheme": qt.scheme, "dtype": qt.dtype,
+            "shape": list(qt.shape), "block": qt.block,
+            "segments": segments})
+    header = {"version": WIRE_VERSION, "quant": quant, "codec": codec,
+              "tensors": tensors_hdr}
+    hjson = canonical_json(header).encode()
+    hcomp = zlib.compress(hjson, 6)
+    payload = (PREAMBLE.pack(MAGIC, WIRE_VERSION, FLAG_HEADER_ZLIB,
+                             len(hcomp), len(hjson))
+               + hcomp + b"".join(blobs))
+    return payload, header
+
+
+def decode_payload(payload: bytes) -> tuple[dict[str, QuantTensor], dict]:
+    """Parse a v2 payload back into {name: QuantTensor} + the header dict.
+
+    Undoes only the LOSSLESS stages (codec + byte-grouping); the caller
+    decides when the lossy dequantization runs (host-side via
+    QuantTensor.dequantize, or on device via dequantize_jnp). Raises
+    IOError on a bad magic, an unsupported wire version, or truncation —
+    readers must reject unknown future versions, not guess (versioning
+    rules in docs/ARCHITECTURE.md)."""
+    if len(payload) < PREAMBLE.size:
+        raise IOError("v2 payload truncated: shorter than the preamble")
+    magic, version, flags, hlen, hraw = PREAMBLE.unpack_from(payload, 0)
+    if magic != MAGIC:
+        raise IOError(f"bad bundle magic {magic!r} (want {MAGIC!r})")
+    if version != WIRE_VERSION:
+        raise IOError(f"unsupported bundle wire version {version} "
+                      f"(this reader speaks {WIRE_VERSION})")
+    body = PREAMBLE.size
+    if len(payload) < body + hlen:
+        raise IOError("v2 payload truncated: header extends past EOF")
+    hjson = payload[body:body + hlen]
+    try:
+        if flags & FLAG_HEADER_ZLIB:
+            hjson = zlib.decompress(hjson)
+            if len(hjson) != hraw:
+                raise IOError(f"v2 header decompressed to {len(hjson)} "
+                              f"bytes, preamble says {hraw}")
+        header = json.loads(hjson.decode())
+    except (zlib.error, UnicodeDecodeError,
+            json.JSONDecodeError) as e:
+        raise IOError(f"v2 payload header corrupt: {e}") from None
+    seg0 = body + hlen
+    out: dict[str, QuantTensor] = {}
+    for t in header["tensors"]:
+        parts = {}
+        for seg in t["segments"]:
+            lo = seg0 + seg["offset"]
+            hi = lo + seg["nbytes"]
+            if hi > len(payload):
+                raise IOError(f"v2 payload truncated: segment "
+                              f"{t['name']}/{seg['role']} past EOF")
+            _, dec = get_codec(seg["codec"])
+            raw = ungroup_bytes(dec(payload[lo:hi]), seg["byte_group"] or 1)
+            if len(raw) != seg["raw_nbytes"]:
+                raise IOError(f"segment {t['name']}/{seg['role']} decoded "
+                              f"to {len(raw)} bytes, header says "
+                              f"{seg['raw_nbytes']}")
+            parts[seg["role"]] = np.frombuffer(
+                raw, np.dtype(seg["dtype"])).reshape(seg["shape"])
+        out[t["name"]] = QuantTensor(t["scheme"], t["dtype"],
+                                     tuple(t["shape"]), int(t["block"]),
+                                     parts)
+    return out, header
+
+
+def dequantize_arrays(tensors: dict[str, QuantTensor]
+                      ) -> dict[str, np.ndarray]:
+    """Host-side dequantization of a whole decoded payload."""
+    return {name: qt.dequantize() for name, qt in tensors.items()}

@@ -1,4 +1,4 @@
-"""Fault-tolerant checkpointing.
+"""Fault-tolerant checkpointing + versioned on-disk artifact formats.
 
 Properties needed at 1000+ nodes and implemented here:
   * atomic: write to a temp dir, fsync, rename — a crash mid-write never
@@ -11,6 +11,15 @@ Properties needed at 1000+ nodes and implemented here:
     storage/communication story applied to fault tolerance);
   * async: an optional background thread moves serialization off the step
     loop (save() returns immediately after host-side array capture).
+
+Artifact formats (dispatch on manifest["format"], absent == 1):
+  * v1 — raw ``arrays.npz`` (uncompressed) + ``manifest.json``; the hash
+    covers ONLY the tensor payload (name/dtype/shape/bytes), so manifest
+    metadata is not integrity-protected. Kept readable forever.
+  * v2 — quantized + entropy-coded ``payload.bin`` (repro.checkpoint.codec)
+    + ``manifest.json``; the hash covers the payload (which embeds the
+    codec header) AND the protected manifest fields, closing v1's
+    spoofable-metadata gap. docs/ARCHITECTURE.md specifies the wire layout.
 """
 from __future__ import annotations
 
@@ -27,12 +36,24 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.checkpoint.codec import (QuantTensor, canonical_json,
+                                    decode_payload, dequantize_arrays,
+                                    encode_arrays)
 from repro.core.reparam import flatten_with_paths, unflatten_paths
 
 PyTree = Any
 
+# manifest fields folded into the v2 bundle hash. Everything a loader TRUSTS
+# (generator config, adapter config, versioning, codec identity) must be
+# here: v1 only hashed the tensor payload, so flipping e.g. the generator
+# seed in manifest.json went undetected while the arrays still verified.
+PROTECTED_MANIFEST_KEYS = ("task_id", "version", "format", "codec", "quant",
+                           "generator", "adapter", "metadata", "step",
+                           "n_arrays")
+
 
 def tree_to_arrays(tree: PyTree) -> dict[str, np.ndarray]:
+    """Flatten a pytree to {path-with-|-separators: host ndarray}."""
     flat = flatten_with_paths(tree)
     out = {}
     for path, leaf in flat.items():
@@ -42,6 +63,7 @@ def tree_to_arrays(tree: PyTree) -> dict[str, np.ndarray]:
 
 
 def arrays_to_tree(arrays: dict[str, np.ndarray]) -> PyTree:
+    """Inverse of tree_to_arrays."""
     return unflatten_paths({k.replace("|", "/"): v
                             for k, v in arrays.items()})
 
@@ -56,27 +78,71 @@ def _content_hash(arrays: dict[str, np.ndarray]) -> str:
     return h.hexdigest()
 
 
+def protected_manifest_blob(manifest: dict) -> bytes:
+    """Canonical JSON of the integrity-protected manifest fields."""
+    sub = {k: manifest[k] for k in PROTECTED_MANIFEST_KEYS if k in manifest}
+    return canonical_json(sub).encode()
+
+
+def bundle_hash_v2(payload: bytes, manifest: dict) -> str:
+    """v2 bundle hash: protected manifest fields + the whole payload.
+
+    The payload embeds the codec header (magic, wire version, per-segment
+    codec/offsets), so the hash covers the header and codec metadata, not
+    just the tensor bytes — editing the manifest's generator/adapter/codec
+    fields or the payload header is detected, unlike format v1 where only
+    the raw arrays were hashed."""
+    h = hashlib.sha256()
+    h.update(protected_manifest_blob(manifest))
+    h.update(payload)
+    return h.hexdigest()
+
+
 def write_artifact(final_dir: str, arrays: dict[str, np.ndarray],
-                   manifest_extra: dict | None = None) -> dict:
-    """Atomically publish {arrays.npz, manifest.json} at `final_dir`.
+                   manifest_extra: dict | None = None, *, fmt: int = 1,
+                   quant: str = "none", codec: str = "zlib") -> dict:
+    """Atomically publish an artifact directory at `final_dir`.
+
+    fmt=1 writes {arrays.npz, manifest.json} (raw fp32, hash over tensor
+    payload only — the legacy layout, kept readable forever); fmt=2 writes
+    {payload.bin, manifest.json} via repro.checkpoint.codec with `quant`
+    ("none" | "int8" | "nf4") and lossless `codec` ("zlib" | "raw" | any
+    register_codec name), hash over payload + protected manifest fields.
 
     Write to a temp dir next to the target, fsync, rename — a crash mid-write
     never leaves a partial artifact; an existing artifact is replaced whole.
-    The manifest records a content hash verified on read. Shared by the
-    checkpoint manager and the serving adapter registry (repro.serve).
-    Returns the manifest dict.
+    Shared by the checkpoint manager and the serving adapter registry
+    (repro.serve). Returns the manifest dict.
     """
+    if fmt not in (1, 2):
+        raise ValueError(f"unknown artifact format {fmt!r}")
+    if fmt == 1 and quant != "none":
+        raise ValueError("format v1 cannot quantize; use fmt=2 (v1 exists "
+                         "for byte-stable legacy artifacts only)")
     parent = os.path.dirname(os.path.abspath(final_dir)) or "."
     os.makedirs(parent, exist_ok=True)
     tmp = tempfile.mkdtemp(prefix=".tmp_artifact_", dir=parent)
     try:
-        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
-            np.savez(f, **arrays)
-            f.flush()
-            os.fsync(f.fileno())
-        manifest = {"hash": _content_hash(arrays), "time": time.time(),
-                    "n_arrays": len(arrays)}
-        manifest.update(manifest_extra or {})
+        if fmt == 1:
+            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+                np.savez(f, **arrays)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest = {"hash": _content_hash(arrays), "time": time.time(),
+                        "n_arrays": len(arrays)}
+            manifest.update(manifest_extra or {})
+        else:
+            payload, _header = encode_arrays(arrays, quant=quant,
+                                             codec=codec)
+            with open(os.path.join(tmp, "payload.bin"), "wb") as f:
+                f.write(payload)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest = {"format": 2, "quant": quant, "codec": codec,
+                        "time": time.time(), "n_arrays": len(arrays)}
+            manifest.update(manifest_extra or {})
+            # hash LAST: it must cover the merged manifest_extra fields
+            manifest["hash"] = bundle_hash_v2(payload, manifest)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
             f.flush()
@@ -108,23 +174,80 @@ def write_artifact(final_dir: str, arrays: dict[str, np.ndarray],
 
 def read_artifact(final_dir: str, *, verify: bool = True
                   ) -> tuple[dict[str, np.ndarray], dict]:
-    """Read an artifact written by write_artifact; verify the content hash."""
+    """Read an artifact written by write_artifact; verify the content hash.
+
+    Dispatches on manifest["format"] (absent == v1), so v1 and v2 artifacts
+    load through the same call. v2 tensors are dequantized host-side here;
+    use read_artifact_quantized to keep the coded representation."""
+    manifest = _read_manifest(final_dir)
+    if int(manifest.get("format", 1)) == 1:
+        with np.load(os.path.join(final_dir, "arrays.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        if verify:
+            h = _content_hash(arrays)
+            if h != manifest["hash"]:
+                raise IOError(f"artifact {final_dir} corrupt: hash mismatch")
+        return arrays, manifest
+    tensors, manifest = _read_v2(final_dir, manifest, verify=verify)
+    return dequantize_arrays(tensors), manifest
+
+
+def read_artifact_quantized(final_dir: str, *, verify: bool = True
+                            ) -> tuple[dict[str, QuantTensor], dict]:
+    """Like read_artifact, but defer the lossy dequantization stage.
+
+    Returns {name: QuantTensor} for EVERY format: v2 tensors keep their
+    coded parts (int8/nf4 codes + fp16 scale planes), v1 (and v2 quant
+    "none") tensors are wrapped as scheme-"none" QuantTensors — callers
+    like the serve engine's quantized ExpansionCache handle one shape of
+    data regardless of what is on disk."""
+    manifest = _read_manifest(final_dir)
+    if int(manifest.get("format", 1)) == 1:
+        arrays, manifest = read_artifact(final_dir, verify=verify)
+        tensors = {
+            name: QuantTensor("none", str(a.dtype),
+                              tuple(int(d) for d in a.shape), 0, {"raw": a})
+            for name, a in arrays.items()}
+        return tensors, manifest
+    return _read_v2(final_dir, manifest, verify=verify)
+
+
+def _read_manifest(final_dir: str) -> dict:
     with open(os.path.join(final_dir, "manifest.json")) as f:
-        manifest = json.load(f)
-    with np.load(os.path.join(final_dir, "arrays.npz")) as z:
-        arrays = {k: z[k] for k in z.files}
-    if verify:
-        h = _content_hash(arrays)
-        if h != manifest["hash"]:
-            raise IOError(f"artifact {final_dir} corrupt: hash mismatch")
-    return arrays, manifest
+        return json.load(f)
+
+
+def _read_v2(final_dir: str, manifest: dict, *, verify: bool
+             ) -> tuple[dict[str, QuantTensor], dict]:
+    """Read + (optionally) verify a v2 payload against its manifest."""
+    with open(os.path.join(final_dir, "payload.bin"), "rb") as f:
+        payload = f.read()
+    if verify and bundle_hash_v2(payload, manifest) != manifest["hash"]:
+        raise IOError(f"artifact {final_dir} corrupt: v2 hash mismatch "
+                      "(payload or protected manifest fields tampered)")
+    tensors, header = decode_payload(payload)
+    if verify and (header.get("quant") != manifest.get("quant")
+                   or header.get("codec") != manifest.get("codec")):
+        raise IOError(f"artifact {final_dir} corrupt: manifest codec "
+                      "metadata disagrees with the payload header")
+    return tensors, manifest
 
 
 class CheckpointManager:
+    """Step-numbered checkpoint store over write_artifact/read_artifact.
+
+    fmt/quant/codec select the artifact format for NEW saves (default v1 for
+    byte-stable history; pass fmt=2 to store quantized + entropy-coded
+    task states — restore() reads either transparently)."""
+
     def __init__(self, directory: str, *, keep: int = 3,
-                 async_save: bool = False):
+                 async_save: bool = False, fmt: int = 1,
+                 quant: str = "none", codec: str = "zlib"):
         self.dir = directory
         self.keep = keep
+        self.fmt = fmt
+        self.quant = quant
+        self.codec = codec
         os.makedirs(directory, exist_ok=True)
         self._q: queue.Queue | None = None
         self._worker = None
@@ -139,6 +262,8 @@ class CheckpointManager:
         return os.path.join(self.dir, f"step_{step:010d}")
 
     def save(self, step: int, state: PyTree, metadata: dict | None = None):
+        """Checkpoint `state` at `step` (async mode returns right after
+        host-side array capture; errors surface on wait())."""
         arrays = tree_to_arrays(state)     # host capture happens now
         if self._q is not None:
             self._q.put((step, arrays, metadata or {}))
@@ -156,6 +281,7 @@ class CheckpointManager:
                 self._q.task_done()
 
     def wait(self):
+        """Block until queued async saves land; re-raise their errors."""
         if self._q is not None:
             self._q.join()
         if self._errors:
@@ -163,7 +289,8 @@ class CheckpointManager:
 
     def _write(self, step: int, arrays: dict, metadata: dict):
         write_artifact(self._step_dir(step), arrays,
-                       {"step": step, "metadata": metadata})
+                       {"step": step, "metadata": metadata},
+                       fmt=self.fmt, quant=self.quant, codec=self.codec)
         self._gc()
 
     def _gc(self):
@@ -173,6 +300,7 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def all_steps(self) -> list[int]:
+        """Sorted steps with a manifest on disk."""
         out = []
         for name in os.listdir(self.dir):
             if name.startswith("step_"):
@@ -182,11 +310,14 @@ class CheckpointManager:
         return sorted(out)
 
     def latest_step(self) -> int | None:
+        """Most recent checkpointed step, or None when empty."""
         steps = self.all_steps()
         return steps[-1] if steps else None
 
     def restore(self, step: int | None = None, *, verify: bool = True
                 ) -> tuple[int, PyTree, dict]:
+        """(step, state, metadata) for `step` (default latest), verified
+        and format-dispatched through read_artifact."""
         step = self.latest_step() if step is None else step
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")

@@ -9,8 +9,13 @@ lets repeat traffic skip it entirely while cold tasks pay it once.
 Keys are (task_id, bundle_hash) so a hot-swapped bundle (new hash) can never
 serve stale weights even without an invalidation callback; the registry's
 publish/evict notifications additionally drop dead entries eagerly.
-Values are opaque pytrees (expanded adapter leaves, or pre-merged factors);
-the budget counts their actual array bytes.
+Values are opaque pytrees (expanded adapter leaves, pre-merged factors, or —
+in the engine's quantized-cache mode — int8/nf4 codes plus fp16 scale planes
+and their static dequant metadata); the budget counts their actual array
+bytes. A quantized entry is therefore charged its CODED footprint (the
+quantized arrays as they sit in device memory — the lossless entropy stage
+is already undone at load), 4-8x below the fp32 state and orders of
+magnitude below the expanded leaves the default mode holds.
 """
 from __future__ import annotations
 
@@ -25,7 +30,12 @@ Key = tuple[str, str]   # (task_id, bundle_hash)
 
 
 def tree_bytes(tree: PyTree) -> int:
-    return sum(leaf.nbytes for leaf in jax.tree.leaves(tree))
+    """Total array bytes across a pytree's leaves. Non-array leaves (the
+    strings/ints of quantization metadata riding along in quantized cache
+    values) have no nbytes and count as zero — the budget charges exactly
+    what lives in device memory."""
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(tree)
+               if hasattr(leaf, "nbytes"))
 
 
 class ExpansionCache:
@@ -49,6 +59,8 @@ class ExpansionCache:
 
     # ------------------------------------------------------------------
     def get(self, task_id: str, bundle_hash: str) -> PyTree | None:
+        """Cached value for (task, bundle version), refreshing LRU order;
+        None on miss. Counts hits/misses."""
         key = (task_id, bundle_hash)
         entry = self._entries.get(key)
         if entry is None:
@@ -88,10 +100,13 @@ class ExpansionCache:
             self.invalidations += 1
 
     def clear(self):
+        """Drop every entry (counters keep their history)."""
         self._entries.clear()
         self.bytes = 0
 
     def reset_stats(self):
+        """Zero the flow counters without touching live entries (benches
+        use this to scope stats to a measured window)."""
         self.hits = self.misses = self.evictions = self.invalidations = 0
         self.puts = self.replacements = 0
 
@@ -107,6 +122,7 @@ class ExpansionCache:
         return len(self._entries)
 
     def stats(self) -> dict:
+        """Plain-dict counter snapshot (entries/bytes/hits/misses/...)."""
         # invariant while counters cover the cache's whole history, i.e.
         # absent reset_stats()/clear() (asserted by tests/test_serve_cache.py):
         # entries == puts - replacements - evictions - invalidations. A

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.checkpoint.codec import dequantize_jnp
 from repro.core.reparam import expand_tree, flatten_with_paths, \
     unflatten_paths
 from repro.kernels.ops import kernel_expand_fn
@@ -106,6 +107,12 @@ class ServeEngine:
     pooled cache uses per-row positions, which MLA decode doesn't support).
     decode_horizon: max fused decode block length K (the engine compiles
     one block per power-of-two K the scheduler plans, so O(log K) variants).
+    quantized_cache: hold bundles in the ExpansionCache in their CODED
+    form (int8/nf4 codes + fp16 scales; LRU bytes charge those quantized
+    arrays, not the expanded fp32 leaves) and
+    dequantize inside the jitted expansion on each admission, instead of
+    caching the expanded fp32 leaves. Token-stream equal to the default
+    path; see adapters_for for the compute/bytes tradeoff.
     mesh: optional (data, model) jax Mesh (launch.mesh.make_serve_mesh).
     When set, the engine is tensor/data parallel end to end: the frozen base
     is placed per sharding.specs.model_param_pspecs, the pooled slot KV
@@ -128,6 +135,7 @@ class ServeEngine:
                  decode_horizon: int = 8,
                  interference_horizon: int | None = None,
                  legacy_decode: bool = False,
+                 quantized_cache: bool = False,
                  metrics: Metrics | None = None,
                  mesh: Mesh | None = None):
         if bundle.arch.kind != "lm":
@@ -153,6 +161,15 @@ class ServeEngine:
         # Kept as a benchmark baseline arm and an A/B oracle for the fused
         # block path — not for production serving.
         self.legacy_decode = legacy_decode
+        # quantized_cache: the ExpansionCache holds each bundle's CODED
+        # representation (int8/nf4 codes + fp16 scales — the entropy stage
+        # is undone at load; bytes charge the quantized arrays) instead of
+        # the expanded fp32 leaves; dequantization
+        # runs fused into the jitted expansion on every admission. Trades
+        # per-admission expansion compute for a 100-1000x smaller cache
+        # entry — the regime where adapter count, not traffic per adapter,
+        # is the bottleneck.
+        self.quantized_cache = quantized_cache
         self.pool = SlotPool(n_slots, cache_cap)
         self.scheduler = Scheduler(
             self.pool, max_prefill_requests=max_prefill_requests,
@@ -188,6 +205,12 @@ class ServeEngine:
         self._decode_blocks: dict[int, Any] = {}   # horizon K -> jitted block
         self._expand_jit = jax.jit(self._expand_effective,
                                    **sharding_kw["expand"])
+        # dequantize-inside-jit expansion: the static qmeta arg describes
+        # each path's (scheme, dtype, shape, block), so one trace serves
+        # every bundle published with the same plan + quant settings
+        self._expand_q_jit = jax.jit(self._expand_effective_q,
+                                     static_argnums=1,
+                                     **sharding_kw["expand"])
         self._legacy_decode_fn = (jax.jit(make_assembled_decode_step(bundle))
                                   if legacy_decode else None)
         self._legacy_params: PyTree | None = None  # restack memo (legacy)
@@ -333,9 +356,32 @@ class ServeEngine:
             out[path] = (b + dlt.astype(b.dtype)).astype(b.dtype)
         return out
 
+    def _expand_effective_q(self, qstate: dict, qmeta: tuple
+                            ) -> dict[str, Array]:
+        """Quantized-cache expansion: dequantize the coded (alpha, beta)
+        parts INSIDE the jit, then run the same expansion math as
+        _expand_effective. qstate maps path -> {"codes", "scales"} (or
+        {"raw": x}) device arrays; qmeta is the matching hashable static
+        ((path, (scheme, dtype, shape, block)), ...) from the registry."""
+        flat = {path: dequantize_jnp(qstate[path], meta)
+                for path, meta in qmeta}
+        return self._expand_effective(unflatten_paths(flat))
+
     def adapters_for(self, task_id: str) -> tuple[tuple, dict[str, Array]]:
-        """Cached effective adapter leaves for the task's LIVE bundle."""
+        """Effective adapter leaves for the task's LIVE bundle.
+
+        Normal mode caches the EXPANDED leaves — repeat admissions skip
+        expansion entirely. quantized_cache mode caches the bundle's coded
+        parts instead (the quantized arrays' bytes against the LRU budget)
+        and re-runs
+        the fused dequantize+expand jit per admission; a cache hit then
+        skips the disk read, hash verification, and payload decode, not the
+        expansion compute. Token streams are identical either way — the
+        jitted int8 dequant is bit-equal to the host-side dequantize-on-load
+        path (tests/test_serve.py holds both differentials)."""
         bundle_hash = self.registry.current_hash(task_id)
+        if self.quantized_cache:
+            return self._adapters_for_quantized(task_id, bundle_hash)
         eff = self.cache.get(task_id, bundle_hash)
         if eff is None:
             art = self.registry.load(task_id)      # hash-verified read
@@ -354,17 +400,44 @@ class ServeEngine:
             self.cache.put(task_id, bundle_hash, eff)
         return (task_id, bundle_hash), eff
 
+    def _adapters_for_quantized(self, task_id: str, bundle_hash: str
+                                ) -> tuple[tuple, dict[str, Array]]:
+        """quantized_cache half of adapters_for: cache the coded bundle,
+        dequantize+expand fused in one jit on every admission."""
+        entry = self.cache.get(task_id, bundle_hash)
+        if entry is None:
+            art = self.registry.load(task_id, dequantize=False)
+            qstate = {path: {k: jnp.asarray(v) for k, v in parts.items()}
+                      for path, parts in art.qstate.items()}
+            if self.mesh is not None:
+                # coded parts replicate like the raw alphas would (they are
+                # strictly smaller); expansion output tiles per out_shardings
+                qstate = jax.device_put(qstate, self._repl_sh)
+            entry = {"q": qstate, "meta": art.qmeta}
+            self.cache.put(task_id, bundle_hash, entry)
+        t0 = time.perf_counter()
+        with self._rules():
+            eff = self._expand_q_jit(entry["q"], entry["meta"])
+        jax.block_until_ready(eff)
+        self.metrics.histogram("expansion_s").observe(
+            time.perf_counter() - t0)
+        self.metrics.counter("expansions").inc()
+        return (task_id, bundle_hash), eff
+
     # ------------------------------------------------------------------
     # Request API.
     # ------------------------------------------------------------------
     def submit(self, task_id: str, prompt: Sequence[int],
                max_new_tokens: int) -> Request:
+        """Enqueue a request against a published task; returns the live
+        Request whose .generated fills as the engine steps."""
         req = self.scheduler.submit(task_id, prompt, max_new_tokens)
         req.t_submit = time.perf_counter()
         self.metrics.counter("requests_submitted").inc()
         return req
 
     def has_work(self) -> bool:
+        """True while any request is queued or decoding."""
         return self.scheduler.has_work()
 
     # ------------------------------------------------------------------
@@ -424,6 +497,8 @@ class ServeEngine:
         return finished
 
     def run_until_idle(self, max_steps: int = 100_000) -> list[Request]:
+        """step() until the scheduler drains; returns finished requests
+        in completion order. Raises if max_steps elapse first."""
         done: list[Request] = []
         for _ in range(max_steps):
             if not self.has_work():

@@ -12,22 +12,26 @@ from typing import Iterable
 
 
 class Counter:
+    """Monotonically increasing value (requests, tokens, cache events)."""
     __slots__ = ("value",)
 
     def __init__(self):
         self.value = 0
 
     def inc(self, n: int | float = 1):
+        """Add `n` (default 1) to the counter."""
         self.value += n
 
 
 class Gauge:
+    """Last-write-wins instantaneous value (active slots, tokens/s)."""
     __slots__ = ("value",)
 
     def __init__(self):
         self.value = 0.0
 
     def set(self, v: float):
+        """Overwrite the gauge with the latest observation."""
         self.value = float(v)
 
 
@@ -48,6 +52,7 @@ class Histogram:
         self.max = -math.inf
 
     def observe(self, v: float):
+        """Record one sample into its bucket and the exact aggregates."""
         v = float(v)
         self.counts[bisect.bisect_left(self.bounds, v)] += 1
         self.count += 1
@@ -57,6 +62,7 @@ class Histogram:
 
     @property
     def mean(self) -> float:
+        """Exact arithmetic mean of all observations (0.0 when empty)."""
         return self.sum / self.count if self.count else 0.0
 
     def percentile(self, p: float) -> float:
@@ -75,6 +81,8 @@ class Histogram:
         return self.max
 
     def summary(self) -> dict:
+        """Plain-dict digest (count/mean/min/max/p50/p95/p99) for
+        snapshots, log lines, and the benchmark JSON reports."""
         if not self.count:
             return {"count": 0}
         return {"count": self.count, "mean": self.mean,
@@ -108,21 +116,26 @@ class Metrics:
                 f"it with a {kind} (snapshot keys would collide)")
 
     def counter(self, name: str) -> Counter:
+        """Get-or-create the Counter registered under `name`."""
         self._claim(name, "counter")
         return self._counters.setdefault(name, Counter())
 
     def gauge(self, name: str) -> Gauge:
+        """Get-or-create the Gauge registered under `name`."""
         self._claim(name, "gauge")
         return self._gauges.setdefault(name, Gauge())
 
     def histogram(self, name: str,
                   buckets: Iterable[float] = DEFAULT_BUCKETS) -> Histogram:
+        """Get-or-create the Histogram registered under `name`."""
         self._claim(name, "histogram")
         if name not in self._histograms:
             self._histograms[name] = Histogram(buckets)
         return self._histograms[name]
 
     def snapshot(self) -> dict:
+        """One flat {name: value-or-summary-dict} view of every
+        instrument — the only read path tests and benches consume."""
         out: dict = {}
         for n, c in sorted(self._counters.items()):
             out[n] = c.value

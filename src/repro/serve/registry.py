@@ -13,6 +13,14 @@ every load verifies the manifest's content hash. Publishing under an existing
 task id *hot-swaps* it: the bundle hash changes, subscribers (the engine's
 expansion cache) are notified, and the next request picks up the new weights
 without restarting the engine.
+
+Bundles are stored in wire format v2 by default (quantized + entropy-coded
+``payload.bin``, repro.checkpoint.codec; spec in docs/ARCHITECTURE.md):
+publish(quant="int8") shrinks a task's on-disk footprint ~5x vs the v1
+float32 ``arrays.npz`` while staying token-stable under greedy serving
+(benchmarks/bundle_bench.py holds that empirically). v1 bundles published by
+older code keep loading through the same ``load`` call — the manifest's
+``format`` field selects the reader.
 """
 from __future__ import annotations
 
@@ -23,6 +31,7 @@ import shutil
 from typing import Any, Callable
 
 from repro.checkpoint.manager import (arrays_to_tree, read_artifact,
+                                      read_artifact_quantized,
                                       tree_to_arrays, write_artifact)
 from repro.core.generator import GeneratorConfig
 
@@ -31,13 +40,26 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class AdapterBundle:
+    """One task's live serving bundle, as loaded from (or published to) the
+    registry.
+
+    `state` is the dequantized mcnc (alpha, beta) tree — None when loaded
+    with dequantize=False, in which case `qstate` holds the still-coded
+    per-path part dicts (int8/nf4 codes + fp16 scales, or {"raw": x}) and
+    `qmeta` the matching hashable ((path, (scheme, dtype, shape, block)),
+    ...) tuple a jitted dequantizer takes as its static argument."""
     task_id: str
     version: int
-    bundle_hash: str            # content hash of the (alpha, beta) arrays
+    bundle_hash: str            # v1: tensor content hash; v2: header+payload
     gen_cfg: GeneratorConfig
-    state: PyTree               # mcnc (alpha, beta) trees
+    state: PyTree               # mcnc (alpha, beta) trees (None if quantized)
     adapter: dict               # adapter config (rank/scale/seed/...)
     metadata: dict
+    fmt: int = 1                # on-disk wire format the bundle came from/to
+    quant: str = "none"         # quant scheme ("none" | "int8" | "nf4")
+    codec: str = "none"         # lossless codec name ("zlib" | "raw" | ...)
+    qstate: dict | None = None  # flat {path: parts} when dequantize=False
+    qmeta: tuple | None = None  # hashable static dequant meta for qstate
 
 
 def _safe_task_dir(root: str, task_id: str) -> str:
@@ -74,6 +96,8 @@ class AdapterRegistry:
         return int(m.get("version", 1)), m["hash"]
 
     def subscribe(self, fn: Callable[[str], None]):
+        """Register an in-process (task_id,) callback fired on every
+        publish (hot-swap) and evict — cache invalidation hook."""
         self._subscribers.append(fn)
 
     def _notify(self, task_id: str):
@@ -83,11 +107,17 @@ class AdapterRegistry:
     # ------------------------------------------------------------------
     def publish(self, task_id: str, state: PyTree, gen_cfg: GeneratorConfig,
                 *, adapter: dict | None = None,
-                metadata: dict | None = None) -> AdapterBundle:
+                metadata: dict | None = None, fmt: int = 2,
+                quant: str = "none", codec: str = "zlib") -> AdapterBundle:
         """Atomically (re)publish a task's bundle; returns the live bundle.
 
         Re-publishing an existing task id is a hot-swap: version bumps, the
         old artifact is replaced whole, and subscribers are invalidated.
+
+        fmt selects the wire format (2 = quantized + entropy-coded payload,
+        1 = legacy raw npz); quant the lossy stage ("none" keeps the alphas
+        bit-exact, "int8" / "nf4" trade bounded coefficient error for
+        another 3-5x on disk); codec the lossless byte-stream stage.
         """
         task_dir = _safe_task_dir(self.root, task_id)
         version = self._index.get(task_id, (0, ""))[0] + 1
@@ -98,27 +128,52 @@ class AdapterRegistry:
             "generator": dataclasses.asdict(gen_cfg),
             "adapter": adapter or {},
             "metadata": metadata or {},
-        })
+        }, fmt=fmt, quant=quant, codec=codec)
         self._index[task_id] = (version, manifest["hash"])
         self._notify(task_id)
         return AdapterBundle(task_id=task_id, version=version,
                              bundle_hash=manifest["hash"], gen_cfg=gen_cfg,
                              state=state, adapter=adapter or {},
-                             metadata=metadata or {})
+                             metadata=metadata or {}, fmt=fmt,
+                             quant=quant if fmt == 2 else "none",
+                             codec=codec if fmt == 2 else "none")
 
-    def load(self, task_id: str, *, verify: bool = True) -> AdapterBundle:
-        """Load + hash-verify a bundle (raises IOError on corruption)."""
+    def load(self, task_id: str, *, verify: bool = True,
+             dequantize: bool = True) -> AdapterBundle:
+        """Load + hash-verify a bundle (raises IOError on corruption).
+
+        dequantize=True (default) returns `state` as the float (alpha, beta)
+        tree whatever the on-disk format. dequantize=False defers the lossy
+        inverse: `state` is None and `qstate`/`qmeta` carry the coded parts
+        for device-side dequantization (the engine's quantized ExpansionCache
+        path) — v1 bundles come back as scheme-"none" parts, so callers
+        handle one representation."""
         task_dir = _safe_task_dir(self.root, task_id)
         if not os.path.isdir(task_dir):
             raise KeyError(f"no bundle for task {task_id!r} in {self.root}")
-        arrays, manifest = read_artifact(task_dir, verify=verify)
+        if dequantize:
+            arrays, manifest = read_artifact(task_dir, verify=verify)
+            state, qstate, qmeta = arrays_to_tree(arrays), None, None
+        else:
+            tensors, manifest = read_artifact_quantized(task_dir,
+                                                        verify=verify)
+            state = None
+            qstate = {name.replace("|", "/"): qt.parts
+                      for name, qt in tensors.items()}
+            qmeta = tuple(sorted(
+                (name.replace("|", "/"), qt.meta)
+                for name, qt in tensors.items()))
         gen_cfg = GeneratorConfig(**manifest["generator"])
         bundle = AdapterBundle(
             task_id=task_id, version=int(manifest.get("version", 1)),
             bundle_hash=manifest["hash"], gen_cfg=gen_cfg,
-            state=arrays_to_tree(arrays),
+            state=state,
             adapter=manifest.get("adapter", {}),
-            metadata=manifest.get("metadata", {}))
+            metadata=manifest.get("metadata", {}),
+            fmt=int(manifest.get("format", 1)),
+            quant=manifest.get("quant", "none"),
+            codec=manifest.get("codec", "none"),
+            qstate=qstate, qmeta=qmeta)
         self._index[task_id] = (bundle.version, bundle.bundle_hash)
         return bundle
 
@@ -140,6 +195,7 @@ class AdapterRegistry:
         return self._index[task_id][1]
 
     def list_tasks(self) -> list[str]:
+        """Sorted task ids with a manifest on disk."""
         if not os.path.isdir(self.root):
             return []
         return sorted(

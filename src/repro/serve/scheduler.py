@@ -27,6 +27,7 @@ from typing import Iterable
 
 
 class RequestState(Enum):
+    """Request lifecycle: WAITING (queued) -> ACTIVE (slot) -> FINISHED."""
     WAITING = "waiting"
     ACTIVE = "active"       # prefilled, decoding
     FINISHED = "finished"
@@ -34,6 +35,9 @@ class RequestState(Enum):
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: prompt + token budget, scheduler-owned
+    lifecycle state, the tokens generated so far, and engine-stamped wall
+    times for latency metrics (TTFT, end-to-end)."""
     req_id: int
     task_id: str
     prompt: tuple[int, ...]
@@ -48,10 +52,12 @@ class Request:
 
     @property
     def prompt_len(self) -> int:
+        """Number of prompt tokens (prefill batch grouping key)."""
         return len(self.prompt)
 
     @property
     def done(self) -> bool:
+        """True once the generation budget is fully emitted."""
         return len(self.generated) >= self.max_new_tokens
 
 
@@ -64,11 +70,14 @@ class PrefillGroup:
 
     @property
     def prompt_len(self) -> int:
+        """Shared prompt length of the group (one prefill batch shape)."""
         return self.requests[0].prompt_len
 
 
 @dataclasses.dataclass
 class StepPlan:
+    """One engine iteration's work order: prefill admissions grouped into
+    batches, the active decode slots, and the fused decode horizon K."""
     prefill_groups: list[PrefillGroup]
     decode_slots: list[int]       # active slots after this step's admissions
     # tokens to decode in one fused device block this step. 0 = no decode
@@ -80,6 +89,7 @@ class StepPlan:
 
     @property
     def empty(self) -> bool:
+        """True when the step has neither admissions nor decode work."""
         return not self.prefill_groups and not self.decode_slots
 
 
@@ -94,12 +104,15 @@ class SlotPool:
         self.pos: list[int] = [0] * n_slots
 
     def free_slots(self) -> list[int]:
+        """Slot indices with no assigned request."""
         return [i for i, r in enumerate(self.requests) if r is None]
 
     def active_slots(self) -> list[int]:
+        """Slot indices currently serving a request (decode batch rows)."""
         return [i for i, r in enumerate(self.requests) if r is not None]
 
     def assign(self, slot: int, request: Request):
+        """Bind a request to a free slot and mark it ACTIVE."""
         assert self.requests[slot] is None, f"slot {slot} busy"
         self.requests[slot] = request
         self.pos[slot] = request.prompt_len
@@ -107,6 +120,7 @@ class SlotPool:
         request.state = RequestState.ACTIVE
 
     def release(self, slot: int) -> Request:
+        """Free a slot, marking its request FINISHED; returns it."""
         req = self.requests[slot]
         assert req is not None, f"slot {slot} already free"
         self.requests[slot] = None
@@ -156,6 +170,9 @@ class Scheduler:
     # ------------------------------------------------------------------
     def submit(self, task_id: str, prompt: Iterable[int],
                max_new_tokens: int) -> Request:
+        """Validate + enqueue a request (FIFO); rejects empty prompts,
+        non-positive budgets, and requests that cannot fit a slot's KV
+        capacity even when alone."""
         prompt = tuple(int(t) for t in prompt)
         total = len(prompt) + max_new_tokens
         if not prompt:
@@ -172,6 +189,7 @@ class Scheduler:
         return req
 
     def has_work(self) -> bool:
+        """True while anything is queued or decoding."""
         return bool(self.waiting) or bool(self.pool.active_slots())
 
     # ------------------------------------------------------------------

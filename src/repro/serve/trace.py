@@ -2,9 +2,20 @@
 
 A *trace* is a JSON-serializable description of one serving session:
 deterministic task states (TaskBundle.synthetic_trainable indices), engine
-knobs, and an ordered request list. `run_trace` replays it through a
-ServeEngine built from scratch and returns the generated tokens plus the
-cache/engine counters — everything two engines must agree on.
+knobs, publish/wire-format knobs, and an ordered request list. `run_trace`
+replays it through a ServeEngine built from scratch and returns the
+generated tokens plus the cache/engine counters — everything two engines
+must agree on.
+
+Differential arms supported purely through trace keys:
+  * sharded vs single-device — pass `mesh=`;
+  * quantized vs fp32 — set trace["publish"] = {"quant": "int8"} (bundles
+    stored coded on disk) and/or trace["engine"]["quantized_cache"] = True
+    (engine caches coded bundles, dequantizes inside the jitted expansion).
+    Tokens must match the fp32 arm exactly at int8 on the bench model; the
+    "expansions" counter legitimately differs in quantized_cache mode
+    (expansion re-runs per admission), so compare COMPARED_COUNTERS minus
+    "expansions" across that pair — tests/test_serve.py does exactly this.
 
 The module doubles as a subprocess driver (`python -m repro.serve.trace`):
 the sharded-vs-single-device differential oracle in tests/test_serve.py runs
@@ -54,12 +65,18 @@ def build_fixture(trace: dict) -> tuple[TaskBundle, Any, list]:
 def publish_tasks(trace: dict, bundle: TaskBundle, registry: AdapterRegistry
                   ) -> dict[str, Any]:
     """Publish each task's deterministic synthetic state; returns states
-    (for sequential_reference oracles)."""
+    (for sequential_reference oracles).
+
+    trace["publish"] (optional) forwards wire-format knobs to
+    AdapterRegistry.publish — e.g. {"fmt": 2, "quant": "int8"} makes every
+    bundle int8-quantized on disk, which is how the quantized-vs-fp32
+    differential arm builds its registry."""
     gen = GeneratorConfig(**trace.get("gen", DEFAULT_GEN))
+    publish_kw = trace.get("publish", {})
     states = {}
     for task_id, idx in trace["tasks"].items():
         states[task_id] = bundle.synthetic_trainable(int(idx))
-        registry.publish(task_id, states[task_id], gen)
+        registry.publish(task_id, states[task_id], gen, **publish_kw)
     return states
 
 
@@ -89,6 +106,8 @@ def run_trace(trace: dict, *, mesh=None, registry_root: str | None = None
 
 
 def main(argv: Sequence[str] | None = None) -> int:
+    """Subprocess driver: read a trace (file or stdin), optionally build
+    a DxM serve mesh, replay, and print the result JSON to stdout."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--trace", default="-",
                     help="trace JSON path, or '-' for stdin")

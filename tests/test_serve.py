@@ -525,6 +525,84 @@ def test_scheduler_max_prefill_group_splits_token_identically():
 
 
 # ---------------------------------------------------------------------------
+# Bundle format v2: quantized-vs-fp32 differential. Three arms over ONE
+# trace — v1 fp32 bundles (the legacy wire format through the same registry
+# API), v2 int8 bundles dequantized on load, and v2 int8 bundles held CODED
+# in the expansion cache with dequantization fused into the jitted expansion
+# — must be token-identical, and the quantized cache must account its
+# entries in compressed bytes.
+# ---------------------------------------------------------------------------
+
+QUANT_TRACE = {
+    "gen": {"k": 5, "d": 600, "width": 32, "seed": 0},
+    "adapter_rank": 4,
+    "tasks": {"t0": 0, "t1": 1, "t2": 2},
+    "engine": {"n_slots": 4, "cache_cap": 24, "decode_horizon": 4},
+    # slot reuse + repeat traffic so the quantized cache takes hits
+    "requests": [["t0", [1, 2, 3], 5], ["t1", [7, 8, 9], 5],
+                 ["t2", [2, 4, 6], 5], ["t0", [9, 9, 9], 4],
+                 ["t1", [1, 3, 5], 4]],
+}
+
+
+def test_quantized_vs_fp32_differential_token_identical():
+    """int8-quantized v2 bundles serve the SAME token streams as v1 fp32
+    bundles (NOLA's quantization-tolerance claim, held exactly under greedy
+    decode on the bench model), whether dequantization happens on load or
+    inside the jitted expansion; v1 bundles load through the same registry
+    API (backward compat exercised on the serving path, not just reads)."""
+    v1 = run_trace(dict(QUANT_TRACE, publish={"fmt": 1}))
+    int8 = run_trace(dict(QUANT_TRACE, publish={"quant": "int8"}))
+    qcache = run_trace(dict(QUANT_TRACE, publish={"quant": "int8"},
+                            engine={**QUANT_TRACE["engine"],
+                                    "quantized_cache": True}))
+    assert int8["tokens"] == v1["tokens"]
+    assert qcache["tokens"] == v1["tokens"]
+    # all counters match except "expansions": the quantized-cache engine
+    # legitimately re-expands per admission (it caches coded alphas, not
+    # expanded leaves)
+    assert {k: v for k, v in int8["counters"].items()} == v1["counters"]
+    sub = {k: v for k, v in qcache["counters"].items() if k != "expansions"}
+    assert sub == {k: v for k, v in v1["counters"].items()
+                   if k != "expansions"}
+    assert qcache["counters"]["expansions"] >= v1["counters"]["expansions"]
+    # LRU accounting is honest in compressed bytes: the coded entries are
+    # orders of magnitude below the expanded fp32 leaves the other arms hold
+    assert qcache["cache"]["entries"] == int8["cache"]["entries"] == 3
+    assert qcache["cache"]["bytes"] * 50 < int8["cache"]["bytes"]
+    assert qcache["cache"]["hits"] >= 1     # repeat traffic hits coded entries
+
+
+def test_engine_quantized_cache_nf4_drift_is_bounded_not_token_checked():
+    """nf4 is the aggressive arm: 4-bit codes may legitimately flip tokens,
+    so the contract is weaker — the engine must RUN and complete every
+    request through the quantized-cache path (the drift itself is measured
+    and reported by benchmarks/bundle_bench.py, not asserted here)."""
+    out = run_trace(dict(QUANT_TRACE, publish={"quant": "nf4"},
+                         engine={**QUANT_TRACE["engine"],
+                                 "quantized_cache": True}))
+    assert out["counters"]["requests_completed"] == len(
+        QUANT_TRACE["requests"])
+    assert all(len(t) > 0 for t in out["tokens"])
+
+
+def test_mesh_engine_quantized_cache_matches_single_device_deferred():
+    """Mesh x quantized-cache composition: coded bundles replicate onto the
+    mesh, dequantize inside the sharded expansion jit, and the tokens match
+    the single-device quantized engine exactly. (Runs in the multi-device
+    CI lane; placed here with its own skip so the fast lane stays fast.)"""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices (multi-device CI lane)")
+    from repro.launch.mesh import make_serve_mesh
+    trace = dict(QUANT_TRACE, publish={"quant": "int8"},
+                 engine={**QUANT_TRACE["engine"], "quantized_cache": True})
+    single = run_trace(trace)
+    sharded = run_trace(trace, mesh=make_serve_mesh("2x4"))
+    assert sharded["tokens"] == single["tokens"]
+    assert sharded["cache"] == single["cache"]
+
+
+# ---------------------------------------------------------------------------
 # Sharded serving: the (2, 4) mesh engine must be indistinguishable from the
 # single-device engine on the same request trace — token-identical outputs
 # AND matching cache/engine counters (the tentpole's primary correctness
