@@ -1,0 +1,170 @@
+"""Pallas TPU paged decode attention: gather K/V pages via a page table and
+compute online-softmax attention over only the pages a row actually occupies.
+
+Replaces the dense engine's full-`cache_cap` masked scan on the decode hot
+path (layers/attention.py::decode_attention): with a block-paged KV cache the
+score/value reads scale with the pages a sequence has *allocated*, not the
+pool's worst-case capacity.
+
+TPU mapping: grid = (B, Hkv, P) with the page table and per-row cache
+lengths as scalar prefetch — the k/v BlockSpec index maps read
+`page_table[b, j]` to DMA exactly the physical page each grid step needs
+(pages-as-blocks, vLLM-style). The (G, D) query block for one (row, kv-head)
+pair stays resident while the P pages stream; online-softmax statistics
+(m, l) and the fp32 accumulator live in VMEM scratch. Pages whose first
+position is already past the row's cache length are skipped whole
+(`pl.when`); the tail page masks per-position. `dimension_semantics`
+declares (B, Hkv) parallel and the page axis "arbitrary" (it carries the
+softmax accumulator).
+
+The public wrapper pads D up to the 128-lane MXU width and G up to the
+8-sublane width, dispatches Pallas vs the pure-jnp oracle (ref.py), and
+slices the padding back off — the same contract as ops.py for the MCNC
+kernels. interpret=True is the CPU correctness path (assignment rule:
+Pallas targets TPU; tests sweep randomized shapes in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+
+Array = jax.Array
+
+NEG_INF = -1e30
+LANES = 128     # MXU/VPU lane width: head_dim pads to a multiple
+SUBLANES = 8    # sublane width: the grouped-query dim pads to a multiple
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _paged_kernel(scale, ps, pt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref):
+    """One grid step: accumulate page j of row b into (m, l, acc) for every
+    grouped query head of kv-head h. Refs: q (1,1,G,D); k/v (1,1,ps,D) —
+    the physical page pt_ref[b, j]; o (1,1,G,D); scratch acc (G,D) fp32,
+    m/l (G, LANES) fp32 (lane-padded running max / normalizer)."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cl = cl_ref[b]
+
+    @pl.when(j * ps < cl)        # page holds at least one valid position
+    def _accumulate():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)               # (ps, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, ps)
+        pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        s = jnp.where(pos < cl, s, NEG_INF)
+        m_prev = m_ref[:, :1]                             # (G, 1)
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q: Array, k_pages: Array, v_pages: Array,
+                                  page_table: Array, cache_len: Array,
+                                  scale: float, *,
+                                  interpret: bool = False) -> Array:
+    """Raw kernel launch. q: (B, Hkv, G, D); k/v_pages: (n_pages, Hkv, ps,
+    D); page_table: (B, P) int32; cache_len: (B,) int32. D must be a
+    multiple of 128 and G a multiple of 8 (the wrapper pads)."""
+    b, hkv, g, dh = q.shape
+    ps = k_pages.shape[2]
+    n_pp = page_table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # (page_table, cache_len)
+        grid=(b, hkv, n_pp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda b, h, j, pt, cl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, dh),
+                         lambda b, h, j, pt, cl: (pt[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, dh),
+                         lambda b, h, j, pt, cl: (pt[b, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda b, h, j, pt, cl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_paged_kernel, float(scale), ps)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), cache_len.astype(jnp.int32),
+      q, k_pages, v_pages)
+
+
+def paged_decode_attention(q: Array, k_pages: Array, v_pages: Array,
+                           page_table: Array, cache_len: Array, *,
+                           scale: float | None = None,
+                           use_pallas: bool = True,
+                           interpret: bool = False) -> Array:
+    """Padded public entry (ops.py contract): grouped-GQA paged decode
+    attention over exactly the page-table columns passed in.
+
+    q: (B, Hkv, G, D); k_pages/v_pages: (n_pages, Hkv, page_size, D);
+    page_table: (B, P) physical page ids (callers slice the table to the
+    live-page horizon P before the call — that slice, not a mask, is what
+    makes decode reads scale with actual tokens); cache_len: (B,) valid
+    positions per row. use_pallas=False falls back to the pure-jnp oracle
+    (the XLA serving path on CPU hosts); interpret=True runs the Pallas
+    kernel in interpret mode (CPU correctness tests).
+
+    Pads D -> multiple of 128 (zero K/Q pad dims add 0 to every score) and
+    G -> multiple of 8 (pad query heads attend to garbage that is sliced
+    off), then slices back to the caller's shape.
+    """
+    b, hkv, g, dh = q.shape
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+    if not use_pallas:
+        return ref.paged_decode_attention_ref(q, k_pages, v_pages,
+                                              page_table, cache_len, scale)
+    dh_p = _round_up(dh, LANES)
+    g_p = _round_up(g, SUBLANES)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, g_p - g), (0, dh_p - dh)))
+    kp = jnp.pad(k_pages, ((0, 0), (0, 0), (0, 0), (0, dh_p - dh)))
+    vp = jnp.pad(v_pages, ((0, 0), (0, 0), (0, 0), (0, dh_p - dh)))
+    ps = k_pages.shape[2]
+    cl = jnp.minimum(jnp.asarray(cache_len, jnp.int32),
+                     page_table.shape[1] * ps)
+    out = paged_decode_attention_pallas(qp, kp, vp, page_table, cl, scale,
+                                        interpret=interpret)
+    return out[:, :, :g, :dh]

@@ -51,6 +51,47 @@ def mcnc_expand_bwd_ref(alpha: Array, beta: Array, w1: Array, w2: Array,
     return d_alpha.astype(alpha.dtype), d_beta.astype(beta.dtype)
 
 
+def paged_decode_attention_ref(q: Array, k_pages: Array, v_pages: Array,
+                               page_table: Array, cache_len: Array,
+                               scale: float) -> Array:
+    """Gather-then-attend oracle for paged decode attention.
+
+    q: (B, Hkv, G, D) — one query token per batch row, grouped GQA heads;
+    k_pages / v_pages: (n_pages, Hkv, page_size, D) — the paged KV pool;
+    page_table: (B, P) int32 — physical page id of each row's p-th logical
+    page (unallocated columns point at the null page 0);
+    cache_len: (B,) int32 — valid positions per row INCLUDING the current
+    token. Only positions < cache_len contribute; everything else (null
+    pages, partially filled tail pages, recycled-page garbage) is masked.
+
+    Linearization contract: logical page p of row b holds global positions
+    [p * page_size, (p + 1) * page_size). Returns (B, Hkv, G, D) in q.dtype
+    with fp32 score/softmax accumulation — the Pallas kernel must match this
+    (tests/test_kernels.py sweeps shapes through the padding wrapper).
+    """
+    b, hkv, g, dh = q.shape
+    ps = k_pages.shape[2]
+    n_pp = page_table.shape[1]
+    k = k_pages[page_table]                      # (B, P, Hkv, ps, D)
+    v = v_pages[page_table]
+    k = k.transpose(0, 2, 1, 3, 4).reshape(b, hkv, n_pp * ps, dh)
+    v = v.transpose(0, 2, 1, 3, 4).reshape(b, hkv, n_pp * ps, dh)
+    sc = jnp.einsum("bhgd,bhkd->bhgk", q.astype(k.dtype), k,
+                    preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(n_pp * ps)[None, :]                  # (1, P*ps)
+    cl = jnp.asarray(cache_len).reshape(-1, 1)
+    valid = idx < cl                                      # (B, P*ps)
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    # rows with NO valid position (cache_len 0) would softmax uniformly
+    # over the all-masked scores; zero them instead — matching the Pallas
+    # kernel, which skips every page and finalizes to zeros
+    p = p * (cl > 0).astype(p.dtype)[:, None, None, :]
+    out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
 def mcnc_linear_ref(x: Array, w0: Array, alpha: Array, beta: Array,
                     w1: Array, w2: Array, w3: Array, freq: float) -> Array:
     """Fused consumer: y = x @ (w0 + reshape(expand(alpha, beta))[:m, :n]).

@@ -293,6 +293,39 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
     return out.reshape(b, 1, hq, dh).astype(q.dtype)
 
 
+def paged_decode_attention(q: Array, k_pages: Array, v_pages: Array,
+                           page_table: Array, cache_len: Array, *,
+                           scale: float | None = None,
+                           use_pallas: bool = False,
+                           interpret: bool = False) -> Array:
+    """One-step attention against a block-PAGED cache (repro.serve paged
+    engine) — the paged replacement for decode_attention's full-`Smax`
+    masked scan.
+
+    q: (B, 1, Hq, D); k_pages/v_pages: (n_pages, Hkv, page_size, D) — ONE
+    layer's slice of the pooled page arrays; page_table: (B, P) int32
+    physical page ids, already sliced by the caller to the live-page
+    horizon P (that static slice is the perf lever: score/value reads cover
+    P * page_size positions instead of the dense pool's cache_cap);
+    cache_len: (B,) valid positions per row including the current token.
+
+    Dispatches to the Pallas paged-attention kernel (kernels/
+    paged_attention.py) or its pure-jnp oracle — the oracle is the XLA
+    serving path on CPU hosts and matches decode_attention's einsum/mask
+    numerics over the same valid positions, which is what keeps the paged
+    engine token-identical to the dense engine.
+    """
+    b, _, hq, dh = q.shape
+    hkv = k_pages.shape[1]
+    g = hq // hkv
+    from repro.kernels.paged_attention import \
+        paged_decode_attention as _kernel
+    qg = q[:, 0].reshape(b, hkv, g, dh)
+    out = _kernel(qg, k_pages, v_pages, page_table, cache_len, scale=scale,
+                  use_pallas=use_pallas, interpret=interpret)
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
 def cross_attention(q: Array, k: Array, v: Array,
                     scale: float | None = None) -> Array:
     """Full (non-causal, non-blocked) attention for decode-time cross-attn:

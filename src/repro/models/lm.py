@@ -22,7 +22,8 @@ import jax.numpy as jnp
 
 from repro.core.adapters import dense
 from repro.layers.attention import (blocked_attention, decode_attention,
-                                    masked_cache_write)
+                                    masked_cache_write,
+                                    paged_decode_attention)
 from repro.layers.mla import (MLAConfig, init_mla_params, mla_attention,
                               mla_decode)
 from repro.layers.mlp import swiglu
@@ -478,6 +479,210 @@ def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
     # in the fused serve decode block reduces shard-locally (identity off-mesh)
     logits = shard(dense(x, params["lm_head"])[:, 0], "decode_logits")
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (repro.serve paged engine): fixed-size pages + page tables.
+# ---------------------------------------------------------------------------
+
+def _require_paged_support(cfg: ModelConfig):
+    """Paged decode needs positional KV writes into a flat page pool: GQA
+    attention, dense blocks, no sliding-window ring buffer. (MLA/hybrid/RWKV
+    carry latent or recurrent state the page layout has no slot for — serve
+    those with the dense pooled cache.)"""
+    if (cfg.attn_type != "gqa" or cfg.block_type != "dense"
+            or cfg.window is not None):
+        raise ValueError(
+            "paged KV cache supports dense GQA models without sliding "
+            f"window (got attn={cfg.attn_type!r} block={cfg.block_type!r} "
+            f"window={cfg.window!r})")
+
+
+def paged_cache_supported(cfg: ModelConfig) -> bool:
+    """True when the config can serve from a paged KV pool (see
+    _require_paged_support) — the engine's auto mode falls back to the
+    dense pooled cache otherwise."""
+    try:
+        _require_paged_support(cfg)
+        return True
+    except ValueError:
+        return False
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> PyTree:
+    """Paged KV pool: {"k_pages","v_pages"}: (L, n_pages, Hkv, page_size,
+    hd). Page 0 is the engine's null page (never allocated to a slot;
+    masked writes land there). Logical page p of a slot holds that slot's
+    global positions [p*page_size, (p+1)*page_size) — the page table maps
+    logical to physical."""
+    _require_paged_support(cfg)
+    shape = (cfg.n_layers, n_pages, cfg.n_kv_heads, page_size, cfg.head_dim)
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}
+
+
+def _paged_cache_write(lc: dict, k: Array, v: Array, page_table: Array,
+                       pos: Array, active: Array | None) -> dict:
+    """Scatter one token's K/V per row into the layer's page pool. k/v:
+    (B, Hkv, 1, hd) head-major; pos: (B,) write positions. Inactive rows
+    are pointed at the null page 0 — their real pages stay bit-identical
+    (the paged analog of masked_cache_write's active= contract)."""
+    ps = lc["k_pages"].shape[2]
+    off = jnp.mod(pos, ps)
+    phys = jnp.take_along_axis(page_table, (pos // ps)[:, None], axis=1)[:, 0]
+    if active is not None:
+        phys = jnp.where(active, phys, 0)
+    kc = lc["k_pages"].at[phys, :, off].set(
+        k[:, :, 0].astype(lc["k_pages"].dtype))
+    vc = lc["v_pages"].at[phys, :, off].set(
+        v[:, :, 0].astype(lc["v_pages"].dtype))
+    return {"k_pages": kc, "v_pages": vc}
+
+
+def _gqa_decode_paged(x, p, cfg: ModelConfig, lc, page_table, pos,
+                      active=None, *, num_active_pages: int,
+                      use_pallas=False, interpret=False):
+    """x: (B,1,d); lc: one layer's {"k_pages","v_pages"} page-pool slice.
+    pos: (B,) per-row positions (always vectors — the paged cache only
+    exists for the pooled continuous-batching engine). The attention read
+    covers only page_table[:, :num_active_pages] (static slice)."""
+    q, k, v = _gqa_project(x, p, cfg, pos[:, None])
+    k = k.transpose(0, 2, 1, 3)                     # (B, Hkv, 1, hd)
+    v = v.transpose(0, 2, 1, 3)
+    new_lc = _paged_cache_write(lc, k, v, page_table, pos, active)
+    o = paged_decode_attention(q, new_lc["k_pages"], new_lc["v_pages"],
+                               page_table[:, :num_active_pages], pos + 1,
+                               use_pallas=use_pallas, interpret=interpret)
+    return _attn_out(o, p, cfg), new_lc
+
+
+def _layer_decode_paged(cfg: ModelConfig, x, p, lc, page_table, pos,
+                        active, num_active_pages, use_pallas, interpret):
+    h = rms_norm(x, p["ln1_scale"])
+    a, new_lc = _gqa_decode_paged(h, p, cfg, lc, page_table, pos, active,
+                                  num_active_pages=num_active_pages,
+                                  use_pallas=use_pallas, interpret=interpret)
+    x = x + a
+    h2 = rms_norm(x, p["ln2_scale"])
+    return x + _ffn(h2, p, cfg), new_lc
+
+
+def decode_step_paged(cfg: ModelConfig, params: PyTree, pool: PyTree,
+                      page_table: Array, tokens: Array, pos: Array,
+                      active: Array | None = None, *,
+                      num_active_pages: int, use_pallas: bool = False,
+                      interpret: bool = False) -> tuple[Array, PyTree]:
+    """One decode token per row against the PAGED pool. pool:
+    init_paged_cache layout; page_table: (B, max_pages_per_slot) int32;
+    tokens/pos: (B,); active: optional (B,) mask (inactive rows write only
+    the null page and keep their counters — same contract as decode_step).
+    num_active_pages (static) bounds the attention read to the pages any
+    row can actually occupy this step — decode FLOPs and bytes scale with
+    live pages, not pool capacity. Returns (logits (B, vocab), pool)."""
+    _require_paged_support(cfg)
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)
+    pool = shard_cache(pool)
+    page_table = shard(page_table, "serve_page_table")
+
+    def body(carry, inp):
+        h, full = carry
+        lp, idx = inp
+        lc = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0,
+                                                   keepdims=False), full)
+        h, new_lc = _layer_decode_paged(cfg, h, lp, lc, page_table, pos,
+                                        active, num_active_pages,
+                                        use_pallas, interpret)
+        full = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), idx, 0), full, new_lc)
+        return (h, shard_cache(full)), None
+
+    (x, new_pool), _ = jax.lax.scan(
+        body, (x, pool), (params["layers"], jnp.arange(cfg.n_layers)))
+    x = rms_norm(x[:, -1:], params["final_norm_scale"])
+    logits = shard(dense(x, params["lm_head"])[:, 0], "decode_logits")
+    return logits, new_pool
+
+
+def _layer_chunk_prefill(cfg: ModelConfig, x, p, lc, page_row, positions,
+                         num_pages: int, use_pallas, interpret):
+    """One layer of chunked prefill: project the chunk, scatter its K/V
+    into the slot's pages, then causally attend over ALL the slot's live
+    pages (earlier chunks included). x: (1, Sc, d); page_row: (max_pages,)
+    physical ids for the one slot being chunk-prefilled."""
+    h = rms_norm(x, p["ln1_scale"])
+    q, k, v = _gqa_project(h, p, cfg, positions)
+    ps = lc["k_pages"].shape[2]
+    phys = page_row[positions // ps]                     # (Sc,)
+    off = jnp.mod(positions, ps)
+    kc = lc["k_pages"].at[phys, :, off].set(
+        k[0].astype(lc["k_pages"].dtype))                # k[0]: (Sc,Hkv,hd)
+    vc = lc["v_pages"].at[phys, :, off].set(
+        v[0].astype(lc["v_pages"].dtype))
+    # gather the slot's first num_pages pages and linearize: (1,Hkv,K,hd)
+    k_lin = kc[page_row[:num_pages]].transpose(1, 0, 2, 3).reshape(
+        1, kc.shape[1], num_pages * ps, kc.shape[3])
+    v_lin = vc[page_row[:num_pages]].transpose(1, 0, 2, 3).reshape(
+        1, vc.shape[1], num_pages * ps, vc.shape[3])
+    b, sc_len, hq, dh = q.shape
+    hkv = kc.shape[1]
+    qg = q.reshape(b, sc_len, hkv, hq // hkv, dh)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bshgd,bhkd->bshgk", qg.astype(k_lin.dtype), k_lin,
+                        preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(num_pages * ps)                    # linearized positions
+    valid = kpos[None, :] <= positions[:, None]          # causal over prefix
+    scores = jnp.where(valid[None, :, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bshgk,bhkd->bshgd", probs.astype(v_lin.dtype), v_lin,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, sc_len, hq, dh).astype(q.dtype)
+    a = _attn_out(o, p, cfg)
+    x = x + a
+    h2 = rms_norm(x, p["ln2_scale"])
+    return x + _ffn(h2, p, cfg), {"k_pages": kc, "v_pages": vc}
+
+
+def prefill_chunk(cfg: ModelConfig, params: PyTree, pool: PyTree,
+                  page_table: Array, tokens: Array, start: Array, *,
+                  num_pages: int, use_pallas: bool = False,
+                  interpret: bool = False) -> tuple[Array, PyTree]:
+    """Chunked prefill: run `tokens` (1, Sc) — one piece of one long prompt
+    — at positions [start, start + Sc), writing their K/V into the slot's
+    pages and attending causally over everything the slot has cached so
+    far. num_pages (static) = pages covering start + Sc. Returns
+    (last-token logits (1, vocab), pool); the engine uses the logits only
+    on the final chunk (they ARE the request's first generated token).
+    Earlier chunks' K/V land via the page table exactly where full prefill
+    would scatter them, so decode after the last chunk is oblivious to how
+    the prompt entered the cache."""
+    _require_paged_support(cfg)
+    x = _embed(cfg, params, tokens)
+    positions = start + jnp.arange(tokens.shape[1])
+    pool = shard_cache(pool)
+    page_row = shard(page_table, "serve_page_table")[0]
+
+    def body(carry, inp):
+        h, full = carry
+        lp, idx = inp
+        lc = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0,
+                                                   keepdims=False), full)
+        h, new_lc = _layer_chunk_prefill(cfg, h, lp, lc, page_row,
+                                         positions, num_pages,
+                                         use_pallas, interpret)
+        full = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), idx, 0), full, new_lc)
+        return (h, shard_cache(full)), None
+
+    (x, new_pool), _ = jax.lax.scan(
+        body, (x, pool), (params["layers"], jnp.arange(cfg.n_layers)))
+    x = rms_norm(x[:, -1:], params["final_norm_scale"])
+    logits = shard(dense(x, params["lm_head"])[:, 0], "decode_logits")
+    return logits, new_pool
 
 
 def init_cache(cfg: ModelConfig, batch: int, cache_cap: int,

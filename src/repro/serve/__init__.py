@@ -6,13 +6,15 @@
 from repro.serve.cache import ExpansionCache, tree_bytes
 from repro.serve.engine import ServeEngine, sequential_reference
 from repro.serve.metrics import Metrics
+from repro.serve.paged import PagePool, RefPagePool, pages_for_tokens
 from repro.serve.registry import AdapterBundle, AdapterRegistry
-from repro.serve.scheduler import (Request, RequestState, Scheduler,
-                                   SlotPool, StepPlan)
+from repro.serve.scheduler import (ChunkPrefill, Request, RequestState,
+                                   Scheduler, SlotPool, StepPlan)
 from repro.serve.trace import run_trace
 
 __all__ = [
-    "AdapterBundle", "AdapterRegistry", "ExpansionCache", "Metrics",
-    "Request", "RequestState", "Scheduler", "ServeEngine", "SlotPool",
-    "StepPlan", "run_trace", "sequential_reference", "tree_bytes",
+    "AdapterBundle", "AdapterRegistry", "ChunkPrefill", "ExpansionCache",
+    "Metrics", "PagePool", "RefPagePool", "Request", "RequestState",
+    "Scheduler", "ServeEngine", "SlotPool", "StepPlan", "pages_for_tokens",
+    "run_trace", "sequential_reference", "tree_bytes",
 ]

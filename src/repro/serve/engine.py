@@ -23,6 +23,17 @@ while assignments are unchanged (the `adapter_full_restacks` counter stays
 at zero by construction; `adapter_slot_writes` counts the incremental
 writes).
 
+KV memory is block-PAGED by default (serve/paged.py + models/lm.py
+init_paged_cache): fixed-size pages allocated on write against per-slot
+page tables, freed on finish, with decode attention gathering only the
+live pages a row occupies (kernels/paged_attention.py) — KV bytes in use
+and decode reads scale with tokens actually cached instead of the dense
+pool's n_slots x cache_cap worst case, admission is additionally gated by
+the free-page budget, and long prompts prefill in chunks interleaved with
+decode blocks. The dense pooled layout survives as the dense_cache=True
+differential/benchmark arm (and serves the cache layouts paging does not
+cover); docs/ARCHITECTURE.md S1a has the page-table layout.
+
 Compared to the seed's sequential loop (expansion re-run inside every
 prefill/decode step, one task at a time) this removes expansion from the
 steady-state token path entirely and keeps the batch dimension full across
@@ -57,14 +68,17 @@ from repro.kernels.ops import kernel_expand_fn
 from repro.models import lm
 from repro.serve.cache import ExpansionCache
 from repro.serve.metrics import Metrics
+from repro.serve.paged import PagePool, pages_for_tokens
 from repro.serve.registry import AdapterRegistry
-from repro.serve.scheduler import (PrefillGroup, Request, Scheduler,
-                                   SlotPool)
+from repro.serve.scheduler import (ChunkPrefill, PrefillGroup, Request,
+                                   Scheduler, SlotPool)
 from repro.sharding.rules import data_axes, sanitize_pspec, use_rules
 from repro.sharding.specs import (cache_pspecs, effective_adapter_pspecs,
                                   stacked_adapter_pspecs)
-from repro.train.steps import (TaskBundle, make_assembled_decode_step,
+from repro.train.steps import (TaskBundle, make_assembled_chunk_prefill_step,
+                               make_assembled_decode_step,
                                make_assembled_multi_decode_step,
+                               make_assembled_multi_decode_step_paged,
                                make_assembled_prefill_step, make_decode_step,
                                make_prefill_step)
 
@@ -100,6 +114,49 @@ def _scatter_prefill(kv: PyTree, group_cache: PyTree, tokens: Array,
             pos.at[idx].set(prompt_len), remaining.at[idx].set(rem))
 
 
+def _scatter_prefill_paged(kv: PyTree, group_cache: PyTree, page_ids: Array,
+                           tokens: Array, pos: Array, remaining: Array,
+                           idx: Array, first_tok: Array, prompt_len,
+                           rem: Array):
+    """Paged twin of _scatter_prefill: cut each prefilled row's first
+    `n_prompt_pages` pages out of the group cache and scatter them WHOLE
+    into the page pool at the slots' freshly allocated physical ids
+    (bulk alloc at prefill scatter). page_ids: (Bg * n_prompt_pages,) in
+    (row-major request, logical page) order — exactly how the blocks are
+    linearized below. Jitted with the pool + decode state donated."""
+    n_rows = idx.shape[0]
+    n_prompt_pages = page_ids.shape[0] // n_rows
+    ps = kv["k_pages"].shape[3]
+
+    def scatter(pool, gc):
+        l, bg, hkv, cap, hd = gc.shape
+        blocks = gc[:, :, :, : n_prompt_pages * ps]
+        if n_prompt_pages * ps > cap:
+            # the prompt's last page sticks out past a cache_cap that is
+            # not a page multiple: zero-fill the overhang (those positions
+            # are masked by cache_len until decode overwrites them)
+            blocks = jnp.pad(blocks, ((0, 0),) * 3
+                             + ((0, n_prompt_pages * ps - cap), (0, 0)))
+        blocks = blocks.reshape(l, bg, hkv, n_prompt_pages, ps, hd)
+        blocks = blocks.transpose(0, 1, 3, 2, 4, 5).reshape(
+            l, bg * n_prompt_pages, hkv, ps, hd)
+        return pool.at[:, page_ids].set(blocks.astype(pool.dtype))
+
+    kv = {"k_pages": scatter(kv["k_pages"], group_cache["k"]),
+          "v_pages": scatter(kv["v_pages"], group_cache["v"])}
+    return (kv, tokens.at[idx].set(first_tok),
+            pos.at[idx].set(prompt_len), remaining.at[idx].set(rem))
+
+
+def _activate_slots(tokens: Array, pos: Array, remaining: Array, idx: Array,
+                    first_tok: Array, prompt_len, rem: Array):
+    """Initialize device decode state for slots whose prompt entered the
+    cache via chunked prefill (the paged scatter does this inline for
+    whole-prompt groups). Jitted with the state donated."""
+    return (tokens.at[idx].set(first_tok), pos.at[idx].set(prompt_len),
+            remaining.at[idx].set(rem))
+
+
 class ServeEngine:
     """Continuous-batching multi-adapter server for decoder-only GQA models.
 
@@ -113,6 +170,19 @@ class ServeEngine:
     dequantize inside the jitted expansion on each admission, instead of
     caching the expanded fp32 leaves. Token-stream equal to the default
     path; see adapters_for for the compute/bytes tradeoff.
+    dense_cache / page_size / n_pages / prefill_chunk: KV memory layout.
+    By default (dense_cache=None) the engine serves from a block-PAGED KV
+    pool — n_pages physical pages of page_size tokens, per-slot page
+    tables, free-list allocation (serve/paged.py) — so KV bytes in use and
+    decode attention reads scale with tokens actually cached, and
+    admission is bounded by the free-page budget. n_pages defaults to
+    capacity parity with the dense pool; shrink it to cap memory.
+    prefill_chunk (paged only) caches prompts longer than the threshold in
+    chunk-sized pieces interleaved with decode blocks, so one long prompt
+    cannot stall active decodes. dense_cache=True keeps the PR-2 dense
+    pooled cache — the differential/benchmark arm the paged engine is held
+    token-identical against (and the only layout for hybrid/rwkv state or
+    legacy_decode).
     mesh: optional (data, model) jax Mesh (launch.mesh.make_serve_mesh).
     When set, the engine is tensor/data parallel end to end: the frozen base
     is placed per sharding.specs.model_param_pspecs, the pooled slot KV
@@ -136,6 +206,10 @@ class ServeEngine:
                  interference_horizon: int | None = None,
                  legacy_decode: bool = False,
                  quantized_cache: bool = False,
+                 dense_cache: bool | None = None,
+                 page_size: int = 16,
+                 n_pages: int | None = None,
+                 prefill_chunk: int | None = None,
                  metrics: Metrics | None = None,
                  mesh: Mesh | None = None):
         if bundle.arch.kind != "lm":
@@ -147,6 +221,22 @@ class ServeEngine:
         if mesh is not None and legacy_decode:
             raise ValueError("legacy_decode is a single-device benchmark "
                              "arm; it has no sharded variant")
+        # dense_cache=None resolves to the paged KV pool whenever the model
+        # supports it (dense GQA, no window); legacy_decode and the
+        # remaining cache layouts (hybrid/rwkv recurrent state) keep the
+        # dense pooled cache. dense_cache=True forces the dense pool — the
+        # differential/benchmark arm the paged engine is held token-
+        # identical against.
+        if dense_cache is None:
+            dense_cache = (legacy_decode
+                           or not lm.paged_cache_supported(bundle.model_cfg))
+        if legacy_decode and not dense_cache:
+            raise ValueError("legacy_decode reproduces the PR-1 dense-pool "
+                             "hot path; it has no paged variant")
+        if dense_cache and prefill_chunk is not None:
+            raise ValueError("chunked prefill lands prompt pieces in KV "
+                             "pages; it needs the paged cache")
+        self.dense_cache = dense_cache
         self.bundle = bundle
         self.cfg = bundle.model_cfg
         self.mesh = mesh
@@ -171,19 +261,60 @@ class ServeEngine:
         # is the bottleneck.
         self.quantized_cache = quantized_cache
         self.pool = SlotPool(n_slots, cache_cap)
+        # paged KV memory control plane (None on the dense arms): the
+        # default pool size gives capacity PARITY with the dense layout
+        # (every slot can still reach cache_cap), but bytes IN USE track
+        # pages actually allocated; operators shrink n_pages to cap memory
+        # and admission degrades to the free-page budget instead of OOMing
+        self.pages: PagePool | None = None
+        if not dense_cache:
+            self.page_size = page_size
+            max_pps = pages_for_tokens(cache_cap, page_size)
+            if n_pages is None:
+                n_pages = n_slots * max_pps + 1        # + the null page
+                if mesh is not None:
+                    # round the page dim up to the data-axis size so the
+                    # pages-over-data pspec survives sanitization (pure
+                    # padding: extra pages just sit on the free list).
+                    # Pinned-n_pages traces bypass this — the differential
+                    # oracles pin it so both layouts see one capacity.
+                    dp = 1
+                    for a in ("pod", "data"):
+                        if a in mesh.axis_names:
+                            dp *= mesh.shape[a]
+                    n_pages = -(-n_pages // dp) * dp
+            self.pages = PagePool(n_pages, page_size, n_slots, max_pps)
+            self.max_pages_per_slot = max_pps
         self.scheduler = Scheduler(
             self.pool, max_prefill_requests=max_prefill_requests,
             max_prefill_group=max_prefill_group,
             max_decode_horizon=1 if legacy_decode else decode_horizon,
-            interference_horizon=interference_horizon)
+            interference_horizon=interference_horizon,
+            page_pool=self.pages, prefill_chunk=prefill_chunk)
         registry.subscribe(self.cache.invalidate_task)
 
         self.base = base
         self._flat_base = flatten_with_paths(base)
         self._adapter_paths = _adapter_paths(self._flat_base)
         param_dtype = jnp.dtype(self.cfg.param_dtype)
-        self.kv = lm.init_cache(self.cfg, n_slots, cache_cap,
-                                dtype=param_dtype)
+        if dense_cache:
+            self.kv = lm.init_cache(self.cfg, n_slots, cache_cap,
+                                    dtype=param_dtype)
+        else:
+            self.kv = lm.init_paged_cache(self.cfg, n_pages, page_size,
+                                          dtype=param_dtype)
+            # NB the page table itself stays a HOST array (PagePool.table,
+            # n_slots x max_pages_per_slot int32 — bytes-sized): it rides
+            # into each paged dispatch like the scatter indices do. A
+            # device-resident twin would need its own patch dispatch per
+            # allocation, which costs more than uploading 100-odd bytes
+            # alongside a block (measured ~10% of block latency at smoke
+            # shapes). The one-host-SYNC-per-K-block discipline is
+            # untouched — uploads are enqueues, the only readback is still
+            # the (K, n_slots) token block.
+            # bytes one physical page holds across all layers, k + v:
+            leaf = self.kv["k_pages"]
+            self._page_bytes = 2 * (leaf.nbytes // leaf.shape[1])
         # device-resident per-slot decode state (donated through every
         # jitted step; the host never rebuilds or re-uploads these)
         self._tokens = jnp.zeros((n_slots,), jnp.int32)
@@ -194,15 +325,26 @@ class ServeEngine:
         # the frozen base / KV pool / slot state accordingly, and thread
         # explicit shardings through the jits below (single-device: no-op)
         sharding_kw = self._setup_sharding()
+        self._sharding_kw = sharding_kw    # late-built jits (chunk prefill)
 
         self._prefill = jax.jit(make_assembled_prefill_step(bundle,
                                                             cache_cap))
-        self._scatter = jax.jit(_scatter_prefill,
-                                donate_argnums=(0, 2, 3, 4),
-                                **sharding_kw["scatter"])
+        if dense_cache:
+            self._scatter = jax.jit(_scatter_prefill,
+                                    donate_argnums=(0, 2, 3, 4),
+                                    **sharding_kw["scatter"])
+        else:
+            self._scatter_paged = jax.jit(_scatter_prefill_paged,
+                                          donate_argnums=(0, 3, 4, 5),
+                                          **sharding_kw["scatter"])
+            self._activate = jax.jit(_activate_slots,
+                                     donate_argnums=(0, 1, 2),
+                                     **sharding_kw["activate"])
+            self._chunk_steps: dict[int, Any] = {}   # num_pages -> jitted
         self._slot_writer = jax.jit(_write_slots, donate_argnums=(0,),
                                     **sharding_kw["slot_writer"])
-        self._decode_blocks: dict[int, Any] = {}   # horizon K -> jitted block
+        self._decode_blocks: dict[Any, Any] = {}   # K (dense) or (K, P)
+        #                                            (paged) -> jitted block
         self._expand_jit = jax.jit(self._expand_effective,
                                    **sharding_kw["expand"])
         # dequantize-inside-jit expansion: the static qmeta arg describes
@@ -250,7 +392,8 @@ class ServeEngine:
         pooled KV cache, and the slot counters to it, and returns the
         explicit sharding kwargs for the hot-path jits. Single-device mode
         returns empty kwargs and touches nothing."""
-        empty = {"scatter": {}, "slot_writer": {}, "expand": {}}
+        empty = {"scatter": {}, "slot_writer": {}, "expand": {},
+                 "activate": {}, "chunk": {}}
         if self.mesh is None:
             self._repl_sh = None
             return empty
@@ -269,9 +412,11 @@ class ServeEngine:
                                    unflatten_paths(self._base_sh))
         self._flat_base = flatten_with_paths(self.base)
 
-        # pooled slot KV cache: slots over data, sequence over model — the
-        # exact layout lm.decode_step's shard_cache pins on the loop carry,
-        # so the fused block never reshards the pool
+        # pooled KV cache — dense: slots over data, sequence over model;
+        # paged: pages over data, kv heads over model (specs.cache_pspecs
+        # keys off the leaf names). Either way it is the exact layout the
+        # decode scan's shard_cache pins on the loop carry, so the fused
+        # block never reshards the pool.
         kv_pspecs = cache_pspecs(self.kv, dp=dp)
         self._kv_sh = jax.tree.map(lambda v, s: named(s, v.shape),
                                    self.kv, kv_pspecs)
@@ -306,6 +451,11 @@ class ServeEngine:
             # expanded factors are pre-sharded for prefill assembly AND for
             # the incremental slot writes into the stacked buffer
             "expand": {"out_shardings": self._eff_sh},
+            # paged-mode helpers: chunk prefill returns (replicated
+            # logits, canonical pool); slot activation keeps the
+            # replicated counters replicated
+            "activate": {"out_shardings": (vec, vec, vec)},
+            "chunk": {"out_shardings": (vec, self._kv_sh)},
         }
 
     def _place_eff(self, eff: dict[str, Array]) -> dict[str, Array]:
@@ -327,9 +477,14 @@ class ServeEngine:
         """Pre-create the hot-path instruments so snapshots always carry
         the sync/restack invariants tests and benchmarks assert on."""
         for name in ("decode_blocks", "decode_steps", "adapter_slot_writes",
-                     "adapter_full_restacks", "tokens_generated"):
+                     "adapter_full_restacks", "tokens_generated",
+                     "prefill_chunks"):
             self.metrics.counter(name)
         self.metrics.gauge("tokens_per_s")
+        if self.pages is not None:
+            for name in ("pages_in_use", "free_pages", "peak_pages_in_use",
+                         "kv_bytes_in_use"):
+                self.metrics.gauge(name)
 
     def reset_metrics(self) -> Metrics:
         """Swap in a fresh Metrics registry (e.g. to drop compile-dominated
@@ -457,6 +612,8 @@ class ServeEngine:
         finished: list[Request] = []
         for group in plan.prefill_groups:
             self._prefill_group(group, finished)
+        for chunk in plan.chunk_prefills:
+            self._chunk_prefill(chunk, finished)
         # a request can finish at prefill (max_new_tokens == 1); its device
         # `remaining` counter is already 0, so it is masked inside the block
         # — plan.decode_horizon is 0 only when NO slot owes decode tokens
@@ -489,6 +646,19 @@ class ServeEngine:
                                               np.asarray(freed, np.int32))
             self._params_dirty = True
             self.metrics.counter("adapter_slot_writes").inc(len(freed))
+        if freed and self.pages is not None:
+            # free-on-finish: the slots' pages go back to the free list and
+            # their table rows reset to the null page
+            for slot in freed:
+                self.pages.free_slot(slot)
+        if self.pages is not None:
+            st = self.pages.stats()
+            self.metrics.gauge("pages_in_use").set(st["pages_in_use"])
+            self.metrics.gauge("free_pages").set(st["free_pages"])
+            self.metrics.gauge("peak_pages_in_use").set(
+                st["peak_pages_in_use"])
+            self.metrics.gauge("kv_bytes_in_use").set(
+                st["pages_in_use"] * self._page_bytes)
         self.metrics.gauge("active_slots").set(len(self.pool.active_slots()))
         dt = time.perf_counter() - t_step
         tok = self.metrics.counter("tokens_generated").value - tok0
@@ -550,6 +720,23 @@ class ServeEngine:
             self.kv = jax.tree.map(
                 lambda pool, gc: pool.at[:, jidx].set(gc.astype(pool.dtype)),
                 self.kv, group_cache)
+        elif self.pages is not None:
+            # bulk page allocation for the group's prompts, then one donated
+            # whole-page scatter out of the (dense-computed) group cache
+            rem = np.asarray(
+                [r.max_new_tokens - 1 for r in group.requests], np.int32)
+            for r in group.requests:
+                self.pages.ensure(r.slot, r.prompt_len)
+            page_ids = np.asarray(
+                [pid for r in group.requests
+                 for pid in self.pages.slot_pages(r.slot)], np.int32)
+            (self.kv, self._tokens, self._pos,
+             self._remaining) = self._scatter_paged(
+                self.kv, group_cache, page_ids, self._tokens, self._pos,
+                self._remaining, idx, first_dev, group.prompt_len, rem)
+            self._stacked = self._slot_writer(self._stacked, eff, idx)
+            self._params_dirty = True
+            self.metrics.counter("adapter_slot_writes").inc(len(group.slots))
         else:
             rem = np.asarray(
                 [r.max_new_tokens - 1 for r in group.requests], np.int32)
@@ -573,6 +760,66 @@ class ServeEngine:
         self.metrics.counter("prefill_batches").inc()
         self.metrics.counter("prefill_tokens").inc(int(prompts.size))
         self.metrics.counter("tokens_generated").inc(len(group.requests))
+
+    # ------------------------------------------------------------------
+    # Chunked prefill (paged engine): long prompts enter the cache in
+    # prefill_chunk-sized pieces, one per engine step, interleaved with
+    # decode blocks — a long prompt costs in-flight decodes at most one
+    # chunk's compute per step instead of a whole-prompt stall.
+    # ------------------------------------------------------------------
+    def _chunk_fn(self, num_pages: int):
+        """Jitted chunk-prefill step for a live-page horizon (jax retraces
+        per chunk length; this memo bounds it per num_pages)."""
+        fn = self._chunk_steps.get(num_pages)
+        if fn is None:
+            fn = jax.jit(
+                make_assembled_chunk_prefill_step(self.bundle, num_pages),
+                donate_argnums=(1,), **self._sharding_kw["chunk"])
+            self._chunk_steps[num_pages] = fn
+        return fn
+
+    def _chunk_prefill(self, chunk: ChunkPrefill, finished: list[Request]):
+        """Run one ChunkPrefill plan item: allocate the chunk's pages,
+        cache the piece at its slot's table row, and — on the final piece —
+        activate the slot's device decode state and emit the request's
+        first token (the chunk step's last-token logits)."""
+        req = chunk.request
+        # pin the adapter expansion at the FIRST chunk: a hot-swap landing
+        # mid-prompt must not split one request's K/V across two bundle
+        # versions (whole-prompt prefill is atomic at admission; chunked
+        # prefill keeps that contract via the slot's pinned reference)
+        if self._slot_adapters[chunk.slot] is None:
+            self._slot_adapters[chunk.slot] = self.adapters_for(req.task_id)
+        key, eff = self._slot_adapters[chunk.slot]
+        params = self._prefill_params(key, eff)
+        sidx = np.asarray([chunk.slot], np.int32)
+        self.pages.ensure(chunk.slot, chunk.start + chunk.length)
+        num_pages = pages_for_tokens(chunk.start + chunk.length,
+                                     self.page_size)
+        tokens = np.asarray(
+            [req.prompt[chunk.start: chunk.start + chunk.length]], np.int32)
+        row = self.pages.table[chunk.slot: chunk.slot + 1].copy()
+        logits, self.kv = self._chunk_fn(num_pages)(
+            params, self.kv, row, tokens, np.int32(chunk.start))
+        self.metrics.counter("prefill_chunks").inc()
+        self.metrics.counter("prefill_tokens").inc(chunk.length)
+        if not chunk.is_last:
+            return
+        first_dev = jnp.argmax(logits, -1).astype(jnp.int32)       # (1,)
+        rem = np.asarray([req.max_new_tokens - 1], np.int32)
+        self._tokens, self._pos, self._remaining = self._activate(
+            self._tokens, self._pos, self._remaining, sidx, first_dev,
+            req.prompt_len, rem)
+        self._stacked = self._slot_writer(self._stacked, eff, sidx)
+        self._params_dirty = True
+        self.metrics.counter("adapter_slot_writes").inc()
+        req.generated.append(int(np.asarray(first_dev)[0]))
+        req.t_first_token = time.perf_counter()
+        self.metrics.histogram("ttft_s").observe(
+            req.t_first_token - req.t_submit)
+        self.metrics.counter("tokens_generated").inc()
+        if req.done:
+            finished.append(req)
 
     # unroll the steady-state (max-horizon) block only: replicating the loop
     # body lets XLA:CPU fuse across iterations (~20%/token at smoke shapes)
@@ -602,6 +849,46 @@ class ServeEngine:
             self._decode_blocks[k] = fn
         return fn
 
+    def _block_fn_paged(self, k: int, num_pages: int):
+        """Paged fused block, memoized per (horizon, live-page horizon) —
+        both power-of-two rounded so the variant count stays O(log K *
+        log pages). The page table is an input, not donated: it is
+        constant across a block and reused by the next one."""
+        fn = self._decode_blocks.get((k, num_pages))
+        if fn is None:
+            unroll = self.UNROLL_MIN_K if k >= self.UNROLL_MIN_K else 1
+            kw = {}
+            if self.mesh is not None:
+                vec = self._repl_sh
+                kw = dict(
+                    in_shardings=(self._decode_params_sh, self._kv_sh,
+                                  vec, vec, vec, vec),
+                    out_shardings=(vec, self._kv_sh, vec, vec, vec))
+            fn = jax.jit(make_assembled_multi_decode_step_paged(
+                self.bundle, k, num_pages, unroll=unroll),
+                donate_argnums=(1, 3, 4, 5), **kw)
+            self._decode_blocks[(k, num_pages)] = fn
+        return fn
+
+    def _prepare_block_pages(self, k: int) -> int:
+        """Alloc-on-write ahead of one fused decode block: extend every
+        decoding slot's pages to cover the positions the block will write
+        (guaranteed to succeed — admission reserved them) and return the
+        live-page horizon: the pow2-rounded page count attention must read
+        this block (capped at the per-slot max, so a late-generation block
+        never reads MORE than the dense path)."""
+        max_pages = 1
+        for s in self.pool.active_slots():
+            req = self.pool.requests[s]
+            if req.prefilling or req.done:    # masked rows: output discarded
+                continue
+            take = min(k, req.max_new_tokens - len(req.generated))
+            self.pages.ensure(s, self.pool.pos[s] + take)
+            max_pages = max(max_pages, pages_for_tokens(
+                self.pool.pos[s] + take, self.page_size))
+        return min(1 << (max_pages - 1).bit_length(),
+                   self.max_pages_per_slot)
+
     def _decode_block(self, k: int, finished: list[Request]):
         """One fused K-token decode dispatch + ONE host sync to harvest the
         (K, n_slots) token block. Validity needs no device mask read-back:
@@ -611,17 +898,24 @@ class ServeEngine:
             self._rebuild_decode_params()
             self._params_dirty = False
         t0 = time.perf_counter()
-        (tok_block, self.kv, self._tokens, self._pos,
-         self._remaining) = self._block_fn(k)(
-            self._decode_params, self.kv, self._tokens, self._pos,
-            self._remaining)
+        if self.pages is not None:
+            num_pages = self._prepare_block_pages(k)
+            (tok_block, self.kv, self._tokens, self._pos,
+             self._remaining) = self._block_fn_paged(k, num_pages)(
+                self._decode_params, self.kv, self.pages.table,
+                self._tokens, self._pos, self._remaining)
+        else:
+            (tok_block, self.kv, self._tokens, self._pos,
+             self._remaining) = self._block_fn(k)(
+                self._decode_params, self.kv, self._tokens, self._pos,
+                self._remaining)
         block = np.asarray(tok_block)          # the one sync per K tokens
         dt = time.perf_counter() - t0
         harvested = 0
         for s in self.pool.active_slots():
             req = self.pool.requests[s]
-            if req.done:                       # finished at prefill, masked
-                continue
+            if req.done or req.prefilling:     # finished at prefill, or a
+                continue                       # chunked prompt still caching
             take = min(k, req.max_new_tokens - len(req.generated))
             if block[take - 1, s] < 0:         # -1 = device row was inactive
                 raise RuntimeError(
@@ -700,6 +994,23 @@ class ServeEngine:
         self.metrics.histogram("decode_block_s").observe(dt)
         self.metrics.histogram("decode_step_s").observe(dt)
         self.metrics.gauge("decode_horizon").set(1)
+
+    # ------------------------------------------------------------------
+    def kv_pool_bytes(self) -> int:
+        """Device bytes the KV pool ALLOCATES (dense: n_slots x cache_cap
+        rows, committed up front; paged: n_pages x page_size, of which only
+        pages in use hold live data)."""
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.kv))
+
+    def peak_kv_bytes(self) -> int:
+        """Peak KV bytes the engine has ever actually HELD tokens in. The
+        dense pool commits every slot's full cache_cap row at admission, so
+        its peak is the whole pool; the paged pool's peak is the high-water
+        page count — the number serve_bench's paged-vs-dense memory gate
+        compares."""
+        if self.pages is None:
+            return self.kv_pool_bytes()
+        return self.pages.peak_pages_in_use * self._page_bytes
 
     # ------------------------------------------------------------------
     def stacked_reference(self) -> dict[str, Array]:

@@ -1,0 +1,219 @@
+"""Block-paged KV memory control plane: fixed-size page pool, per-slot page
+tables, and a free-list allocator.
+
+The device arrays (the page pool itself and the device-resident page table)
+live in the engine; this module is the pure-python allocator that decides
+WHICH physical page backs which (slot, logical page) — the same split the
+scheduler has with the slot pool. No jax imports: every decision is
+unit-testable without a device (tests/test_paged.py property-tests it
+against the executable spec below).
+
+Layout contract (models/lm.py::init_paged_cache):
+
+  * physical page 0 is the NULL page — never handed out; masked decode
+    writes and freed slots' table entries point there;
+  * logical page p of a slot holds that slot's global positions
+    [p * page_size, (p + 1) * page_size);
+  * a slot's table row lists its physical pages in logical order, null-
+    padded to max_pages_per_slot.
+
+Allocation discipline (the engine drives it):
+
+  * admission RESERVES a request's worst-case lifetime pages (the scheduler
+    admits only while reservations fit the pool), so decode can never
+    deadlock mid-flight needing a page that does not exist;
+  * pages are ALLOCATED lazily against the reservation — bulk at prefill
+    scatter / per chunk during chunked prefill, and alloc-on-write ahead of
+    each fused decode block (`ensure` covers exactly the positions the
+    block will touch);
+  * `free_slot` returns every page on finish. Bytes in use therefore track
+    tokens actually cached, not n_slots x cache_cap worst case — the whole
+    point of paging the pool.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+def pages_for_tokens(n_tokens: int, page_size: int) -> int:
+    """Pages covering positions [0, n_tokens)."""
+    return -(-n_tokens // page_size)
+
+
+class PagePool:
+    """Free-list page allocator with per-slot page tables + reservations.
+
+    n_pages counts physical pages INCLUDING the null page, matching the
+    device pool's leading dim; capacity (allocatable pages) is n_pages - 1.
+    The free list is LIFO (a stack): recently freed pages are reused first,
+    which keeps the working set dense and makes allocation order
+    deterministic — the sharded and single-device engines replay identical
+    traces into identical page assignments.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 max_pages_per_slot: int):
+        if n_pages < 2:
+            raise ValueError("need at least one allocatable page + null")
+        if page_size < 1 or max_pages_per_slot < 1:
+            raise ValueError("page_size and max_pages_per_slot must be >= 1")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_slots = n_slots
+        self.max_pages_per_slot = max_pages_per_slot
+        # LIFO free list: low page ids on top so fresh pools fill 1, 2, ...
+        self._free: list[int] = list(range(n_pages - 1, NULL_PAGE, -1))
+        self.table = np.full((n_slots, max_pages_per_slot), NULL_PAGE,
+                             np.int32)
+        self._n_alloc = [0] * n_slots       # logical pages allocated per slot
+        self._reserved = [0] * n_slots      # lifetime reservation per slot
+        self.peak_pages_in_use = 0
+        self.allocations = 0                # pages handed out, cumulative
+        self.frees = 0                      # pages returned, cumulative
+
+    # ------------------------------------------------------------------
+    @property
+    def capacity_pages(self) -> int:
+        """Allocatable pages (null page excluded)."""
+        return self.n_pages - 1
+
+    @property
+    def free_pages(self) -> int:
+        """Pages on the free list right now."""
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Pages currently backing some slot."""
+        return self.capacity_pages - len(self._free)
+
+    @property
+    def reserved_pages(self) -> int:
+        """Worst-case pages promised to live slots (>= pages_in_use)."""
+        return sum(self._reserved)
+
+    def slot_pages(self, slot: int) -> list[int]:
+        """The slot's physical pages in logical order."""
+        return [int(p) for p in self.table[slot, : self._n_alloc[slot]]]
+
+    # ------------------------------------------------------------------
+    def can_reserve(self, n_pages: int) -> bool:
+        """True if a lifetime reservation of n_pages fits beside every
+        outstanding reservation (admission control)."""
+        return (n_pages <= self.max_pages_per_slot
+                and self.reserved_pages + n_pages <= self.capacity_pages)
+
+    def reserve(self, slot: int, n_pages: int):
+        """Promise the slot up to n_pages over its lifetime. The scheduler
+        reserves at admission; `ensure` allocates against it lazily."""
+        if self._reserved[slot] or self._n_alloc[slot]:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        if not self.can_reserve(n_pages):
+            raise RuntimeError(
+                f"reservation of {n_pages} pages does not fit "
+                f"({self.reserved_pages}/{self.capacity_pages} reserved)")
+        self._reserved[slot] = n_pages
+
+    def ensure(self, slot: int, n_tokens: int) -> list[int]:
+        """Allocate pages so the slot covers positions [0, n_tokens);
+        returns the NEWLY allocated physical ids (empty if already
+        covered). Never exceeds the slot's reservation — the engine sizes
+        reservations at admission exactly so this cannot fail mid-flight."""
+        need = pages_for_tokens(n_tokens, self.page_size)
+        if need > self._reserved[slot]:
+            raise RuntimeError(
+                f"slot {slot} needs {need} pages > reservation "
+                f"{self._reserved[slot]}")
+        new: list[int] = []
+        while self._n_alloc[slot] < need:
+            pid = self._free.pop()
+            self.table[slot, self._n_alloc[slot]] = pid
+            self._n_alloc[slot] += 1
+            new.append(pid)
+        self.allocations += len(new)
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use)
+        return new
+
+    def free_slot(self, slot: int) -> list[int]:
+        """Return every page the slot holds (free-on-finish) and clear its
+        reservation; the table row resets to the null page. Returns the
+        freed physical ids (most-recent-first, matching the LIFO list)."""
+        n = self._n_alloc[slot]
+        freed = [int(p) for p in self.table[slot, :n][::-1]]
+        self._free.extend(freed)
+        self.table[slot, :] = NULL_PAGE
+        self._n_alloc[slot] = 0
+        self._reserved[slot] = 0
+        self.frees += len(freed)
+        return freed
+
+    def stats(self) -> dict:
+        """Counters + occupancy snapshot (engine metrics / tests)."""
+        return {"pages_in_use": self.pages_in_use,
+                "free_pages": self.free_pages,
+                "reserved_pages": self.reserved_pages,
+                "peak_pages_in_use": self.peak_pages_in_use,
+                "allocations": self.allocations, "frees": self.frees}
+
+    def check_invariants(self):
+        """Structural self-check (tests call this after every op): free +
+        in-use conservation, no page in two owners, no null-page handout,
+        table rows null beyond their allocation count."""
+        owned = [int(p) for s in range(self.n_slots)
+                 for p in self.table[s, : self._n_alloc[s]]]
+        assert NULL_PAGE not in owned, "null page was handed out"
+        assert NULL_PAGE not in self._free, "null page on the free list"
+        assert len(set(owned)) == len(owned), "page owned twice"
+        assert len(set(self._free)) == len(self._free), "free-list dup"
+        assert not (set(owned) & set(self._free)), "page both owned and free"
+        assert len(owned) + len(self._free) == self.capacity_pages, \
+            "page conservation violated"
+        for s in range(self.n_slots):
+            assert (self.table[s, self._n_alloc[s]:] == NULL_PAGE).all(), \
+                f"slot {s} table row dirty beyond allocation"
+            assert self._n_alloc[s] <= self._reserved[s], \
+                f"slot {s} allocated past its reservation"
+
+
+class RefPagePool:
+    """Executable spec of PagePool semantics for property testing — sets
+    and dicts only, no free-list mechanics. tests/test_paged.py replays
+    random op sequences through both and asserts they agree (mirroring the
+    ExpansionCache / _RefModel pattern in tests/test_serve_cache.py)."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        self.capacity = n_pages - 1
+        self.page_size = page_size
+        self.owned: dict[int, int] = {}     # slot -> pages allocated
+        self.reserved: dict[int, int] = {}  # slot -> lifetime reservation
+
+    def can_reserve(self, n_pages: int, max_pages_per_slot: int) -> bool:
+        """Admission predicate: fits beside outstanding reservations."""
+        return (n_pages <= max_pages_per_slot
+                and sum(self.reserved.values()) + n_pages <= self.capacity)
+
+    def reserve(self, slot: int, n_pages: int):
+        """Record the slot's lifetime promise."""
+        self.reserved[slot] = n_pages
+
+    def ensure(self, slot: int, n_tokens: int) -> int:
+        """Grow the slot's allocation to cover n_tokens; returns how many
+        new pages that took."""
+        need = pages_for_tokens(n_tokens, self.page_size)
+        new = max(0, need - self.owned.get(slot, 0))
+        self.owned[slot] = max(need, self.owned.get(slot, 0))
+        return new
+
+    def free_slot(self, slot: int) -> int:
+        """Drop the slot; returns how many pages that released."""
+        n = self.owned.pop(slot, 0)
+        self.reserved.pop(slot, None)
+        return n
+
+    @property
+    def pages_in_use(self) -> int:
+        """Total pages across live slots."""
+        return sum(self.owned.values())

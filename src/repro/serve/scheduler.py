@@ -1,9 +1,11 @@
 """Continuous-batching request scheduler over a pooled slot-based KV cache.
 
-The engine owns the actual cache arrays — one pooled buffer with `n_slots`
-batch rows, each row `cache_cap` tokens deep. This module is the pure-python
-control plane: request lifecycle, slot assignment/reclaim, and per-iteration
-step plans. Each plan admits waiting requests into free slots (grouped into
+The engine owns the actual cache arrays — by default a block-paged page
+pool (serve/paged.py), or the dense pooled buffer with `n_slots` batch rows
+each `cache_cap` tokens deep on the dense_cache arm. This module is the
+pure-python control plane: request lifecycle, slot assignment/reclaim,
+page-budget admission, chunked-prefill planning, and per-iteration step
+plans. Each plan admits waiting requests into free slots (grouped into
 task-pure prefill batches — prompts share one task's adapters) and decodes
 *all* active slots in one mixed multi-task batch (per-slot adapters via
 repro.core.adapters.lora_apply's batched path). This replaces the seed's
@@ -25,6 +27,8 @@ from collections import deque
 from enum import Enum
 from typing import Iterable
 
+from repro.serve.paged import pages_for_tokens
+
 
 class RequestState(Enum):
     """Request lifecycle: WAITING (queued) -> ACTIVE (slot) -> FINISHED."""
@@ -45,6 +49,12 @@ class Request:
     state: RequestState = RequestState.WAITING
     slot: int | None = None
     generated: list[int] = dataclasses.field(default_factory=list)
+    # chunked prefill (paged engine): prompts longer than the scheduler's
+    # prefill_chunk enter the cache piecewise; prefill_done counts prompt
+    # tokens already cached, and the request joins decode batches only
+    # once the whole prompt is in
+    chunked: bool = False
+    prefill_done: int = 0
     # engine-stamped wall times (perf_counter seconds)
     t_submit: float = 0.0
     t_first_token: float | None = None
@@ -54,6 +64,19 @@ class Request:
     def prompt_len(self) -> int:
         """Number of prompt tokens (prefill batch grouping key)."""
         return len(self.prompt)
+
+    @property
+    def prefilling(self) -> bool:
+        """True while a chunked request still has prompt tokens to cache
+        (it holds a slot but must not join decode batches yet)."""
+        return self.chunked and self.prefill_done < self.prompt_len
+
+    @property
+    def lifetime_tokens(self) -> int:
+        """Cache positions the request writes over its whole life: the
+        prompt plus one per decode iteration (the final generated token is
+        emitted but never written) — what paged admission reserves for."""
+        return self.prompt_len + self.max_new_tokens - 1
 
     @property
     def done(self) -> bool:
@@ -75,11 +98,30 @@ class PrefillGroup:
 
 
 @dataclasses.dataclass
+class ChunkPrefill:
+    """One prefill_chunk-sized piece of one long prompt: cache prompt
+    positions [start, start + length) for the request's slot this step.
+    is_last marks the piece that completes the prompt — its step emits the
+    request's first token, after which the slot joins decode batches."""
+    request: Request
+    slot: int
+    start: int
+    length: int
+    is_last: bool
+
+
+@dataclasses.dataclass
 class StepPlan:
     """One engine iteration's work order: prefill admissions grouped into
-    batches, the active decode slots, and the fused decode horizon K."""
+    batches, chunked-prefill pieces, the active decode slots, and the
+    fused decode horizon K."""
     prefill_groups: list[PrefillGroup]
     decode_slots: list[int]       # active slots after this step's admissions
+    # one piece per slot mid-way through a chunked (long-prompt) prefill —
+    # interleaved with the decode block so a long prompt never stalls
+    # in-flight decodes for more than one chunk's compute
+    chunk_prefills: list[ChunkPrefill] = dataclasses.field(
+        default_factory=list)
     # tokens to decode in one fused device block this step. 0 = no decode
     # work (e.g. every active request finishes at prefill). Tracks the
     # soonest-finishing slot (within the power-of-two rounding) so a
@@ -90,7 +132,8 @@ class StepPlan:
     @property
     def empty(self) -> bool:
         """True when the step has neither admissions nor decode work."""
-        return not self.prefill_groups and not self.decode_slots
+        return (not self.prefill_groups and not self.decode_slots
+                and not self.chunk_prefills)
 
 
 class SlotPool:
@@ -152,12 +195,26 @@ class Scheduler:
     def __init__(self, pool: SlotPool, *, max_prefill_requests: int = 8,
                  max_decode_horizon: int = 8,
                  interference_horizon: int | None = None,
-                 max_prefill_group: int | None = None):
+                 max_prefill_group: int | None = None,
+                 page_pool=None, prefill_chunk: int | None = None):
         if max_decode_horizon < 1:
             raise ValueError("max_decode_horizon must be >= 1")
         if max_prefill_group is not None and max_prefill_group < 1:
             raise ValueError("max_prefill_group must be >= 1")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         self.pool = pool
+        # paged engine: a serve.paged.PagePool. Admission then requires a
+        # lifetime page reservation to fit beside every outstanding one
+        # (free-page budget), not just a free slot — and guarantees decode
+        # never deadlocks needing a page mid-flight.
+        self.page_pool = page_pool
+        # prompts longer than prefill_chunk are cached piecewise (one chunk
+        # per engine step, interleaved with decode blocks). None = always
+        # whole-prompt prefill. Requires page_pool (chunks land in pages).
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk is not None and page_pool is None:
+            raise ValueError("chunked prefill needs a page_pool")
         self.max_prefill_requests = max_prefill_requests
         self.max_prefill_group = max_prefill_group
         self.max_decode_horizon = max_decode_horizon
@@ -170,9 +227,12 @@ class Scheduler:
     # ------------------------------------------------------------------
     def submit(self, task_id: str, prompt: Iterable[int],
                max_new_tokens: int) -> Request:
-        """Validate + enqueue a request (FIFO); rejects empty prompts,
-        non-positive budgets, and requests that cannot fit a slot's KV
-        capacity even when alone."""
+        """Validate + enqueue a request (FIFO). Rejects — with errors that
+        name the offending budget — empty prompts, non-positive token
+        budgets, requests whose prompt_len + max_new_tokens exceed a
+        slot's KV capacity (admitting one would silently overflow its
+        cache row mid-decode), and, under a paged pool, requests whose
+        lifetime page needs exceed the pool itself."""
         prompt = tuple(int(t) for t in prompt)
         total = len(prompt) + max_new_tokens
         if not prompt:
@@ -181,8 +241,19 @@ class Scheduler:
             raise ValueError("max_new_tokens must be >= 1")
         if total > self.pool.cache_cap:
             raise ValueError(
-                f"request needs {total} cache entries > slot capacity "
-                f"{self.pool.cache_cap}")
+                f"prompt_len ({len(prompt)}) + max_new_tokens "
+                f"({max_new_tokens}) = {total} exceeds the per-slot KV "
+                f"capacity cache_cap={self.pool.cache_cap}; the request "
+                "can never be served without overflowing its cache row")
+        if self.page_pool is not None:
+            need = pages_for_tokens(total - 1, self.page_pool.page_size)
+            if (need > self.page_pool.max_pages_per_slot
+                    or need > self.page_pool.capacity_pages):
+                raise ValueError(
+                    f"request needs {need} KV pages, more than the paged "
+                    f"pool can ever grant (max_pages_per_slot="
+                    f"{self.page_pool.max_pages_per_slot}, capacity="
+                    f"{self.page_pool.capacity_pages})")
         req = Request(req_id=next(self._ids), task_id=task_id,
                       prompt=prompt, max_new_tokens=max_new_tokens)
         self.waiting.append(req)
@@ -197,14 +268,44 @@ class Scheduler:
         """Admit FIFO-eligible waiting requests into free slots, grouped by
         (task_id, prompt_len) so each group is one prefill batch; then list
         every active slot for the mixed decode batch and plan the fused
-        decode horizon for this step."""
+        decode horizon for this step.
+
+        Paged admission: each candidate must additionally fit a lifetime
+        page reservation into the free-page budget; the FIFO head blocks
+        admission when it does not (no overtaking — the same ordering the
+        slot pool enforces). Long prompts (> prefill_chunk) are admitted
+        like any other request but enter the cache via chunk_prefills —
+        one chunk per step, decode blocks in between — instead of a
+        prefill group.
+
+        NB plan_step is the scheduler's transactional commit point, not a
+        read-only query: like slot assignment and page reservations (so
+        since PR 1), chunk progress advances HERE on the contract that the
+        engine executes every plan it is handed. Callers must not call
+        plan_step speculatively."""
         free = deque(self.pool.free_slots())
         admitted: list[Request] = []
+        chunked_admits: list[Request] = []
         while (self.waiting and free
-               and len(admitted) < self.max_prefill_requests):
-            req = self.waiting.popleft()
-            self.pool.assign(free.popleft(), req)
-            admitted.append(req)
+               and len(admitted) + len(chunked_admits)
+               < self.max_prefill_requests):
+            req = self.waiting[0]
+            if self.page_pool is not None:
+                need = pages_for_tokens(req.lifetime_tokens,
+                                        self.page_pool.page_size)
+                if not self.page_pool.can_reserve(need):
+                    break               # head-of-line: keep FIFO order
+            self.waiting.popleft()
+            slot = free.popleft()
+            self.pool.assign(slot, req)
+            if self.page_pool is not None:
+                self.page_pool.reserve(slot, need)
+            if (self.prefill_chunk is not None
+                    and req.prompt_len > self.prefill_chunk):
+                req.chunked = True
+                chunked_admits.append(req)
+            else:
+                admitted.append(req)
 
         # max_prefill_group splits an oversized (task, len) batch into
         # bounded chunks: prefill rows are independent, so the split is
@@ -227,8 +328,30 @@ class Scheduler:
             groups[key].requests.append(req)
             groups[key].slots.append(req.slot)
 
+        # one chunk per mid-prefill slot per step (chunked_admits included:
+        # their first chunk runs the same step they are admitted). Progress
+        # advances at plan time — the engine always executes the plan.
+        chunks: list[ChunkPrefill] = []
+        for slot in self.pool.active_slots():
+            req = self.pool.requests[slot]
+            if not req.prefilling:
+                continue
+            length = min(self.prefill_chunk,
+                         req.prompt_len - req.prefill_done)
+            chunks.append(ChunkPrefill(
+                request=req, slot=slot, start=req.prefill_done,
+                length=length,
+                is_last=req.prefill_done + length >= req.prompt_len))
+            req.prefill_done += length
+
+        # slots still mid-prefill after this step's chunk hold no decode
+        # state yet — they join decode batches the step their last chunk
+        # (which emits their first token) lands
+        decode_slots = [s for s in self.pool.active_slots()
+                        if not self.pool.requests[s].prefilling]
         return StepPlan(prefill_groups=list(groups.values()),
-                        decode_slots=self.pool.active_slots(),
+                        decode_slots=decode_slots,
+                        chunk_prefills=chunks,
                         decode_horizon=self._plan_horizon())
 
     def _plan_horizon(self) -> int:
@@ -242,8 +365,12 @@ class Scheduler:
         block by the engine's device-side counters, not counted here.
         """
         owed = []
+        prefilling = False
         for slot in self.pool.active_slots():
             req = self.pool.requests[slot]
+            if req.prefilling:           # chunked prompt still entering the
+                prefilling = True        # cache: no decode state yet, and
+                continue                 # its chunk cadence clamps K below
             pending = req.max_new_tokens - len(req.generated)
             if not req.generated:        # admitted this step: prefill emits 1
                 pending -= 1
@@ -252,7 +379,11 @@ class Scheduler:
         if not owed:
             return 0
         k = min(min(owed), self.max_decode_horizon)
-        if self.waiting:
+        if self.waiting or prefilling:
+            # queued requests wait on a slot/pages; mid-prefill prompts wait
+            # on their next chunk — either way a long block would stall them
+            # by up to K token-times (chunked prefill's whole point is that
+            # decode and prompt chunks interleave at a fine grain)
             k = min(k, self.interference_horizon)
         # round UP to a power of two (then re-cap): the engine compiles
         # O(log K) block variants, and a short tail rides one bigger block

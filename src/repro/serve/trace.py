@@ -47,7 +47,7 @@ from repro.train.steps import TaskBundle, build_bundle
 COMPARED_COUNTERS = ("requests_completed", "tokens_generated",
                      "decode_blocks", "decode_steps", "decode_slot_steps",
                      "adapter_slot_writes", "adapter_full_restacks",
-                     "prefill_batches", "expansions")
+                     "prefill_batches", "prefill_chunks", "expansions")
 
 DEFAULT_GEN = {"k": 5, "d": 600, "width": 32, "seed": 0}
 
@@ -102,6 +102,9 @@ def run_trace(trace: dict, *, mesh=None, registry_root: str | None = None
         "tokens": [list(r.generated) for r in reqs],
         "cache": engine.cache.stats(),
         "counters": {k: snap.get(k, 0) for k in COMPARED_COUNTERS},
+        # paged engines also report allocator stats (None on dense arms):
+        # the paged mesh oracle holds these equal across layouts too
+        "pages": engine.pages.stats() if engine.pages is not None else None,
     }
 
 

@@ -71,6 +71,11 @@ def activation_rules(mesh: Mesh) -> dict[str, P]:
         # and replicating them avoids a reshard boundary between the
         # host-built scatter indices and the fused decode block
         "serve_slot_vec": P(),
+        # per-slot page tables ((n_slots, max_pages_per_slot) int32) stay
+        # REPLICATED like the slot counters: they are bytes-sized, consulted
+        # by every page gather/scatter, and replicating them keeps the
+        # paged pool's dynamic indices shard-local metadata
+        "serve_page_table": P(),
     }
 
 

@@ -141,7 +141,13 @@ def cache_pspecs(cache_specs: PyTree, dp: tuple[str, ...] = ("data",)
         if len(shape) >= 2:
             axes[1] = dp
         name = path.split("/")[-1]
-        if name in ("k", "v", "ek", "ev") and len(shape) >= 4:
+        if name in ("k_pages", "v_pages") and len(shape) >= 3:
+            # paged KV pool (L, n_pages, Hkv, page_size, hd): pages over
+            # data (axes[1] = dp above), kv heads over model. Unlike the
+            # dense pool there is no sequence dim to shard — a page IS the
+            # sequence granule, and page gathers/scatters stay whole-page.
+            axes[2] = "model"
+        elif name in ("k", "v", "ek", "ev") and len(shape) >= 4:
             axes[3] = "model"            # head-major cache: S at dim 3
         elif name in ("ckv", "kpe") and len(shape) >= 3:
             axes[2] = "model"

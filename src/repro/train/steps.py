@@ -389,6 +389,79 @@ def make_assembled_multi_decode_step(bundle: TaskBundle, horizon: int,
     return step
 
 
+def make_assembled_multi_decode_step_paged(bundle: TaskBundle, horizon: int,
+                                           num_pages: int, unroll: int = 1):
+    """Paged twin of make_assembled_multi_decode_step: the fused K-token
+    greedy block over the block-paged KV pool instead of the dense slot
+    cache. Carries (pool, tokens, pos, remaining) exactly like the dense
+    block carries (cache, ...); the page table rides as a non-carry input —
+    it is CONSTANT for the duration of a block (the engine allocates every
+    page the block can touch before dispatching, so the device never
+    mutates page metadata).
+
+    num_pages (static) is the live-page horizon: attention inside every
+    iteration reads only page_table[:, :num_pages] (see lm.decode_step_paged)
+    — the engine compiles one block per (horizon, num_pages) pair it plans,
+    both power-of-two rounded, so decode reads scale with the pages rows
+    actually occupy while staying O(log) in compiled variants.
+
+    Returns step(params, pool, page_table, tokens, pos, remaining) ->
+    (tok_block (horizon, B) int32, pool, tokens, pos, remaining) with the
+    same masking/emission contract as the dense block (-1 = inactive row).
+    """
+    if bundle.arch.kind != "lm":
+        raise ValueError("multi-step decode serves decoder-only LMs")
+    if horizon < 1:
+        raise ValueError(f"horizon must be >= 1, got {horizon}")
+    cfg = bundle.model_cfg
+
+    def step(params, pool, page_table, tokens, pos, remaining):
+        def body(carry, _):
+            pool, tokens, pos, remaining = carry
+            active = remaining > 0
+            logits, pool = lm.decode_step_paged(
+                cfg, params, pool, page_table, tokens, pos, active=active,
+                num_active_pages=num_pages, use_pallas=bundle.use_pallas,
+                interpret=bundle.interpret)
+            nxt = jnp.argmax(logits, -1).astype(tokens.dtype)
+            tokens = jnp.where(active, nxt, tokens)
+            pos = jnp.where(active, pos + 1, pos)
+            remaining = jnp.where(active, remaining - 1, remaining)
+            emit = jnp.where(active, nxt, -1)
+            tokens, pos, remaining, emit = (
+                shard(tokens, "serve_slot_vec"), shard(pos, "serve_slot_vec"),
+                shard(remaining, "serve_slot_vec"),
+                shard(emit, "serve_slot_vec"))
+            return (pool, tokens, pos, remaining), emit
+
+        carry, tok_block = jax.lax.scan(
+            body, (pool, tokens, pos, remaining), None, length=horizon,
+            unroll=min(unroll, horizon))
+        pool, tokens, pos, remaining = carry
+        return tok_block, pool, tokens, pos, remaining
+
+    return step
+
+
+def make_assembled_chunk_prefill_step(bundle: TaskBundle, num_pages: int):
+    """Chunked-prefill step over pre-assembled effective params: one
+    prompt piece of one slot lands in the paged pool (lm.prefill_chunk).
+    num_pages (static) = pages covering the prefix processed so far
+    INCLUDING this chunk; the engine compiles one step per num_pages (and
+    jax retraces per chunk length), both bounded by prompt_len /
+    prefill_chunk. Returns step(params, pool, page_table, tokens, start)
+    -> (last-token logits (1, vocab), pool)."""
+    cfg = bundle.model_cfg
+
+    def step(params, pool, page_table, tokens, start):
+        return lm.prefill_chunk(cfg, params, pool, page_table, tokens,
+                                start, num_pages=num_pages,
+                                use_pallas=bundle.use_pallas,
+                                interpret=bundle.interpret)
+
+    return step
+
+
 # ---------------------------------------------------------------------------
 # Input specs (assignment: ShapeDtypeStruct stand-ins, no allocation).
 # ---------------------------------------------------------------------------

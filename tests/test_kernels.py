@@ -163,6 +163,95 @@ def test_bwd_randomized_shapes_match_ref(seed):
                                rtol=2e-4, atol=2e-5)
 
 
+# ---------------------------------------------------------------------------
+# Paged decode attention: Pallas kernel (interpret mode) vs the jnp oracle,
+# randomized (batch, kv heads, group, head_dim, page_size, pages) through the
+# padding wrapper — non-128-multiple head dims and non-8-multiple groups
+# exercise the pad-then-slice seam. A linear-page-table case additionally
+# pins the oracle itself against the dense masked-scan decode_attention.
+# ---------------------------------------------------------------------------
+
+def _mk_paged(seed: int):
+    rng = np.random.default_rng(seed)
+    b = rng.integers(1, 6)
+    hkv = rng.integers(1, 4)
+    g = rng.integers(1, 5)
+    dh = int(rng.integers(4, 40))
+    ps = int(rng.integers(2, 17))
+    n_pp = int(rng.integers(1, 6))              # live-page horizon P
+    n_pages = int(rng.integers(n_pp + 1, n_pp + 8))
+    q = jnp.asarray(rng.standard_normal((b, hkv, g, dh)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((n_pages, hkv, ps, dh)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, hkv, ps, dh)),
+                     jnp.float32)
+    pt = jnp.asarray(rng.integers(0, n_pages, (b, n_pp)), jnp.int32)
+    cl = jnp.asarray(rng.integers(1, n_pp * ps + 1, (b,)), jnp.int32)
+    return q, kp, vp, pt, cl
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_paged_attention_pallas_matches_ref(seed):
+    from repro.kernels.paged_attention import paged_decode_attention
+    q, kp, vp, pt, cl = _mk_paged(seed)
+    r = paged_decode_attention(q, kp, vp, pt, cl, use_pallas=False)
+    p = paged_decode_attention(q, kp, vp, pt, cl, use_pallas=True,
+                               interpret=True)
+    assert p.shape == q.shape and p.dtype == q.dtype
+    np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_paged_attention_zero_cache_len_rows_are_zero_both_paths():
+    """Rows with no valid positions (empty slots riding the batch) must
+    come out EXACTLY zero on both the jnp oracle and the Pallas kernel —
+    not NaN, and not a uniform softmax over masked garbage (the two paths
+    must agree even on degenerate rows)."""
+    from repro.kernels.paged_attention import paged_decode_attention
+    q, kp, vp, pt, _ = _mk_paged(7)
+    cl = jnp.zeros((q.shape[0],), jnp.int32)
+    for kwargs in ({"use_pallas": False},
+                   {"use_pallas": True, "interpret": True}):
+        out = paged_decode_attention(q, kp, vp, pt, cl, **kwargs)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=4, deadline=None)
+def test_paged_ref_matches_dense_decode_attention(seed):
+    """Oracle-vs-oracle: with an identity page table the paged gather path
+    must reproduce the dense engine's full-cache masked scan
+    (layers.attention.decode_attention) — the equivalence the paged
+    engine's token-identity guarantee stands on."""
+    from repro.kernels.paged_attention import paged_decode_attention
+    from repro.layers.attention import decode_attention
+    rng = np.random.default_rng(seed)
+    b, hkv, g, dh, ps, n_pp = 3, 2, 2, 16, 8, 4
+    smax = ps * n_pp
+    q = jnp.asarray(rng.standard_normal((b, 1, hkv * g, dh)), jnp.float32)
+    k_cache = jnp.asarray(rng.standard_normal((b, hkv, smax, dh)),
+                          jnp.float32)
+    v_cache = jnp.asarray(rng.standard_normal((b, hkv, smax, dh)),
+                          jnp.float32)
+    cl = jnp.asarray(rng.integers(1, smax + 1, (b,)), jnp.int32)
+    dense = decode_attention(q, k_cache, v_cache, cl)
+    # paged layout: page j of row b = k_cache[b, :, j*ps:(j+1)*ps]; rows
+    # get disjoint physical pages so one pool serves all of them
+    kp = k_cache.reshape(b, hkv, n_pp, ps, dh).transpose(0, 2, 1, 3, 4)
+    kp = kp.reshape(b * n_pp, hkv, ps, dh)
+    vp = v_cache.reshape(b, hkv, n_pp, ps, dh).transpose(0, 2, 1, 3, 4)
+    vp = vp.reshape(b * n_pp, hkv, ps, dh)
+    kp = jnp.concatenate([jnp.zeros_like(kp[:1]), kp])     # null page 0
+    vp = jnp.concatenate([jnp.zeros_like(vp[:1]), vp])
+    pt = jnp.arange(1, b * n_pp + 1, dtype=jnp.int32).reshape(b, n_pp)
+    qg = q[:, 0].reshape(b, hkv, g, dh)
+    paged = paged_decode_attention(qg, kp, vp, pt, cl, use_pallas=False)
+    np.testing.assert_allclose(
+        np.asarray(paged.reshape(b, 1, hkv * g, dh)), np.asarray(dense),
+        rtol=2e-6, atol=2e-7)
+
+
 def test_kernel_expand_fn_dispatch():
     """depth!=3 / non-sine configs fall back to the generic jnp path."""
     from repro.kernels.ops import kernel_expand_fn

@@ -1,0 +1,153 @@
+"""Property-based tests for the paged-KV free-list allocator.
+
+Random (reserve / ensure / free) op sequences — derived from an integer
+seed so they run identically under real `hypothesis` and the deterministic
+shim in conftest.py — replay through PagePool and the executable spec
+(serve.paged.RefPagePool) side by side. After every op the pool's
+structural invariants must hold (page conservation, single ownership, no
+null-page handout, no double free) and the two models must agree on
+occupancy, per-slot page counts, and admission decisions — the same
+reference-model pattern tests/test_serve_cache.py uses for the LRU cache.
+"""
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.paged import (NULL_PAGE, PagePool, RefPagePool,
+                               pages_for_tokens)
+
+
+def test_pages_for_tokens():
+    assert pages_for_tokens(1, 16) == 1
+    assert pages_for_tokens(16, 16) == 1
+    assert pages_for_tokens(17, 16) == 2
+    assert pages_for_tokens(64, 16) == 4
+
+
+def test_fresh_pool_shape_and_null_page():
+    pool = PagePool(n_pages=9, page_size=16, n_slots=4, max_pages_per_slot=2)
+    assert pool.capacity_pages == 8 and pool.free_pages == 8
+    assert pool.pages_in_use == 0
+    assert (pool.table == NULL_PAGE).all()
+    pool.check_invariants()
+
+
+def test_alloc_free_round_trip_and_lifo_reuse():
+    pool = PagePool(n_pages=9, page_size=4, n_slots=2, max_pages_per_slot=4)
+    pool.reserve(0, 3)
+    new = pool.ensure(0, 9)            # 3 pages cover 9 tokens of size 4
+    assert len(new) == 3 and NULL_PAGE not in new
+    assert pool.slot_pages(0) == new
+    assert pool.ensure(0, 9) == []     # idempotent: already covered
+    assert pool.pages_in_use == 3
+    freed = pool.free_slot(0)
+    assert sorted(freed) == sorted(new)
+    assert pool.pages_in_use == 0 and pool.free_pages == 8
+    # LIFO: a fresh reservation reuses the just-freed pages first
+    pool.reserve(1, 2)
+    again = pool.ensure(1, 5)
+    assert set(again) <= set(new)
+    pool.check_invariants()
+
+
+def test_reservation_bounds_admission_and_ensure():
+    pool = PagePool(n_pages=5, page_size=8, n_slots=4, max_pages_per_slot=4)
+    assert pool.can_reserve(4) and not pool.can_reserve(5)
+    pool.reserve(0, 3)
+    assert pool.can_reserve(1) and not pool.can_reserve(2)
+    with pytest.raises(RuntimeError):
+        pool.reserve(0, 1)             # slot already holds a reservation
+    with pytest.raises(RuntimeError):
+        pool.ensure(0, 4 * 8)          # 4 pages > the 3 reserved
+    pool.reserve(1, 1)
+    assert not pool.can_reserve(1)     # budget exhausted by reservations
+    pool.free_slot(0)
+    assert pool.can_reserve(3)
+    pool.check_invariants()
+
+
+def test_peak_tracks_high_water_mark():
+    pool = PagePool(n_pages=9, page_size=4, n_slots=2, max_pages_per_slot=4)
+    pool.reserve(0, 4)
+    pool.ensure(0, 16)
+    assert pool.peak_pages_in_use == 4
+    pool.free_slot(0)
+    pool.reserve(1, 2)
+    pool.ensure(1, 8)
+    assert pool.peak_pages_in_use == 4     # peak does not decay
+    assert pool.pages_in_use == 2
+    st_ = pool.stats()
+    assert st_["allocations"] == 6 and st_["frees"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Randomized differential replay vs the executable spec.
+# ---------------------------------------------------------------------------
+
+N_PAGES, PAGE_SIZE, N_SLOTS, MAX_PPS = 17, 4, 4, 8
+
+
+def _ops_from_seed(seed: int, n_ops: int):
+    rng = random.Random(seed)
+    ops = []
+    for _ in range(n_ops):
+        kind = rng.choice(("admit", "admit", "grow", "grow", "finish"))
+        slot = rng.randrange(N_SLOTS)
+        tokens = rng.randint(1, MAX_PPS * PAGE_SIZE)
+        ops.append((kind, slot, tokens))
+    return ops
+
+
+def _replay(seed: int):
+    pool = PagePool(N_PAGES, PAGE_SIZE, N_SLOTS, MAX_PPS)
+    spec = RefPagePool(N_PAGES, PAGE_SIZE)
+    live: dict[int, int] = {}          # slot -> reserved lifetime tokens
+    for kind, slot, tokens in _ops_from_seed(seed, n_ops=80):
+        if kind == "admit" and slot not in live:
+            need = pages_for_tokens(tokens, PAGE_SIZE)
+            ok = pool.can_reserve(need)
+            assert ok == spec.can_reserve(need, MAX_PPS)
+            if ok:
+                pool.reserve(slot, need)
+                spec.reserve(slot, need)
+                live[slot] = tokens
+        elif kind == "grow" and slot in live:
+            grow_to = min(tokens, live[slot])      # within the reservation
+            new = pool.ensure(slot, grow_to)
+            assert len(new) == spec.ensure(slot, grow_to)
+            assert NULL_PAGE not in new
+        elif kind == "finish" and slot in live:
+            freed = pool.free_slot(slot)
+            assert len(freed) == spec.free_slot(slot)
+            del live[slot]
+        pool.check_invariants()
+        assert pool.pages_in_use == spec.pages_in_use
+        for s in range(N_SLOTS):
+            assert len(pool.slot_pages(s)) == spec.owned.get(s, 0)
+    return pool
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_pool_matches_reference_model(seed):
+    _replay(seed)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_pool_conservation_and_distinct_ownership(seed):
+    """Fragmentation/conservation invariants under churn: after any op
+    sequence, owned + free == capacity, every owned page has exactly one
+    owner, and draining every slot restores the full free list."""
+    pool = _replay(seed)
+    owned = [p for s in range(N_SLOTS) for p in pool.slot_pages(s)]
+    assert len(owned) == len(set(owned))
+    assert len(owned) + pool.free_pages == pool.capacity_pages
+    for s in range(N_SLOTS):
+        pool.free_slot(s)
+    assert pool.pages_in_use == 0
+    assert pool.free_pages == pool.capacity_pages
+    assert sorted(set(range(1, N_PAGES))) == sorted(pool._free)
+    pool.check_invariants()

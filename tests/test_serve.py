@@ -204,6 +204,30 @@ def test_scheduler_rejects_oversized_and_empty():
         sched.submit("t", [1, 2], 0)             # asks for no tokens
 
 
+def test_submit_capacity_validation_boundary_and_message():
+    """Regression: prompt_len + max_new_tokens must be validated against
+    cache_cap at submit — exactly at the boundary, with an error that
+    names both budgets (a silently admitted oversized request would
+    overflow its cache row mid-decode)."""
+    sched = Scheduler(SlotPool(n_slots=2, cache_cap=16))
+    sched.submit("t", [1] * 8, 8)                # total 16 == cap: fine
+    with pytest.raises(ValueError) as ei:
+        sched.submit("t", [1] * 9, 8)            # total 17 > cap 16
+    msg = str(ei.value)
+    assert "prompt_len" in msg and "max_new_tokens" in msg
+    assert "cache_cap=16" in msg
+    # paged pool: a request whose lifetime pages can never be granted is
+    # rejected up front too (here: pool smaller than the slot cap allows)
+    from repro.serve import PagePool
+    pool = SlotPool(n_slots=2, cache_cap=64)
+    pages = PagePool(n_pages=3, page_size=8, n_slots=2,
+                     max_pages_per_slot=8)
+    psched = Scheduler(pool, page_pool=pages)
+    psched.submit("t", [1] * 8, 8)               # 2 pages: fits
+    with pytest.raises(ValueError, match="KV pages"):
+        psched.submit("t", [1] * 16, 16)         # 4 pages > capacity 2
+
+
 def test_scheduler_admission_bound():
     pool = SlotPool(n_slots=8, cache_cap=32)
     sched = Scheduler(pool, max_prefill_requests=2)
@@ -603,6 +627,230 @@ def test_mesh_engine_quantized_cache_matches_single_device_deferred():
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache: the default engine serves from a block-paged pool (per-slot
+# page tables + free-list allocation) and must be indistinguishable — tokens
+# AND scheduling counters — from the dense pooled-cache arm, while holding
+# strictly fewer KV bytes at its high-water mark on mixed-size traffic.
+# Chunked prefill: long prompts enter the cache piecewise, interleaved with
+# decode blocks, without perturbing any token stream.
+# ---------------------------------------------------------------------------
+
+def test_paged_vs_dense_engine_differential():
+    """The single-device half of the paged<->dense oracle: one trace, two
+    KV memory layouts, equal tokens / counters / expansion-cache stats;
+    only the paged arm reports allocator stats."""
+    paged = run_trace(DIFF_TRACE)
+    dense = run_trace(dict(
+        DIFF_TRACE, engine={**DIFF_TRACE["engine"], "dense_cache": True}))
+    assert paged["tokens"] == dense["tokens"]
+    assert paged["counters"] == dense["counters"]
+    assert paged["cache"] == dense["cache"]
+    assert dense["pages"] is None
+    st = paged["pages"]
+    assert st["peak_pages_in_use"] > 0
+    assert st["pages_in_use"] == 0 and st["reserved_pages"] == 0  # drained
+    assert st["allocations"] == st["frees"]
+
+
+def test_paged_engine_memory_tracks_tokens_not_capacity(served, tmp_path):
+    """On traffic far below worst case, pages in use stay far below the
+    dense pool's committed capacity (the paged pool's raison d'etre), and
+    free-on-finish returns every page."""
+    bundle, base, gen_ws = served
+    reg = AdapterRegistry(str(tmp_path))
+    reg.publish("t", perturbed_state(bundle, 0), GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=4, cache_cap=64,
+                      page_size=8, decode_horizon=4)
+    eng.submit("t", [1, 2, 3], 4)                # lifetime 6 tokens: 1 page
+    eng.submit("t", [4, 5, 6], 10)               # lifetime 12 tokens: 2 pages
+    eng.run_until_idle()
+    st = eng.pages.stats()
+    # the short request frees its page before the long one grows to its
+    # second, so the high-water mark is 2 pages — of a 32-page pool (the
+    # dense layout would have committed 4 slots x 64 positions throughout)
+    assert st["peak_pages_in_use"] == 2
+    assert eng.peak_kv_bytes() * 8 < eng.kv_pool_bytes()
+    assert st["pages_in_use"] == 0 and st["frees"] == st["allocations"] == 3
+    snap = eng.metrics.snapshot()
+    assert snap["peak_pages_in_use"] == 2 and snap["pages_in_use"] == 0
+    assert snap["adapter_full_restacks"] == 0
+
+
+def test_paged_admission_bounded_by_free_pages(served, tmp_path):
+    """With a deliberately small pool, admission is gated by the free-page
+    budget (not slot count): the FIFO head waits until a finished request
+    frees its pages, and everything still completes token-identically."""
+    bundle, base, gen_ws = served
+    st0 = perturbed_state(bundle, 0)
+    reg = AdapterRegistry(str(tmp_path))
+    reg.publish("t", st0, GEN)
+    # 4 slots but only 4 allocatable pages of 8 => two 2-page requests max
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=4, cache_cap=16,
+                      page_size=8, n_pages=5, decode_horizon=4)
+    traffic = [("t", [1, 2, 3, 4, 5], 6)] * 3    # 2 pages each
+    reqs = [eng.submit(*t) for t in traffic]
+    eng.step()
+    # only two fit the page budget despite 4 free slots
+    assert len([r for r in reqs if r.slot is not None]) == 2
+    eng.run_until_idle()
+    want = sequential_reference(bundle, base, gen_ws, {"t": st0}, traffic,
+                                cache_cap=16)
+    assert [r.generated for r in reqs] == want
+
+
+def test_paged_prefill_prompt_in_partial_last_page(served, tmp_path):
+    """cache_cap need not be a page multiple: a prompt whose last page
+    sticks out past the prefill cache depth must scatter (zero-filled
+    overhang) and serve token-identically, not crash the jitted scatter."""
+    bundle, base, gen_ws = served
+    st0 = perturbed_state(bundle, 0)
+    reg = AdapterRegistry(str(tmp_path))
+    reg.publish("t", st0, GEN)
+    # cache_cap 24 with 16-token pages: a 20-token prompt needs 2 pages
+    # (32 positions) > the 24-deep prefill cache
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=2, cache_cap=24,
+                      page_size=16, decode_horizon=4)
+    traffic = [("t", list(range(2, 22)), 4)]
+    reqs = [eng.submit(*t) for t in traffic]
+    eng.run_until_idle()
+    want = sequential_reference(bundle, base, gen_ws, {"t": st0}, traffic,
+                                cache_cap=24)
+    assert [r.generated for r in reqs] == want
+
+
+def test_chunked_prefill_pins_adapter_version_across_hot_swap(served,
+                                                              tmp_path):
+    """A hot-swap landing while a prompt is mid-chunking must NOT split the
+    request across bundle versions: the expansion is pinned at the first
+    chunk, so the whole request serves on the weights it started with —
+    the same atomicity whole-prompt prefill gets at admission."""
+    bundle, base, gen_ws = served
+    st_old = perturbed_state(bundle, 0)
+    st_new = jax.tree.map(lambda x: x * 25.0 if x.ndim == 2 else x,
+                          perturbed_state(bundle, 7, scale=3.0))
+    reg = AdapterRegistry(str(tmp_path))
+    reg.publish("t", st_old, GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=2, cache_cap=32,
+                      page_size=8, prefill_chunk=8, decode_horizon=4)
+    prompt = list(range(2, 22))                      # 20 tokens: 3 chunks
+    req = eng.submit("t", prompt, 4)
+    eng.step()                                       # chunk 1 on the OLD
+    assert req.prefilling
+    reg.publish("t", st_new, GEN)                    # hot swap mid-prompt
+    eng.run_until_idle()
+    want_old = sequential_reference(bundle, base, gen_ws, {"t": st_old},
+                                    [("t", prompt, 4)], cache_cap=32)[0]
+    want_new = sequential_reference(bundle, base, gen_ws, {"t": st_new},
+                                    [("t", prompt, 4)], cache_cap=32)[0]
+    assert req.generated == want_old
+    assert want_old != want_new                      # the swap would show
+    # NEW admissions pick up the swapped bundle as usual
+    req2 = eng.submit("t", prompt, 4)
+    eng.run_until_idle()
+    assert req2.generated == want_new
+
+
+def test_chunked_prefill_token_identical_and_interleaved(served, tmp_path):
+    """Chunked prefill must not change a single token: the same traffic
+    (with prompts longer than prefill_chunk) through chunked and
+    whole-prompt engines matches the sequential reference exactly, and the
+    chunked engine actually split the prompts."""
+    bundle, base, gen_ws = served
+    states = {"a": perturbed_state(bundle, 1), "b": perturbed_state(bundle, 2)}
+    reg = AdapterRegistry(str(tmp_path))
+    for t, st in states.items():
+        reg.publish(t, st, GEN)
+    rng = np.random.default_rng(3)
+    traffic = [("a", rng.integers(0, bundle.model_cfg.vocab, 21).tolist(), 5),
+               ("b", rng.integers(0, bundle.model_cfg.vocab, 6).tolist(), 7),
+               ("a", rng.integers(0, bundle.model_cfg.vocab, 17).tolist(), 4)]
+    want = sequential_reference(bundle, base, gen_ws, states, traffic,
+                                cache_cap=32)
+    outs = {}
+    for chunk in (None, 8):
+        eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=3,
+                          cache_cap=32, page_size=8, decode_horizon=8,
+                          prefill_chunk=chunk)
+        reqs = [eng.submit(*t) for t in traffic]
+        eng.run_until_idle()
+        outs[chunk] = [r.generated for r in reqs]
+        snap = eng.metrics.snapshot()
+        if chunk is None:
+            assert snap["prefill_chunks"] == 0
+        else:
+            # 21 -> 8+8+5 and 17 -> 8+8+1; the 6-token prompt stays whole
+            assert snap["prefill_chunks"] == 6
+            assert snap["prefill_batches"] == 1
+    assert outs[8] == outs[None] == want
+
+
+def test_scheduler_chunked_prefill_interleaves_without_starvation():
+    """Pure-scheduler fairness: while a long prompt is mid-chunking, queued
+    short requests are admitted, prefilled, and decoded — chunked prefill
+    never parks them behind the long prompt — and decode horizons stay
+    clamped to the interference knob while chunks remain."""
+    from repro.serve import PagePool
+    pool = SlotPool(n_slots=2, cache_cap=128)
+    pages = PagePool(n_pages=33, page_size=8, n_slots=2,
+                     max_pages_per_slot=16)
+    sched = Scheduler(pool, page_pool=pages, prefill_chunk=16,
+                      max_decode_horizon=8, interference_horizon=2)
+    long = sched.submit("a", [1] * 80, 8)
+    short = sched.submit("b", [2] * 8, 6)
+    plan = sched.plan_step()
+    # same step: long takes a slot and starts chunking, short prefills whole
+    assert [c.request for c in plan.chunk_prefills] == [long]
+    assert plan.chunk_prefills[0].length == 16
+    assert [g.requests for g in plan.prefill_groups] == [[short]]
+    assert plan.decode_slots == [short.slot]
+    assert long.prefilling and not short.prefilling
+    short.generated.append(0)                   # engine: prefill emits 1
+    # short keeps decoding every step while the long prompt chunks along
+    seen_chunks = 1
+    while long.prefilling:
+        plan = sched.plan_step()
+        assert [c.request for c in plan.chunk_prefills] == [long]
+        seen_chunks += 1
+        assert short.slot in plan.decode_slots  # never starved
+        if long.prefilling:                     # mid-chunking step
+            assert long.slot not in plan.decode_slots
+            if not short.done:
+                assert 1 <= plan.decode_horizon <= 2   # interference clamp
+        else:                                   # final chunk: joins decode
+            assert long.slot in plan.decode_slots
+        take = min(plan.decode_horizon,
+                   short.max_new_tokens - len(short.generated))
+        short.generated.extend([0] * max(0, take))
+    assert seen_chunks == 5                     # 80 tokens / 16 per chunk
+    assert short.done                           # drained while long chunked
+    # after the final chunk (engine emits the first token) both slots decode
+    long.generated.append(0)
+    plan = sched.plan_step()
+    assert not plan.chunk_prefills
+    assert sorted(plan.decode_slots) == sorted([long.slot, short.slot])
+
+
+def test_engine_chunked_prefill_short_requests_finish_first(served,
+                                                           tmp_path):
+    """End-to-end fairness: with chunked prefill on, short requests
+    submitted alongside a long prompt COMPLETE before the long prompt
+    produces its first token (without chunking they would stall behind
+    one monolithic prefill in the same admission wave)."""
+    bundle, base, gen_ws = served
+    reg = AdapterRegistry(str(tmp_path))
+    reg.publish("t", perturbed_state(bundle, 0), GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=3, cache_cap=64,
+                      page_size=8, prefill_chunk=8, decode_horizon=8,
+                      interference_horizon=2)
+    long = eng.submit("t", list(range(1, 41)), 4)      # 5 chunks of 8
+    shorts = [eng.submit("t", [7, 8, 9], 3) for _ in range(2)]
+    eng.run_until_idle()
+    assert long.done and all(s.done for s in shorts)
+    for s in shorts:
+        assert s.t_finish < long.t_first_token
+
+
+# ---------------------------------------------------------------------------
 # Sharded serving: the (2, 4) mesh engine must be indistinguishable from the
 # single-device engine on the same request trace — token-identical outputs
 # AND matching cache/engine counters (the tentpole's primary correctness
@@ -616,7 +864,13 @@ DIFF_TRACE = {
     "gen": {"k": 5, "d": 600, "width": 32, "seed": 0},
     "adapter_rank": 4,
     "tasks": {"t0": 0, "t1": 1, "t2": 2},
-    "engine": {"n_slots": 4, "cache_cap": 32, "decode_horizon": 8},
+    # the default engine serves from the paged KV pool; n_pages is PINNED
+    # (not left to the mesh-aware default) so single-device and mesh
+    # engines see one page capacity and their allocator stats compare
+    # exactly. page_size 8 puts page boundaries inside the requests'
+    # 4-13-token cache lives — decode blocks cross pages mid-flight.
+    "engine": {"n_slots": 4, "cache_cap": 32, "decode_horizon": 8,
+               "page_size": 8, "n_pages": 18},
     # 6 requests through 4 slots: slot reuse, mixed tasks, mid-horizon
     # finishes (owed 3/5/7 against K=8), repeat traffic for cache hits
     "requests": [["t0", [1, 2, 3, 4, 5, 6], 4], ["t1", [7, 8, 9, 10], 6],
@@ -643,21 +897,35 @@ def _run_trace_subprocess(trace, *, mesh=None, devices=8):
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
-@pytest.mark.slow              # ~35s: compiles the full engine twice (the
-#                                sharded copy in a fresh 8-device subprocess)
+@pytest.mark.slow              # ~45s: compiles the full engine three times
+#                                (the sharded PAGED copy in a fresh 8-device
+#                                subprocess, plus the in-process paged and
+#                                dense arms)
 def test_sharded_engine_differential_oracle():
-    """THE sharded-serving gate: identical request traces through a (2, 4)
-    mesh engine and the single-device engine produce token-identical
-    outputs, identical cache hit/miss/byte accounting, and identical
-    engine counters (blocks, steps, slot writes, zero full restacks)."""
+    """THE sharded-serving gate, now over the PAGED engine: identical
+    request traces through a (2, 4) mesh paged engine and the
+    single-device paged engine produce token-identical outputs, identical
+    cache hit/miss/byte accounting, identical engine counters (blocks,
+    steps, slot writes, zero full restacks), and identical page-allocator
+    stats — and both match the DENSE engine's tokens on the same trace,
+    closing the paged<->dense differential under the mesh as well."""
     single = run_trace(DIFF_TRACE)
+    dense = run_trace(dict(
+        DIFF_TRACE, engine={**DIFF_TRACE["engine"], "dense_cache": True}))
     sharded = _run_trace_subprocess(DIFF_TRACE, mesh="2x4")
     assert sharded["n_devices"] == 8
     assert sharded["tokens"] == single["tokens"]
     assert sharded["cache"] == single["cache"]
     assert sharded["counters"] == single["counters"]
+    assert sharded["pages"] == single["pages"]
     assert sharded["counters"]["adapter_full_restacks"] == 0
+    # paged <-> dense: same tokens and same scheduling counters whether the
+    # KV memory is paged or dense, sharded or not
+    assert dense["tokens"] == single["tokens"]
+    assert dense["counters"] == single["counters"]
+    assert dense["pages"] is None and single["pages"] is not None
     # the trace exercises what it claims to
+    assert single["pages"]["peak_pages_in_use"] > 0
     assert single["cache"]["hits"] >= 1 and single["cache"]["misses"] == 3
     assert single["counters"]["requests_completed"] == len(
         DIFF_TRACE["requests"])
@@ -702,9 +970,11 @@ def test_mesh_engine_in_process_matches_single_device(served, tmp_path):
 @needs_mesh
 def test_mesh_engine_buffer_placements(served, tmp_path):
     """The mesh engine's device-resident buffers land on their canonical
-    shardings: KV pool slots over data / sequence over model, stacked
-    adapters slot-over-data with param-spec trailing dims, expansion output
-    model-axis tiled, slot counters replicated."""
+    shardings — paged KV pool pages over data (kv heads would take the
+    model axis when divisible; the smoke model's 2 heads on a 4-way model
+    axis sanitize to replicated), dense KV pool slots over data / sequence
+    over model, stacked adapters slot-over-data with param-spec trailing
+    dims, expansion output model-axis tiled, slot counters replicated."""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.mesh import make_serve_mesh
     bundle, base, gen_ws = served
@@ -718,8 +988,11 @@ def test_mesh_engine_buffer_placements(served, tmp_path):
     reg.publish("t", perturbed_state(bundle, 0), GEN)
     eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=4, cache_cap=32,
                       decode_horizon=4, mesh=mesh)
-    # KV pool (L, slot, Hkv, S, hd): slots over data, sequence over model
-    assert placed(eng.kv["k"], None, ("data",), None, "model", None)
+    # paged KV pool (L, n_pages, Hkv, page_size, hd): pages over data (the
+    # mesh-aware default rounds n_pages up so the dim divides)
+    assert eng.pages is not None
+    assert eng.kv["k_pages"].shape[1] % 2 == 0
+    assert placed(eng.kv["k_pages"], None, ("data",), None, None, None)
     # wo is row-parallel -> its lora_a shards the in dim on model; the
     # stacked buffer adds the slot dim on data at axis 1
     assert placed(eng._stacked["layers/wo_lora_a"],
@@ -731,7 +1004,11 @@ def test_mesh_engine_buffer_placements(served, tmp_path):
     # the donated scatter/decode round trips
     eng.submit("t", [1, 2, 3], 6)
     eng.run_until_idle()
-    assert placed(eng.kv["k"], None, ("data",), None, "model", None)
+    assert placed(eng.kv["k_pages"], None, ("data",), None, None, None)
+    # the dense arm keeps its PR-3 layout: slots over data, seq over model
+    dense = ServeEngine(bundle, base, gen_ws, reg, n_slots=4, cache_cap=32,
+                        decode_horizon=4, mesh=mesh, dense_cache=True)
+    assert placed(dense.kv["k"], None, ("data",), None, "model", None)
 
 
 def test_mesh_engine_rejects_legacy_decode(served, tmp_path):
