@@ -27,6 +27,14 @@ Mixed-task traffic (>= 4 task adapters) through five serving arms:
                   differential arm: tokens must match exactly, paged peak
                   KV bytes must be strictly lower, and paged tok/s must be
                   within --paged-tolerance of dense (hard checks);
+  engine-traced - engine-cached with full observability armed (repro.obs
+                  Tracer + lifecycle EventLog): every span/instant/counter
+                  the engine emits, recorded in memory. Exists to HARD-GATE
+                  the tracing overhead: traced decode tok/s must stay
+                  within --trace-tolerance (default 3%) of engine-cached,
+                  so "tracing is cheap enough to leave on" is an enforced
+                  property, not a hope. --trace-out saves the Chrome trace
+                  JSON artifact (open in Perfetto; CI schema-checks it);
   engine-mesh   - (--mesh DxM only) the same fused path sharded over a
                   (data, model) device mesh (CPU-simulated host devices are
                   requested automatically before jax initializes). This arm
@@ -79,6 +87,7 @@ import jax
 
 from repro.configs.registry import get_arch
 from repro.core.generator import GeneratorConfig, init_generator
+from repro.obs import EventLog, Tracer
 from repro.serve import (AdapterRegistry, ExpansionCache, Metrics,
                          ServeEngine, sequential_reference)
 from repro.train.steps import build_bundle
@@ -112,13 +121,15 @@ def make_traffic(n_requests, tasks, vocab, prompt_lens, max_news, seed=0):
 
 def run_engine(bundle, base, gen_ws, registry, traffic, *, n_slots,
                cache_cap, byte_budget, horizon=8, legacy=False, mesh=None,
-               dense_cache=None):
+               dense_cache=None, tracer=None, event_log=None):
+    # the engine adopts a null-tracer cache into its own trace, so the
+    # traced arm's evictions land on the same timeline without plumbing
     cache = ExpansionCache(byte_budget)
     engine = ServeEngine(bundle, base, gen_ws, registry, n_slots=n_slots,
                          cache_cap=cache_cap, expansion_cache=cache,
                          decode_horizon=horizon, legacy_decode=legacy,
-                         dense_cache=dense_cache,
-                         metrics=Metrics(), mesh=mesh)
+                         dense_cache=dense_cache, tracer=tracer,
+                         event_log=event_log, metrics=Metrics(), mesh=mesh)
     # warmup: run the FULL traffic once untimed so every (prompt_len,
     # prefill-group-size) shape AND every decode-block length is compiled
     # before the measured window. Expansions stay cached (the cached arm
@@ -182,6 +193,14 @@ def main():
     ap.add_argument("--paged-tolerance", type=float, default=0.05,
                     help="paged decode tok/s may trail the dense arm by at "
                          "most this fraction (hard in-run check)")
+    ap.add_argument("--trace-tolerance", type=float, default=0.03,
+                    help="tracing-enabled decode tok/s may trail the "
+                         "tracing-off cached arm by at most this fraction "
+                         "(hard in-run check)")
+    ap.add_argument("--trace-out", default=None,
+                    help="save the traced arm's Chrome trace-event JSON "
+                         "here (open at ui.perfetto.dev; CI schema-checks "
+                         "it with scripts/check_trace.py)")
     ap.add_argument("--mesh", default=None,
                     help="add a sharded-engine arm on a DxM (data, model) "
                          "mesh of CPU-simulated devices, e.g. --mesh 2x4")
@@ -241,6 +260,18 @@ def main():
     dense_tok, dense_dt, dense_eng, dense_out = run_engine(
         bundle, base, gen_ws, registry, traffic, byte_budget=None,
         horizon=args.horizon, dense_cache=True, **ekw)
+    # traced arm: engine-cached's exact config with the tracer + event log
+    # armed. A separate registry view keeps bundle_load spans out of the
+    # other arms (the engine adopts null-tracer collaborators into its own
+    # trace, and the registry is otherwise shared).
+    tracer, event_log = Tracer(), EventLog()
+    trc_tok, trc_dt, trc_eng, trc_out = run_engine(
+        bundle, base, gen_ws, AdapterRegistry(root, tracer=tracer), traffic,
+        byte_budget=None, horizon=args.horizon, tracer=tracer,
+        event_log=event_log, **ekw)
+    bad = event_log.validate_all(require_terminal=True)
+    if bad:
+        raise SystemExit(f"traced arm lifecycle event log invalid: {bad}")
     mesh_row = None
     if args.mesh:
         from repro.launch.mesh import make_serve_mesh
@@ -257,7 +288,8 @@ def main():
 
     for name, out in [("engine-pr1", pr1_out), ("engine-k1", k1_out),
                       ("engine-cold", cold_out), ("engine-cached", hot_out),
-                      ("engine-dense", dense_out)]:
+                      ("engine-dense", dense_out),
+                      ("engine-traced", trc_out)]:
         if out != seq_out:
             raise SystemExit(f"{name} tokens diverged from sequential "
                              "reference")
@@ -287,7 +319,8 @@ def main():
             ("engine-k1", k1_tok, k1_dt),
             ("engine-cold-cache", cold_tok, cold_dt),
             ("engine-cached", hot_tok, hot_dt),
-            ("engine-dense", dense_tok, dense_dt)]
+            ("engine-dense", dense_tok, dense_dt),
+            ("engine-traced", trc_tok, trc_dt)]
     if mesh_row:
         rows.append(mesh_row)
     print(f"{'arm':<20}{'gen tokens':>11}{'seconds':>9}{'tok/s':>9}")
@@ -307,10 +340,26 @@ def main():
           f"p50 {dstep.get('p50', 0) * 1e3:.2f} ms "
           f"p95 {dstep.get('p95', 0) * 1e3:.2f} ms")
 
+    snap_trc = trc_eng.metrics.snapshot()
+    print(f"# traced arm: {len(tracer.events)} trace events, "
+          f"{len(event_log)} lifecycle events, "
+          f"{snap_trc['jit_compiles']} jit compiles in the measured window "
+          f"(0 = no mid-measurement retrace) over "
+          f"{snap_trc['jit_dispatches']} dispatches, "
+          f"ttft p50 {snap_trc['ttft_s']['p50'] * 1e3:.1f} ms, "
+          f"itl p50 {snap_trc['itl_s']['p50'] * 1e3:.2f} ms "
+          f"p95 {snap_trc['itl_s']['p95'] * 1e3:.2f} ms over "
+          f"{snap_trc['itl_s']['count']} gaps")
+    if args.trace_out:
+        tracer.save(args.trace_out)
+        print(f"# wrote Chrome trace {args.trace_out} "
+              "(open at https://ui.perfetto.dev)")
+
     speedup_seq = (hot_tok / hot_dt) / (seq_tok / seq_dt)
     speedup_pr1 = (hot_tok / hot_dt) / (pr1_tok / pr1_dt)
     speedup_k1 = (hot_tok / hot_dt) / (k1_tok / k1_dt)
     paged_vs_dense = (hot_tok / hot_dt) / (dense_tok / dense_dt)
+    traced_vs_cached = (trc_tok / trc_dt) / (hot_tok / hot_dt)
     print(f"# cached engine vs sequential: {speedup_seq:.2f}x tokens/s")
     print(f"# horizon-K (K={args.horizon}) vs PR-1 per-token arm: "
           f"{speedup_pr1:.2f}x tokens/s")
@@ -327,6 +376,15 @@ def main():
         raise SystemExit(
             f"paged decode tok/s is {paged_vs_dense:.3f}x dense — below "
             f"the {1.0 - args.paged_tolerance:.2f}x floor")
+    # tracing-overhead hard gate: same CPU-sim caveat as the paged floor
+    print(f"# tracing overhead: traced arm at {traced_vs_cached:.3f}x the "
+          f"tracing-off cached arm (floor {1.0 - args.trace_tolerance:.2f}x"
+          f"{'' if gate_paged else ', record-only under --mesh'})")
+    if gate_paged and traced_vs_cached < 1.0 - args.trace_tolerance:
+        raise SystemExit(
+            f"tracing-enabled decode tok/s is {traced_vs_cached:.3f}x the "
+            f"tracing-off arm — below the "
+            f"{1.0 - args.trace_tolerance:.2f}x floor")
     if mesh_row:
         print(f"# mesh arm ({args.mesh}, CPU-simulated devices): "
               f"{mesh_tok / mesh_dt:.1f} tok/s, token-identical, "
@@ -342,6 +400,20 @@ def main():
         "arms": {name: {"tokens": tok, "seconds": round(dt, 4),
                         "tok_per_s": round(tok / dt, 1)}
                  for name, tok, dt in rows},
+        # full Metrics.snapshot() per engine arm, scoped to the final
+        # measured traffic replay (reset_metrics per rep) — counters,
+        # gauges, and histogram summaries (count/mean/p50/p95/min/max)
+        "metrics": {name: eng.metrics.snapshot()
+                    for name, eng in [("engine-pr1", pr1_eng),
+                                      ("engine-k1", k1_eng),
+                                      ("engine-cold-cache", cold_eng),
+                                      ("engine-cached", hot_eng),
+                                      ("engine-dense", dense_eng),
+                                      ("engine-traced", trc_eng)]},
+        # event-log-derived request latency summaries for the production
+        # (cached) arm, surfaced at top level so the trajectory is greppable
+        "latency": {h: snap[h] for h in ("ttft_s", "itl_s", "queue_wait_s",
+                                         "request_latency_s")},
         "decode_step_s": {k: dstep.get(k, 0.0)
                           for k in ("p50", "p95", "mean", "count")},
         "decode_blocks": snap["decode_blocks"],
@@ -363,7 +435,11 @@ def main():
         "speedups": {"cached_vs_sequential": round(speedup_seq, 3),
                      "horizon_vs_pr1": round(speedup_pr1, 3),
                      "horizon_vs_k1": round(speedup_k1, 3),
-                     "paged_vs_dense": round(paged_vs_dense, 3)},
+                     "paged_vs_dense": round(paged_vs_dense, 3),
+                     "traced_vs_cached": round(traced_vs_cached, 3)},
+        "trace": {"events": len(tracer.events),
+                  "lifecycle_events": len(event_log),
+                  "saved": args.trace_out},
     }
     if mesh_row:
         # CPU-sim ratio: D*M interpreted host devices time-slice the same

@@ -26,12 +26,14 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 CHECKED_GLOBS = [
     "src/repro/serve/*.py",
     "src/repro/checkpoint/*.py",
+    "src/repro/obs/*.py",
 ]
 
 # package __init__ re-export shims document themselves with a leading
 # comment block, not a module docstring
 MODULE_DOCSTRING_EXEMPT = {"src/repro/serve/__init__.py",
-                           "src/repro/checkpoint/__init__.py"}
+                           "src/repro/checkpoint/__init__.py",
+                           "src/repro/obs/__init__.py"}
 
 
 def checked_files() -> list[str]:

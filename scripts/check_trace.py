@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Chrome trace-event schema check for serve traces (CI artifact gate).
+
+Validates the JSON the serving tracer emits (repro.obs.tracer.Tracer.save)
+against the trace-event contract Perfetto / chrome://tracing actually load:
+a ``traceEvents`` list whose entries carry ``name``/``ph``/``pid``/``tid``,
+complete ("X") spans with non-negative microsecond ``ts``/``dur``, instants
+("i") and counters ("C") with a ``ts``, counter args all numeric, and
+metadata ("M") rows naming the process/threads. ``--require NAME`` (repeat)
+additionally asserts a span name is present — CI requires the spans the
+PR's acceptance criteria name (mcnc_expand, prefill, page_alloc,
+decode_block) plus a jit_compile instant, so a refactor cannot silently
+stop tracing a subsystem while the file stays loadable.
+
+Dependency-free (json + argparse): runs in CI before/without the ML stack.
+Exit 1 lists every violation. Importable: tests call validate_trace() on
+in-memory dicts.
+
+    python scripts/check_trace.py serve_trace.json \
+        --require decode_block --require mcnc_expand
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+VALID_PH = {"X", "i", "C", "M"}
+
+# fields every event must carry, per phase type
+_COMMON = ("name", "ph", "pid", "tid")
+
+
+def _num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate_trace(doc: dict, require: list[str] | None = None) -> list[str]:
+    """Validate a parsed trace document; returns violation strings
+    (empty = valid). `require` lists span ("X") names that must appear."""
+    out: list[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["top level: expected an object with a traceEvents list"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["traceEvents: not a list"]
+    span_names: set[str] = set()
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            out.append(f"{where}: not an object")
+            continue
+        missing = [f for f in _COMMON if f not in ev]
+        if missing:
+            out.append(f"{where} ({ev.get('name', '?')}): missing "
+                       f"{', '.join(missing)}")
+            continue
+        ph = ev["ph"]
+        if ph not in VALID_PH:
+            out.append(f"{where} ({ev['name']}): unknown ph {ph!r}")
+            continue
+        if ph in ("X", "i", "C"):
+            if not _num(ev.get("ts")) or ev["ts"] < 0:
+                out.append(f"{where} ({ev['name']}): bad ts "
+                           f"{ev.get('ts')!r}")
+        if ph == "X":
+            span_names.add(ev["name"])
+            if not _num(ev.get("dur")) or ev["dur"] < 0:
+                out.append(f"{where} ({ev['name']}): bad dur "
+                           f"{ev.get('dur')!r}")
+        if ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                out.append(f"{where} ({ev['name']}): counter without "
+                           "series args")
+            elif not all(_num(v) for v in args.values()):
+                out.append(f"{where} ({ev['name']}): non-numeric counter "
+                           "series")
+        if ph == "M" and ev["name"] not in ("process_name", "thread_name"):
+            out.append(f"{where}: unexpected metadata row {ev['name']!r}")
+    for name in require or ():
+        if name not in span_names:
+            out.append(f"required span {name!r} absent "
+                       f"(spans present: {sorted(span_names)})")
+    return out
+
+
+def main() -> int:
+    """CLI entry point: validate a trace file, print violations, exit 1
+    on any."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--require", action="append", default=[],
+                    help="span name that must be present (repeatable)")
+    args = ap.parse_args()
+    with open(args.trace) as f:
+        doc = json.load(f)
+    problems = validate_trace(doc, args.require)
+    for p in problems:
+        print(f"check_trace: {p}", file=sys.stderr)
+    n_spans = sum(1 for e in doc.get("traceEvents", ())
+                  if isinstance(e, dict) and e.get("ph") == "X")
+    if not problems:
+        print(f"check_trace: OK — {len(doc['traceEvents'])} events "
+              f"({n_spans} spans) in {args.trace}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,20 @@
+# Serving observability: per-request lifecycle event log (obs/events.py),
+# span tracer emitting Chrome trace-event JSON for Perfetto (obs/tracer.py),
+# and a Prometheus text-exposition renderer over serve.metrics.Metrics
+# (obs/prometheus.py). Pure python, no jax imports — the engine threads
+# these through the serving stack; docs/OBSERVABILITY.md is the spec.
+from repro.obs.events import (ADMITTED, DECODE_BLOCK, EVICT, FINISH,
+                              LIFECYCLE_ORDER, PREFILL, PREFILL_CHUNK,
+                              QUEUED, SUBMIT, TERMINAL_EVENTS, Event,
+                              EventLog)
+from repro.obs.prometheus import render_prometheus
+from repro.obs.tracer import (NULL_TRACER, TID_DECODE, TID_ENGINE,
+                              TID_EXPAND, TID_PAGES, TID_PREFILL,
+                              THREAD_NAMES, Tracer)
+
+__all__ = [
+    "ADMITTED", "DECODE_BLOCK", "EVICT", "Event", "EventLog", "FINISH",
+    "LIFECYCLE_ORDER", "NULL_TRACER", "PREFILL", "PREFILL_CHUNK", "QUEUED",
+    "SUBMIT", "TERMINAL_EVENTS", "THREAD_NAMES", "TID_DECODE", "TID_ENGINE",
+    "TID_EXPAND", "TID_PAGES", "TID_PREFILL", "Tracer", "render_prometheus",
+]

@@ -1,0 +1,205 @@
+"""Per-request lifecycle event log for the serving engine.
+
+Every request's life is recorded as an ordered sequence of named events with
+monotonic timestamps (``time.perf_counter``):
+
+    submit -> queued -> admitted -> prefill | prefill_chunk[i]*
+           -> decode_block[j]* -> finish | evict
+
+``submit`` is the engine API boundary, ``queued`` the scheduler accepting the
+request into its FIFO, ``admitted`` the step it wins a KV slot (and, paged,
+its lifetime page reservation). Whole prompts cache in one ``prefill`` event;
+long prompts under chunked prefill record one ``prefill_chunk`` per piece
+(the last one emits the first token). Each fused decode block a request
+harvests tokens from records one ``decode_block`` event carrying the token
+count. Exactly one terminal event ends the sequence: ``finish`` (budget
+emitted) or ``evict`` (reserved for cancellation/preemption — no engine path
+emits it yet, but the ordering invariant and consumers already treat it as
+terminal so the async front end can adopt it without a format change).
+
+From this log the engine derives the latency numbers the ROADMAP's SLO work
+needs per request — TTFT, queue wait, inter-token latency, end-to-end — and
+feeds them into the existing ``Metrics`` histograms (`summary`). The log is
+the authoritative source: the derived values and the raw events always agree
+because they share the same timestamps.
+
+No jax imports; appends are O(1) dict/list work, cheap enough to stay on in
+production (the *span tracer* is the opt-in part of the observability layer).
+Memory is bounded: finished requests beyond ``max_finished`` are dropped
+oldest-first.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Callable
+
+SUBMIT = "submit"
+QUEUED = "queued"
+ADMITTED = "admitted"
+PREFILL = "prefill"
+PREFILL_CHUNK = "prefill_chunk"
+DECODE_BLOCK = "decode_block"
+FINISH = "finish"
+EVICT = "evict"
+
+# rank of each event name in a request's life; events must be emitted in
+# non-decreasing rank (the repeatable ones share their rank)
+LIFECYCLE_ORDER = {SUBMIT: 0, QUEUED: 1, ADMITTED: 2, PREFILL: 3,
+                   PREFILL_CHUNK: 3, DECODE_BLOCK: 4, FINISH: 5, EVICT: 5}
+
+# events that may legally repeat within one request
+REPEATABLE_EVENTS = frozenset({PREFILL_CHUNK, DECODE_BLOCK})
+
+TERMINAL_EVENTS = frozenset({FINISH, EVICT})
+
+# events that deliver generated tokens to the request (their `tokens` datum
+# feeds the inter-token-latency derivation)
+TOKEN_EVENTS = frozenset({PREFILL, PREFILL_CHUNK, DECODE_BLOCK})
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One lifecycle record: request id, event name, monotonic seconds, and
+    free-form integer/float annotations (token counts, chunk offsets)."""
+    req_id: int
+    name: str
+    t: float
+    data: dict
+
+
+class EventLog:
+    """Append-only per-request lifecycle log with derived latency summaries.
+
+    clock: monotonic seconds source (``time.perf_counter``; injectable so
+    tests can drive deterministic timelines).
+    max_finished: finished/evicted request logs retained before the oldest
+    are dropped (live requests are never dropped).
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter,
+                 max_finished: int = 10_000):
+        self._clock = clock
+        self.max_finished = max_finished
+        self._events: OrderedDict[int, list[Event]] = OrderedDict()
+        self._finished: list[int] = []      # FIFO of terminal req_ids
+
+    # ------------------------------------------------------------------
+    def emit(self, req_id: int, name: str, **data) -> Event:
+        """Record one event for a request at the current clock reading.
+        Returns the Event (tests and the engine read its timestamp back)."""
+        ev = Event(req_id=int(req_id), name=name, t=self._clock(), data=data)
+        self._events.setdefault(ev.req_id, []).append(ev)
+        if name in TERMINAL_EVENTS:
+            self._finished.append(ev.req_id)
+            while len(self._finished) > self.max_finished:
+                self._events.pop(self._finished.pop(0), None)
+        return ev
+
+    def request_ids(self) -> list[int]:
+        """Request ids with retained events, oldest first."""
+        return list(self._events)
+
+    def events_for(self, req_id: int) -> list[Event]:
+        """The request's events in emission order (empty if dropped)."""
+        return list(self._events.get(req_id, ()))
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._events.values())
+
+    # ------------------------------------------------------------------
+    def validate(self, req_id: int) -> list[str]:
+        """Ordering-invariant check for one request; returns violation
+        strings (empty = valid). Invariants: timestamps non-decreasing,
+        lifecycle ranks non-decreasing, non-repeatable events unique, at
+        most one terminal event and nothing after it, terminal sequences
+        contain exactly one terminal event."""
+        evs = self.events_for(req_id)
+        out: list[str] = []
+        if not evs:
+            return [f"req {req_id}: no events"]
+        seen: dict[str, int] = {}
+        last_t, last_rank, terminal = -float("inf"), -1, None
+        for ev in evs:
+            if ev.name not in LIFECYCLE_ORDER:
+                out.append(f"req {req_id}: unknown event {ev.name!r}")
+                continue
+            if terminal is not None:
+                out.append(f"req {req_id}: {ev.name!r} after terminal "
+                           f"{terminal!r}")
+            if ev.t < last_t:
+                out.append(f"req {req_id}: timestamp went backwards at "
+                           f"{ev.name!r} ({ev.t} < {last_t})")
+            rank = LIFECYCLE_ORDER[ev.name]
+            if rank < last_rank:
+                out.append(f"req {req_id}: {ev.name!r} out of lifecycle "
+                           "order")
+            if ev.name in seen and ev.name not in REPEATABLE_EVENTS:
+                out.append(f"req {req_id}: duplicate {ev.name!r}")
+            seen[ev.name] = seen.get(ev.name, 0) + 1
+            last_t, last_rank = ev.t, rank
+            if ev.name in TERMINAL_EVENTS:
+                terminal = ev.name
+        n_term = sum(seen.get(t, 0) for t in TERMINAL_EVENTS)
+        if n_term > 1:
+            out.append(f"req {req_id}: {n_term} terminal events")
+        return out
+
+    def validate_all(self, *, require_terminal: bool = False) -> list[str]:
+        """validate() across every retained request; with require_terminal,
+        additionally flag requests that never reached a terminal event
+        (drained-engine invariant)."""
+        out: list[str] = []
+        for rid in self._events:
+            out.extend(self.validate(rid))
+            if require_terminal and not any(
+                    e.name in TERMINAL_EVENTS for e in self._events[rid]):
+                out.append(f"req {rid}: no terminal event")
+        return out
+
+    # ------------------------------------------------------------------
+    def summary(self, req_id: int) -> dict:
+        """Derived per-request latency numbers from the raw events.
+
+        Returns a dict with (seconds, None when underivable):
+          queue_wait_s   submit -> admitted
+          ttft_s         submit -> first token (first token-bearing event
+                         that actually delivered tokens)
+          e2e_s          submit -> terminal event
+          itl_samples    per-token inter-token latencies: for each token
+                         delivery AFTER the first token, the wall time since
+                         the previous delivery divided by the tokens it
+                         brought (fused blocks amortize one sync over K
+                         tokens — that is the latency a streaming client
+                         would observe per token at block granularity)
+          n_tokens       generated tokens delivered across token events
+        """
+        evs = self.events_for(req_id)
+        t_submit = next((e.t for e in evs if e.name == SUBMIT), None)
+        t_admit = next((e.t for e in evs if e.name == ADMITTED), None)
+        t_term = next((e.t for e in evs if e.name in TERMINAL_EVENTS), None)
+        t_first = None
+        itl: list[float] = []
+        n_tokens = 0
+        t_prev = None
+        for ev in evs:
+            if ev.name not in TOKEN_EVENTS:
+                continue
+            tok = int(ev.data.get("tokens", 0))
+            if tok <= 0:            # mid-prompt chunk: no tokens delivered
+                continue
+            n_tokens += tok
+            if t_first is None:
+                t_first = ev.t      # first delivery: no prior sync to
+            else:                   # measure an inter-token gap against
+                itl.extend([(ev.t - t_prev) / tok] * tok)
+            t_prev = ev.t
+        delta = (lambda a, b: None if a is None or b is None else b - a)
+        return {
+            "queue_wait_s": delta(t_submit, t_admit),
+            "ttft_s": delta(t_submit, t_first),
+            "e2e_s": delta(t_submit, t_term),
+            "itl_samples": itl,
+            "n_tokens": n_tokens,
+        }

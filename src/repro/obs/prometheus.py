@@ -1,0 +1,76 @@
+"""Prometheus text-exposition (version 0.0.4) renderer over serve Metrics.
+
+Renders every instrument a ``Metrics`` registry holds as the plain-text
+format a Prometheus scrape endpoint serves: counters as ``<name>_total``,
+gauges verbatim, histograms as CUMULATIVE ``_bucket{le="..."}`` series plus
+``_sum``/``_count`` — the full distribution, not just the p50/p95 digests
+``snapshot()`` carries, so dashboards can do their own quantile math
+(``histogram_quantile`` over the bucket series).
+
+Dependency-free on purpose (the container has no prometheus client): the
+format is a stable, line-oriented text protocol, and emitting it directly
+keeps the serving stack import-light. tests/test_obs.py pins the output
+against a golden file so the exposition can never drift silently.
+"""
+from __future__ import annotations
+
+import math
+import re
+
+_NAME_OK = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_NAME_FIX = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample value: integers bare, floats repr'd, inf/nan in
+    Prometheus spelling (+Inf / -Inf / NaN)."""
+    if isinstance(v, float):
+        if math.isinf(v):
+            return "+Inf" if v > 0 else "-Inf"
+        if math.isnan(v):
+            return "NaN"
+        if v == int(v) and abs(v) < 1e15:
+            return str(int(v))
+        return repr(v)
+    return str(v)
+
+
+def metric_name(name: str, namespace: str = "") -> str:
+    """Sanitize an instrument name into a legal Prometheus metric name,
+    optionally prefixed ``<namespace>_``."""
+    full = f"{namespace}_{name}" if namespace else name
+    if not _NAME_OK.match(full):
+        full = _NAME_FIX.sub("_", full)
+        if not _NAME_OK.match(full):        # leading digit etc.
+            full = "_" + full
+    return full
+
+
+def render_prometheus(metrics, namespace: str = "repro_serve") -> str:
+    """Render a ``serve.metrics.Metrics`` registry as Prometheus text
+    exposition. Counters gain the conventional ``_total`` suffix; histogram
+    buckets are cumulative with a closing ``le="+Inf"`` bucket equal to the
+    observation count. Output is deterministic (instruments sorted by name)
+    so it can be golden-file tested."""
+    lines: list[str] = []
+    for name, kind, inst in metrics.instruments():
+        full = metric_name(name, namespace)
+        if kind == "counter":
+            if not full.endswith("_total"):
+                full += "_total"
+            lines.append(f"# TYPE {full} counter")
+            lines.append(f"{full} {_fmt(inst.value)}")
+        elif kind == "gauge":
+            lines.append(f"# TYPE {full} gauge")
+            lines.append(f"{full} {_fmt(inst.value)}")
+        elif kind == "histogram":
+            lines.append(f"# TYPE {full} histogram")
+            for bound, cum in inst.cumulative_buckets():
+                lines.append(
+                    f'{full}_bucket{{le="{_fmt(float(bound))}"}} {cum}')
+            lines.append(f'{full}_bucket{{le="+Inf"}} {inst.count}')
+            lines.append(f"{full}_sum {_fmt(float(inst.sum))}")
+            lines.append(f"{full}_count {inst.count}")
+        else:       # pragma: no cover - Metrics only mints the three kinds
+            raise ValueError(f"unknown instrument kind {kind!r}")
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,168 @@
+"""Span tracer emitting Chrome trace-event JSON (Perfetto-loadable).
+
+The serving engine wraps its phases in spans — MCNC expansion, adapter
+stacking, page alloc/free, prefill groups/chunks, and every fused decode
+block — annotated with the numbers that explain a stall (batch size, horizon
+K, live pages, jit-compile counts). ``to_chrome()`` renders the standard
+trace-event format: open the JSON at https://ui.perfetto.dev (or
+chrome://tracing) and the serving timeline lays out on one track per
+subsystem; docs/OBSERVABILITY.md walks through it.
+
+Tracing is strictly opt-in and zero-cost when off: the engine holds
+``NULL_TRACER`` by default, whose ``span``/``instant``/``counter`` are
+no-ops returning a shared reusable null context (no allocation on the hot
+path). benchmarks/serve_bench.py hard-gates the enabled-tracing overhead on
+decode throughput.
+
+Event fields follow the trace-event spec: ``ph`` "X" complete spans with
+microsecond ``ts``/``dur``, ``ph`` "i" instants, ``ph`` "C" counter series,
+``ph`` "M" metadata naming the process and the per-subsystem thread lanes.
+No jax imports; timestamps come from the injectable monotonic clock.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable
+
+# logical thread lanes: one Perfetto track per serving subsystem
+TID_ENGINE = 0      # scheduler steps, request lifecycle instants
+TID_PREFILL = 1     # prefill groups + chunks
+TID_DECODE = 2      # fused decode blocks
+TID_EXPAND = 3      # MCNC expansion + adapter stacking
+TID_PAGES = 4       # page allocation / free
+
+THREAD_NAMES = {TID_ENGINE: "engine", TID_PREFILL: "prefill",
+                TID_DECODE: "decode", TID_EXPAND: "expand/adapters",
+                TID_PAGES: "kv-pages"}
+
+
+class _Span:
+    """Context manager for one in-flight span; records a ph-"X" complete
+    event (start + duration) when exited."""
+    __slots__ = ("_tracer", "_name", "_tid", "_args", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, tid: int, args: dict):
+        self._tracer = tracer
+        self._name = name
+        self._tid = tid
+        self._args = args
+
+    def __enter__(self):
+        self._t0 = self._tracer._clock()
+        return self
+
+    def note(self, **args):
+        """Attach args discovered while the span body runs (e.g. how many
+        pages an alloc span actually allocated)."""
+        self._args.update(args)
+
+    def __exit__(self, *exc):
+        tr = self._tracer
+        t1 = tr._clock()
+        tr.events.append({
+            "name": self._name, "ph": "X", "pid": tr.pid, "tid": self._tid,
+            "ts": tr._us(self._t0), "dur": max(0.0, (t1 - self._t0) * 1e6),
+            "cat": "serve", "args": self._args})
+        return False
+
+
+class _NullSpan:
+    """Reusable no-op context manager (the disabled tracer's span)."""
+    __slots__ = ()
+
+    def __enter__(self):
+        """No-op enter."""
+        return self
+
+    def note(self, **args):
+        """No-op note."""
+
+    def __exit__(self, *exc):
+        """No-op exit."""
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Tracer:
+    """Recording span tracer. ``enabled`` is True; the engine branches on it
+    only where even a no-op call would be per-token work.
+
+    clock: monotonic seconds source (injectable for deterministic tests).
+    pid: trace-event process id (one engine = one process row).
+    """
+
+    enabled = True
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter,
+                 pid: int = 1):
+        self._clock = clock
+        self.pid = pid
+        self._t0 = clock()
+        self.events: list[dict] = []
+
+    def _us(self, t: float) -> float:
+        """Monotonic seconds -> microseconds since tracer start."""
+        return (t - self._t0) * 1e6
+
+    # ------------------------------------------------------------------
+    def span(self, name: str, tid: int = TID_ENGINE, **args) -> _Span:
+        """Context manager recording a complete ("X") span around its body.
+        kwargs become the span's ``args`` annotations (batch, k, pages...)."""
+        return _Span(self, name, tid, args)
+
+    def instant(self, name: str, tid: int = TID_ENGINE, **args):
+        """Record a zero-duration instant ("i") event (scope: thread)."""
+        self.events.append({
+            "name": name, "ph": "i", "s": "t", "pid": self.pid, "tid": tid,
+            "ts": self._us(self._clock()), "cat": "serve", "args": args})
+
+    def counter(self, name: str, **series: float):
+        """Record a counter ("C") sample; each kwarg is one series on the
+        counter track (e.g. pages_in_use=12)."""
+        self.events.append({
+            "name": name, "ph": "C", "pid": self.pid, "tid": TID_ENGINE,
+            "ts": self._us(self._clock()), "cat": "serve",
+            "args": dict(series)})
+
+    # ------------------------------------------------------------------
+    def to_chrome(self, process_name: str = "serve-engine") -> dict:
+        """Render the recorded events as a Chrome trace-event JSON object
+        ({"traceEvents": [...]}) with process/thread metadata rows."""
+        meta: list[dict] = [{
+            "name": "process_name", "ph": "M", "pid": self.pid, "tid": 0,
+            "args": {"name": process_name}}]
+        for tid, tname in THREAD_NAMES.items():
+            meta.append({"name": "thread_name", "ph": "M", "pid": self.pid,
+                         "tid": tid, "args": {"name": tname}})
+        return {"traceEvents": meta + self.events,
+                "displayTimeUnit": "ms"}
+
+    def save(self, path: str, process_name: str = "serve-engine"):
+        """Write the Chrome trace JSON to `path` (open in Perfetto)."""
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(process_name), f)
+            f.write("\n")
+
+
+class _NullTracer:
+    """Disabled tracer: same surface as Tracer, every method a no-op (span
+    returns a shared context manager — no per-call allocation)."""
+
+    enabled = False
+    events: list = []
+
+    def span(self, name: str, tid: int = TID_ENGINE, **args) -> _NullSpan:
+        """No-op span."""
+        return _NULL_SPAN
+
+    def instant(self, name: str, tid: int = TID_ENGINE, **args):
+        """No-op instant."""
+
+    def counter(self, name: str, **series: float):
+        """No-op counter sample."""
+
+
+NULL_TRACER = _NullTracer()

@@ -2,7 +2,10 @@
 # tasks' MB-scale MCNC bundles expanded on the fly — registry for the bundles,
 # byte-budgeted cache for their expansions, continuous-batching scheduler over
 # a pooled slot KV cache, and the engine tying them to the shared step
-# builders. See README.md (Serving walkthrough).
+# builders. See README.md (Serving walkthrough). Observability (lifecycle
+# event log, Chrome-trace tracer, Prometheus exposition) lives in repro.obs;
+# the conveniences are re-exported here for engine callers.
+from repro.obs import NULL_TRACER, EventLog, Tracer, render_prometheus
 from repro.serve.cache import ExpansionCache, tree_bytes
 from repro.serve.engine import ServeEngine, sequential_reference
 from repro.serve.metrics import Metrics
@@ -13,8 +16,9 @@ from repro.serve.scheduler import (ChunkPrefill, Request, RequestState,
 from repro.serve.trace import run_trace
 
 __all__ = [
-    "AdapterBundle", "AdapterRegistry", "ChunkPrefill", "ExpansionCache",
-    "Metrics", "PagePool", "RefPagePool", "Request", "RequestState",
-    "Scheduler", "ServeEngine", "SlotPool", "StepPlan", "pages_for_tokens",
+    "AdapterBundle", "AdapterRegistry", "ChunkPrefill", "EventLog",
+    "ExpansionCache", "Metrics", "NULL_TRACER", "PagePool", "RefPagePool",
+    "Request", "RequestState", "Scheduler", "ServeEngine", "SlotPool",
+    "StepPlan", "Tracer", "pages_for_tokens", "render_prometheus",
     "run_trace", "sequential_reference", "tree_bytes",
 ]

@@ -24,6 +24,8 @@ from typing import Any
 
 import jax
 
+from repro.obs.tracer import NULL_TRACER, TID_EXPAND
+
 PyTree = Any
 
 Key = tuple[str, str]   # (task_id, bundle_hash)
@@ -46,8 +48,13 @@ class ExpansionCache:
     arm uses that instead of a separate code path.
     """
 
-    def __init__(self, byte_budget: int | None = None):
+    def __init__(self, byte_budget: int | None = None, tracer=NULL_TRACER):
         self.byte_budget = byte_budget
+        # optional repro.obs tracer: evictions/invalidations become instant
+        # events and the resident-bytes series a counter track, so a Perfetto
+        # timeline shows WHY a later admission re-ran expansion. The engine
+        # wires its own tracer into a cache it constructed itself.
+        self.tracer = tracer
         self._entries: OrderedDict[Key, tuple[PyTree, int]] = OrderedDict()
         self.bytes = 0
         self.hits = 0
@@ -87,9 +94,14 @@ class ExpansionCache:
         if self.byte_budget is None:
             return
         while self._entries and self.bytes > self.byte_budget:
-            _, (_, nbytes) = self._entries.popitem(last=False)
+            key, (_, nbytes) = self._entries.popitem(last=False)
             self.bytes -= nbytes
             self.evictions += 1
+            if self.tracer.enabled:
+                self.tracer.instant("cache_evict", tid=TID_EXPAND,
+                                    task=key[0], bytes=nbytes)
+        if self.tracer.enabled:
+            self.tracer.counter("expansion_cache_bytes", bytes=self.bytes)
 
     # ------------------------------------------------------------------
     def invalidate_task(self, task_id: str):
@@ -98,6 +110,9 @@ class ExpansionCache:
         for k in dead:
             self.bytes -= self._entries.pop(k)[1]
             self.invalidations += 1
+            if self.tracer.enabled:
+                self.tracer.instant("cache_invalidate", tid=TID_EXPAND,
+                                    task=task_id)
 
     def clear(self):
         """Drop every entry (counters keep their history)."""

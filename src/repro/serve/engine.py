@@ -66,6 +66,10 @@ from repro.core.reparam import expand_tree, flatten_with_paths, \
     unflatten_paths
 from repro.kernels.ops import kernel_expand_fn
 from repro.models import lm
+from repro.obs.events import (DECODE_BLOCK, FINISH, PREFILL, PREFILL_CHUNK,
+                              EventLog)
+from repro.obs.tracer import (NULL_TRACER, TID_DECODE, TID_ENGINE,
+                              TID_EXPAND, TID_PAGES, TID_PREFILL, Tracer)
 from repro.serve.cache import ExpansionCache
 from repro.serve.metrics import Metrics
 from repro.serve.paged import PagePool, pages_for_tokens
@@ -157,6 +161,45 @@ def _activate_slots(tokens: Array, pos: Array, remaining: Array, idx: Array,
             remaining.at[idx].set(rem))
 
 
+class _InstrumentedJit:
+    """Dispatch/compile accounting around one jitted callable.
+
+    Every call bumps the `jit_dispatches` counter; growth of the callable's
+    executable cache (jax's per-shape compilation cache, read through the
+    pjit `_cache_size` API) bumps `jit_compiles` and drops a `jit_compile`
+    instant on the trace — so a cache-miss recompile (new batch shape, new
+    horizon, new live-page count) shows up attributed to the function that
+    retraced instead of as a mystery multi-second stall inside whatever
+    span it happened under. Reads metrics/tracer off the engine at call
+    time so reset_metrics() (which swaps the registry) keeps counting into
+    the live one.
+    """
+
+    __slots__ = ("_fn", "_name", "_tid", "_engine", "_size")
+
+    def __init__(self, fn, name: str, engine: "ServeEngine", tid: int):
+        self._fn = fn
+        self._name = name
+        self._tid = tid
+        self._engine = engine
+        self._size = 0
+
+    def __call__(self, *args):
+        eng = self._engine
+        eng.metrics.counter("jit_dispatches").inc()
+        out = self._fn(*args)
+        size_fn = getattr(self._fn, "_cache_size", None)
+        if size_fn is not None:
+            size = size_fn()
+            if size > self._size:
+                eng.metrics.counter("jit_compiles").inc(size - self._size)
+                if eng.tracer.enabled:
+                    eng.tracer.instant("jit_compile", tid=self._tid,
+                                       fn=self._name, variants=size)
+                self._size = size
+        return out
+
+
 class ServeEngine:
     """Continuous-batching multi-adapter server for decoder-only GQA models.
 
@@ -194,6 +237,19 @@ class ServeEngine:
     reshards. The scheduler, cache, and metrics behavior is IDENTICAL to the
     single-device engine — the differential harness in tests/test_serve.py
     holds the two token-identical on the same request trace.
+    tracer: optional repro.obs Tracer. When set, expansion, prefill groups
+    and chunks, page alloc/free, adapter stack writes, and every fused
+    decode block become Chrome-trace spans (tracer.save -> Perfetto), jit
+    recompiles become attributed instants, and the engine samples counter
+    tracks (slots, jit compiles/dispatches, tokens) each step. Off by
+    default (NULL_TRACER: no-op methods, no allocations on the hot path —
+    serve_bench's traced arm hard-gates the enabled overhead). The engine
+    wires its tracer into a PagePool / ExpansionCache it constructed
+    itself (a caller-provided cache keeps a tracer the caller set).
+    event_log: optional repro.obs EventLog shared with the scheduler. The
+    engine always keeps one (host-side appends, no device work) and
+    derives the ttft_s / itl_s / queue_wait_s / request_latency_s
+    histograms from each request's lifecycle events.
     """
 
     def __init__(self, bundle: TaskBundle, base: PyTree, gen_ws: list,
@@ -211,6 +267,8 @@ class ServeEngine:
                  n_pages: int | None = None,
                  prefill_chunk: int | None = None,
                  metrics: Metrics | None = None,
+                 tracer: Tracer | None = None,
+                 event_log: EventLog | None = None,
                  mesh: Mesh | None = None):
         if bundle.arch.kind != "lm":
             raise ValueError("ServeEngine serves decoder-only LMs")
@@ -242,8 +300,18 @@ class ServeEngine:
         self.mesh = mesh
         self.gen_ws = gen_ws
         self.registry = registry
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.events = event_log if event_log is not None else EventLog()
+        # adopt orphan collaborators into this engine's trace: a registry /
+        # cache whose tracer is still the null default picks up ours, so
+        # bundle load + cache eviction spans land on the same timeline;
+        # one a caller armed with its own tracer keeps it
+        if registry.tracer is NULL_TRACER:
+            registry.tracer = self.tracer
         self.cache = (expansion_cache if expansion_cache is not None
-                      else ExpansionCache())
+                      else ExpansionCache(tracer=self.tracer))
+        if self.cache.tracer is NULL_TRACER:
+            self.cache.tracer = self.tracer
         self.metrics = metrics if metrics is not None else Metrics()
         # legacy_decode reproduces the PR-1 per-token hot path (host-side
         # token/pos array rebuild + upload, a separate argmax dispatch, one
@@ -283,14 +351,16 @@ class ServeEngine:
                         if a in mesh.axis_names:
                             dp *= mesh.shape[a]
                     n_pages = -(-n_pages // dp) * dp
-            self.pages = PagePool(n_pages, page_size, n_slots, max_pps)
+            self.pages = PagePool(n_pages, page_size, n_slots, max_pps,
+                                  tracer=self.tracer)
             self.max_pages_per_slot = max_pps
         self.scheduler = Scheduler(
             self.pool, max_prefill_requests=max_prefill_requests,
             max_prefill_group=max_prefill_group,
             max_decode_horizon=1 if legacy_decode else decode_horizon,
             interference_horizon=interference_horizon,
-            page_pool=self.pages, prefill_chunk=prefill_chunk)
+            page_pool=self.pages, prefill_chunk=prefill_chunk,
+            event_log=self.events)
         registry.subscribe(self.cache.invalidate_task)
 
         self.base = base
@@ -327,34 +397,48 @@ class ServeEngine:
         sharding_kw = self._setup_sharding()
         self._sharding_kw = sharding_kw    # late-built jits (chunk prefill)
 
-        self._prefill = jax.jit(make_assembled_prefill_step(bundle,
-                                                            cache_cap))
+        def instr(fn, name, tid):
+            return _InstrumentedJit(fn, name, self, tid)
+
+        self._prefill = instr(
+            jax.jit(make_assembled_prefill_step(bundle, cache_cap)),
+            "prefill", TID_PREFILL)
         if dense_cache:
-            self._scatter = jax.jit(_scatter_prefill,
-                                    donate_argnums=(0, 2, 3, 4),
-                                    **sharding_kw["scatter"])
+            self._scatter = instr(
+                jax.jit(_scatter_prefill, donate_argnums=(0, 2, 3, 4),
+                        **sharding_kw["scatter"]),
+                "prefill_scatter", TID_PREFILL)
         else:
-            self._scatter_paged = jax.jit(_scatter_prefill_paged,
-                                          donate_argnums=(0, 3, 4, 5),
-                                          **sharding_kw["scatter"])
-            self._activate = jax.jit(_activate_slots,
-                                     donate_argnums=(0, 1, 2),
-                                     **sharding_kw["activate"])
+            self._scatter_paged = instr(
+                jax.jit(_scatter_prefill_paged, donate_argnums=(0, 3, 4, 5),
+                        **sharding_kw["scatter"]),
+                "prefill_scatter_paged", TID_PREFILL)
+            self._activate = instr(
+                jax.jit(_activate_slots, donate_argnums=(0, 1, 2),
+                        **sharding_kw["activate"]),
+                "activate_slots", TID_PREFILL)
             self._chunk_steps: dict[int, Any] = {}   # num_pages -> jitted
-        self._slot_writer = jax.jit(_write_slots, donate_argnums=(0,),
-                                    **sharding_kw["slot_writer"])
+        self._slot_writer = instr(
+            jax.jit(_write_slots, donate_argnums=(0,),
+                    **sharding_kw["slot_writer"]),
+            "slot_writer", TID_EXPAND)
+        self._instr = instr        # late-built jits (chunk / block fns)
         self._decode_blocks: dict[Any, Any] = {}   # K (dense) or (K, P)
         #                                            (paged) -> jitted block
-        self._expand_jit = jax.jit(self._expand_effective,
-                                   **sharding_kw["expand"])
+        self._expand_jit = instr(
+            jax.jit(self._expand_effective, **sharding_kw["expand"]),
+            "mcnc_expand", TID_EXPAND)
         # dequantize-inside-jit expansion: the static qmeta arg describes
         # each path's (scheme, dtype, shape, block), so one trace serves
         # every bundle published with the same plan + quant settings
-        self._expand_q_jit = jax.jit(self._expand_effective_q,
-                                     static_argnums=1,
-                                     **sharding_kw["expand"])
-        self._legacy_decode_fn = (jax.jit(make_assembled_decode_step(bundle))
-                                  if legacy_decode else None)
+        self._expand_q_jit = instr(
+            jax.jit(self._expand_effective_q, static_argnums=1,
+                    **sharding_kw["expand"]),
+            "mcnc_expand_q", TID_EXPAND)
+        self._legacy_decode_fn = (
+            instr(jax.jit(make_assembled_decode_step(bundle)),
+                  "legacy_decode", TID_DECODE)
+            if legacy_decode else None)
         self._legacy_params: PyTree | None = None  # restack memo (legacy)
         self._legacy_keys: tuple | None = None
 
@@ -478,8 +562,15 @@ class ServeEngine:
         the sync/restack invariants tests and benchmarks assert on."""
         for name in ("decode_blocks", "decode_steps", "adapter_slot_writes",
                      "adapter_full_restacks", "tokens_generated",
-                     "prefill_chunks"):
+                     "prefill_chunks", "jit_compiles", "jit_dispatches"):
             self.metrics.counter(name)
+        # latency histograms derived from the lifecycle event log: declared
+        # up front so snapshot() / the Prometheus exposition always carry
+        # them (with zero counts before traffic), not only after a request
+        # happens to finish
+        for name in ("ttft_s", "itl_s", "queue_wait_s", "request_latency_s",
+                     "decode_block_s", "decode_step_s", "expansion_s"):
+            self.metrics.histogram(name)
         self.metrics.gauge("tokens_per_s")
         if self.pages is not None:
             for name in ("pages_in_use", "free_pages", "peak_pages_in_use",
@@ -546,9 +637,11 @@ class ServeEngine:
                 # the expanded leaves on the model axis
                 state = jax.device_put(state, self._repl_sh)
             t0 = time.perf_counter()
-            with self._rules():
-                eff = self._expand_jit(state)
-            jax.block_until_ready(eff)
+            with self.tracer.span("mcnc_expand", tid=TID_EXPAND,
+                                  task=task_id):
+                with self._rules():
+                    eff = self._expand_jit(state)
+                jax.block_until_ready(eff)
             self.metrics.histogram("expansion_s").observe(
                 time.perf_counter() - t0)
             self.metrics.counter("expansions").inc()
@@ -571,9 +664,11 @@ class ServeEngine:
             entry = {"q": qstate, "meta": art.qmeta}
             self.cache.put(task_id, bundle_hash, entry)
         t0 = time.perf_counter()
-        with self._rules():
-            eff = self._expand_q_jit(entry["q"], entry["meta"])
-        jax.block_until_ready(eff)
+        with self.tracer.span("mcnc_expand", tid=TID_EXPAND, task=task_id,
+                              quantized=True):
+            with self._rules():
+                eff = self._expand_q_jit(entry["q"], entry["meta"])
+            jax.block_until_ready(eff)
         self.metrics.histogram("expansion_s").observe(
             time.perf_counter() - t0)
         self.metrics.counter("expansions").inc()
@@ -603,7 +698,8 @@ class ServeEngine:
         decode block of `plan.decode_horizon` tokens over every slot.
         Returns requests finished during this step."""
         with self._rules():
-            return self._step_impl()
+            with self.tracer.span("engine_step", tid=TID_ENGINE):
+                return self._step_impl()
 
     def _step_impl(self) -> list[Request]:
         t_step = time.perf_counter()
@@ -634,23 +730,23 @@ class ServeEngine:
             self._slot_adapters[slot] = None
             freed.append(slot)
             req.t_finish = time.perf_counter()
+            self.events.emit(req.req_id, FINISH,
+                             tokens=len(req.generated))
             self.metrics.counter("requests_completed").inc()
-            self.metrics.histogram("request_latency_s").observe(
-                req.t_finish - req.t_submit)
+            self._observe_lifecycle(req.req_id)
         if freed and not self.legacy_decode:
             # zero the freed slots' adapter rows so the stacked buffer stays
             # bit-equal to a from-scratch restack (and an evicted expansion's
             # weights don't linger in device memory semantics-wise)
-            self._stacked = self._slot_writer(self._stacked,
-                                              self._zero_adapters,
-                                              np.asarray(freed, np.int32))
-            self._params_dirty = True
-            self.metrics.counter("adapter_slot_writes").inc(len(freed))
+            self._stack_write(self._zero_adapters,
+                              np.asarray(freed, np.int32))
         if freed and self.pages is not None:
             # free-on-finish: the slots' pages go back to the free list and
             # their table rows reset to the null page
-            for slot in freed:
-                self.pages.free_slot(slot)
+            with self.tracer.span("page_free", tid=TID_PAGES,
+                                  slots=len(freed)) as sp:
+                n = sum(len(self.pages.free_slot(slot)) for slot in freed)
+                sp.note(pages=n)
         if self.pages is not None:
             st = self.pages.stats()
             self.metrics.gauge("pages_in_use").set(st["pages_in_use"])
@@ -664,6 +760,19 @@ class ServeEngine:
         tok = self.metrics.counter("tokens_generated").value - tok0
         if tok:
             self.metrics.gauge("tokens_per_s").set(tok / max(dt, 1e-9))
+        if self.tracer.enabled:
+            # per-step counter tracks: batch occupancy, the compile /
+            # dispatch totals (so a trace shows WHEN compiles landed), and
+            # cumulative tokens — Perfetto renders each as a graph row
+            m = self.metrics
+            self.tracer.counter("slots",
+                                active=len(self.pool.active_slots()),
+                                waiting=len(self.scheduler.waiting))
+            self.tracer.counter("jit",
+                                compiles=m.counter("jit_compiles").value,
+                                dispatches=m.counter("jit_dispatches").value)
+            self.tracer.counter(
+                "tokens", generated=m.counter("tokens_generated").value)
         return finished
 
     def run_until_idle(self, max_steps: int = 100_000) -> list[Request]:
@@ -675,6 +784,41 @@ class ServeEngine:
                 return done
             done.extend(self.step())
         raise RuntimeError(f"engine did not drain in {max_steps} steps")
+
+    # ------------------------------------------------------------------
+    # Lifecycle-derived latency metrics (repro.obs.events).
+    # ------------------------------------------------------------------
+    def _observe_first_token(self, req: Request):
+        """Stamp the request's first delivered token and feed the event-
+        log-derived TTFT (submit -> first token) into the histogram."""
+        req.t_first_token = time.perf_counter()
+        ttft = self.events.summary(req.req_id)["ttft_s"]
+        if ttft is not None:
+            self.metrics.histogram("ttft_s").observe(ttft)
+
+    def _observe_lifecycle(self, req_id: int):
+        """Feed one finished request's event-log summary into the derived
+        histograms: end-to-end latency, queue wait, and every inter-token
+        gap (fused blocks deliver K tokens per sync, so a block contributes
+        its per-token amortized gap K times — see EventLog.summary)."""
+        s = self.events.summary(req_id)
+        if s["e2e_s"] is not None:
+            self.metrics.histogram("request_latency_s").observe(s["e2e_s"])
+        if s["queue_wait_s"] is not None:
+            self.metrics.histogram("queue_wait_s").observe(s["queue_wait_s"])
+        itl = self.metrics.histogram("itl_s")
+        for gap in s["itl_samples"]:
+            itl.observe(gap)
+
+    def _stack_write(self, eff: dict[str, Array], idx: np.ndarray):
+        """Incremental stacked-adapter write (span + write counter):
+        broadcast `eff` into the persistent per-slot stack at `idx` and
+        mark the decode params tree for relink."""
+        with self.tracer.span("adapter_stack", tid=TID_EXPAND,
+                              slots=int(idx.size)):
+            self._stacked = self._slot_writer(self._stacked, eff, idx)
+        self._params_dirty = True
+        self.metrics.counter("adapter_slot_writes").inc(int(idx.size))
 
     # ------------------------------------------------------------------
     def _rebuild_decode_params(self):
@@ -704,6 +848,14 @@ class ServeEngine:
         return params
 
     def _prefill_group(self, group: PrefillGroup, finished: list[Request]):
+        with self.tracer.span("prefill_group", tid=TID_PREFILL,
+                              task=group.task_id,
+                              batch=len(group.requests),
+                              prompt_len=group.prompt_len):
+            self._prefill_group_impl(group, finished)
+
+    def _prefill_group_impl(self, group: PrefillGroup,
+                            finished: list[Request]):
         key, eff = self.adapters_for(group.task_id)
         params = self._prefill_params(key, eff)
         # host-built arrays stay numpy (uncommitted): in mesh mode a
@@ -725,8 +877,11 @@ class ServeEngine:
             # whole-page scatter out of the (dense-computed) group cache
             rem = np.asarray(
                 [r.max_new_tokens - 1 for r in group.requests], np.int32)
-            for r in group.requests:
-                self.pages.ensure(r.slot, r.prompt_len)
+            with self.tracer.span("page_alloc", tid=TID_PAGES) as sp:
+                a0 = self.pages.allocations
+                for r in group.requests:
+                    self.pages.ensure(r.slot, r.prompt_len)
+                sp.note(pages=self.pages.allocations - a0)
             page_ids = np.asarray(
                 [pid for r in group.requests
                  for pid in self.pages.slot_pages(r.slot)], np.int32)
@@ -734,9 +889,7 @@ class ServeEngine:
              self._remaining) = self._scatter_paged(
                 self.kv, group_cache, page_ids, self._tokens, self._pos,
                 self._remaining, idx, first_dev, group.prompt_len, rem)
-            self._stacked = self._slot_writer(self._stacked, eff, idx)
-            self._params_dirty = True
-            self.metrics.counter("adapter_slot_writes").inc(len(group.slots))
+            self._stack_write(eff, idx)
         else:
             rem = np.asarray(
                 [r.max_new_tokens - 1 for r in group.requests], np.int32)
@@ -745,15 +898,13 @@ class ServeEngine:
                 self.kv, group_cache, self._tokens, self._pos,
                 self._remaining, idx, first_dev, group.prompt_len, rem)
             # incremental stacked-adapter write for the newly assigned slots
-            self._stacked = self._slot_writer(self._stacked, eff, idx)
-            self._params_dirty = True
-            self.metrics.counter("adapter_slot_writes").inc(len(group.slots))
+            self._stack_write(eff, idx)
         first = np.asarray(first_dev)
-        now = time.perf_counter()
         for req, tok in zip(group.requests, first):
             req.generated.append(int(tok))
-            req.t_first_token = now
-            self.metrics.histogram("ttft_s").observe(now - req.t_submit)
+            self.events.emit(req.req_id, PREFILL, tokens=1,
+                             prompt_len=req.prompt_len)
+            self._observe_first_token(req)
             if req.done:
                 finished.append(req)
             self._slot_adapters[req.slot] = (key, eff)
@@ -772,9 +923,10 @@ class ServeEngine:
         per chunk length; this memo bounds it per num_pages)."""
         fn = self._chunk_steps.get(num_pages)
         if fn is None:
-            fn = jax.jit(
+            fn = self._instr(jax.jit(
                 make_assembled_chunk_prefill_step(self.bundle, num_pages),
-                donate_argnums=(1,), **self._sharding_kw["chunk"])
+                donate_argnums=(1,), **self._sharding_kw["chunk"]),
+                f"chunk_prefill[p{num_pages}]", TID_PREFILL)
             self._chunk_steps[num_pages] = fn
         return fn
 
@@ -783,6 +935,13 @@ class ServeEngine:
         cache the piece at its slot's table row, and — on the final piece —
         activate the slot's device decode state and emit the request's
         first token (the chunk step's last-token logits)."""
+        with self.tracer.span("prefill_chunk", tid=TID_PREFILL,
+                              slot=chunk.slot, start=chunk.start,
+                              length=chunk.length, last=chunk.is_last):
+            self._chunk_prefill_impl(chunk, finished)
+
+    def _chunk_prefill_impl(self, chunk: ChunkPrefill,
+                            finished: list[Request]):
         req = chunk.request
         # pin the adapter expansion at the FIRST chunk: a hot-swap landing
         # mid-prompt must not split one request's K/V across two bundle
@@ -793,7 +952,10 @@ class ServeEngine:
         key, eff = self._slot_adapters[chunk.slot]
         params = self._prefill_params(key, eff)
         sidx = np.asarray([chunk.slot], np.int32)
-        self.pages.ensure(chunk.slot, chunk.start + chunk.length)
+        with self.tracer.span("page_alloc", tid=TID_PAGES) as sp:
+            a0 = self.pages.allocations
+            self.pages.ensure(chunk.slot, chunk.start + chunk.length)
+            sp.note(pages=self.pages.allocations - a0)
         num_pages = pages_for_tokens(chunk.start + chunk.length,
                                      self.page_size)
         tokens = np.asarray(
@@ -804,19 +966,20 @@ class ServeEngine:
         self.metrics.counter("prefill_chunks").inc()
         self.metrics.counter("prefill_tokens").inc(chunk.length)
         if not chunk.is_last:
+            # intermediate piece: cached K/V only, no token delivered yet
+            self.events.emit(req.req_id, PREFILL_CHUNK, tokens=0,
+                             start=chunk.start, length=chunk.length)
             return
         first_dev = jnp.argmax(logits, -1).astype(jnp.int32)       # (1,)
         rem = np.asarray([req.max_new_tokens - 1], np.int32)
         self._tokens, self._pos, self._remaining = self._activate(
             self._tokens, self._pos, self._remaining, sidx, first_dev,
             req.prompt_len, rem)
-        self._stacked = self._slot_writer(self._stacked, eff, sidx)
-        self._params_dirty = True
-        self.metrics.counter("adapter_slot_writes").inc()
+        self._stack_write(eff, sidx)
         req.generated.append(int(np.asarray(first_dev)[0]))
-        req.t_first_token = time.perf_counter()
-        self.metrics.histogram("ttft_s").observe(
-            req.t_first_token - req.t_submit)
+        self.events.emit(req.req_id, PREFILL_CHUNK, tokens=1,
+                         start=chunk.start, length=chunk.length)
+        self._observe_first_token(req)
         self.metrics.counter("tokens_generated").inc()
         if req.done:
             finished.append(req)
@@ -843,9 +1006,11 @@ class ServeEngine:
                     in_shardings=(self._decode_params_sh, self._kv_sh,
                                   vec, vec, vec),
                     out_shardings=(vec, self._kv_sh, vec, vec, vec))
-            fn = jax.jit(make_assembled_multi_decode_step(self.bundle, k,
-                                                          unroll=unroll),
-                         donate_argnums=(1, 2, 3, 4), **kw)
+            fn = self._instr(
+                jax.jit(make_assembled_multi_decode_step(self.bundle, k,
+                                                         unroll=unroll),
+                        donate_argnums=(1, 2, 3, 4), **kw),
+                f"decode_block[k{k}]", TID_DECODE)
             self._decode_blocks[k] = fn
         return fn
 
@@ -864,9 +1029,11 @@ class ServeEngine:
                     in_shardings=(self._decode_params_sh, self._kv_sh,
                                   vec, vec, vec, vec),
                     out_shardings=(vec, self._kv_sh, vec, vec, vec))
-            fn = jax.jit(make_assembled_multi_decode_step_paged(
-                self.bundle, k, num_pages, unroll=unroll),
-                donate_argnums=(1, 3, 4, 5), **kw)
+            fn = self._instr(
+                jax.jit(make_assembled_multi_decode_step_paged(
+                    self.bundle, k, num_pages, unroll=unroll),
+                    donate_argnums=(1, 3, 4, 5), **kw),
+                f"decode_block[k{k},p{num_pages}]", TID_DECODE)
             self._decode_blocks[(k, num_pages)] = fn
         return fn
 
@@ -898,18 +1065,27 @@ class ServeEngine:
             self._rebuild_decode_params()
             self._params_dirty = False
         t0 = time.perf_counter()
+        span_args = {"k": k, "batch": len(self.pool.active_slots())}
         if self.pages is not None:
-            num_pages = self._prepare_block_pages(k)
-            (tok_block, self.kv, self._tokens, self._pos,
-             self._remaining) = self._block_fn_paged(k, num_pages)(
-                self._decode_params, self.kv, self.pages.table,
-                self._tokens, self._pos, self._remaining)
-        else:
-            (tok_block, self.kv, self._tokens, self._pos,
-             self._remaining) = self._block_fn(k)(
-                self._decode_params, self.kv, self._tokens, self._pos,
-                self._remaining)
-        block = np.asarray(tok_block)          # the one sync per K tokens
+            with self.tracer.span("page_alloc", tid=TID_PAGES) as sp:
+                a0 = self.pages.allocations
+                num_pages = self._prepare_block_pages(k)
+                sp.note(pages=self.pages.allocations - a0)
+            span_args["live_pages"] = num_pages
+        # the span covers dispatch AND the one host sync: on a warm block
+        # its duration is essentially device time for K tokens
+        with self.tracer.span("decode_block", tid=TID_DECODE, **span_args):
+            if self.pages is not None:
+                (tok_block, self.kv, self._tokens, self._pos,
+                 self._remaining) = self._block_fn_paged(k, num_pages)(
+                    self._decode_params, self.kv, self.pages.table,
+                    self._tokens, self._pos, self._remaining)
+            else:
+                (tok_block, self.kv, self._tokens, self._pos,
+                 self._remaining) = self._block_fn(k)(
+                    self._decode_params, self.kv, self._tokens, self._pos,
+                    self._remaining)
+            block = np.asarray(tok_block)      # the one sync per K tokens
         dt = time.perf_counter() - t0
         harvested = 0
         for s in self.pool.active_slots():
@@ -924,6 +1100,7 @@ class ServeEngine:
             req.generated.extend(int(t) for t in block[:take, s])
             self.pool.pos[s] += take
             harvested += take
+            self.events.emit(req.req_id, DECODE_BLOCK, tokens=take, k=k)
             if req.done:
                 finished.append(req)
         self.metrics.counter("decode_blocks").inc()
@@ -985,6 +1162,7 @@ class ServeEngine:
             req = self.pool.requests[s]
             req.generated.append(int(nxt[s]))
             self.pool.pos[s] += 1
+            self.events.emit(req.req_id, DECODE_BLOCK, tokens=1, k=1)
             if req.done:
                 finished.append(req)
         self.metrics.counter("decode_blocks").inc()

@@ -66,19 +66,39 @@ class Histogram:
         return self.sum / self.count if self.count else 0.0
 
     def percentile(self, p: float) -> float:
-        """p in [0, 100]. Linear interpolation inside the winning bucket."""
+        """p in [0, 100]. Linear interpolation inside the winning bucket,
+        clamped to the observed [min, max].
+
+        The interpolation endpoints are the winning bucket's bounds tightened
+        by the exact min/max: the first bucket's lower edge is ``min`` (NOT
+        0.0 — flooring there invented mass for distributions with negative
+        observations, and even for positive ones claimed density below the
+        smallest sample), the overflow bucket's upper edge is ``max``, and
+        the final clamp keeps the interpolated value inside [min, max] when a
+        sparse bucket's nominal bounds stick out past the data."""
         if not self.count:
             return 0.0
         target = p / 100.0 * self.count
         seen = 0
         for i, c in enumerate(self.counts):
             if seen + c >= target and c:
-                lo = self.bounds[i - 1] if i else max(self.min, 0.0)
+                lo = self.bounds[i - 1] if i else self.min
                 hi = self.bounds[i] if i < len(self.bounds) else self.max
                 frac = (target - seen) / c
-                return lo + (hi - lo) * frac
+                return min(max(lo + (hi - lo) * frac, self.min), self.max)
             seen += c
         return self.max
+
+    def cumulative_buckets(self) -> list[tuple[float, int]]:
+        """(upper_bound, cumulative_count) per configured bucket — the
+        Prometheus exposition series (the +Inf bucket, == count, is the
+        renderer's job). Cumulative, not per-bucket: ``le`` semantics."""
+        out: list[tuple[float, int]] = []
+        cum = 0
+        for bound, c in zip(self.bounds, self.counts):
+            cum += c
+            out.append((bound, cum))
+        return out
 
     def summary(self) -> dict:
         """Plain-dict digest (count/mean/min/max/p50/p95/p99) for
@@ -132,6 +152,16 @@ class Metrics:
         if name not in self._histograms:
             self._histograms[name] = Histogram(buckets)
         return self._histograms[name]
+
+    def instruments(self):
+        """Yield (name, kind, instrument) sorted by name — the structured
+        read path renderers (obs.prometheus) consume; snapshot() stays the
+        flat-dict one."""
+        by_kind = {"counter": self._counters, "gauge": self._gauges,
+                   "histogram": self._histograms}
+        for name in sorted(self._kinds):
+            kind = self._kinds[name]
+            yield name, kind, by_kind[kind][name]
 
     def snapshot(self) -> dict:
         """One flat {name: value-or-summary-dict} view of every

@@ -34,6 +34,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs.tracer import NULL_TRACER
+
 NULL_PAGE = 0
 
 
@@ -54,7 +56,7 @@ class PagePool:
     """
 
     def __init__(self, n_pages: int, page_size: int, n_slots: int,
-                 max_pages_per_slot: int):
+                 max_pages_per_slot: int, tracer=NULL_TRACER):
         if n_pages < 2:
             raise ValueError("need at least one allocatable page + null")
         if page_size < 1 or max_pages_per_slot < 1:
@@ -72,6 +74,11 @@ class PagePool:
         self.peak_pages_in_use = 0
         self.allocations = 0                # pages handed out, cumulative
         self.frees = 0                      # pages returned, cumulative
+        # optional repro.obs tracer: the pool samples its occupancy onto a
+        # Perfetto counter track whenever it actually changes (the engine
+        # wraps the alloc/free CALL SITES in spans; the counter series here
+        # is what makes page pressure readable as a graph over time)
+        self.tracer = tracer
 
     # ------------------------------------------------------------------
     @property
@@ -135,6 +142,9 @@ class PagePool:
         self.allocations += len(new)
         self.peak_pages_in_use = max(self.peak_pages_in_use,
                                      self.pages_in_use)
+        if new and self.tracer.enabled:
+            self.tracer.counter("kv_pages", in_use=self.pages_in_use,
+                                free=self.free_pages)
         return new
 
     def free_slot(self, slot: int) -> list[int]:
@@ -148,6 +158,9 @@ class PagePool:
         self._n_alloc[slot] = 0
         self._reserved[slot] = 0
         self.frees += len(freed)
+        if freed and self.tracer.enabled:
+            self.tracer.counter("kv_pages", in_use=self.pages_in_use,
+                                free=self.free_pages)
         return freed
 
     def stats(self) -> dict:

@@ -34,6 +34,7 @@ from repro.checkpoint.manager import (arrays_to_tree, read_artifact,
                                       read_artifact_quantized,
                                       tree_to_arrays, write_artifact)
 from repro.core.generator import GeneratorConfig
+from repro.obs.tracer import NULL_TRACER, TID_ENGINE
 
 PyTree = Any
 
@@ -76,9 +77,13 @@ class AdapterRegistry:
     of waiting for a hash miss.
     """
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, tracer=NULL_TRACER):
         self.root = root
         os.makedirs(root, exist_ok=True)
+        # optional repro.obs tracer: publish/load become spans (disk +
+        # hash-verify + decode time is real reconstruction cost — the part
+        # an expansion-cache hit saves besides the expansion itself)
+        self.tracer = tracer
         self._subscribers: list[Callable[[str], None]] = []
         # task_id -> (version, bundle_hash); lazily filled from manifests.
         self._index: dict[str, tuple[int, str]] = {}
@@ -122,13 +127,15 @@ class AdapterRegistry:
         task_dir = _safe_task_dir(self.root, task_id)
         version = self._index.get(task_id, (0, ""))[0] + 1
         arrays = tree_to_arrays(state)
-        manifest = write_artifact(task_dir, arrays, {
-            "task_id": task_id,
-            "version": version,
-            "generator": dataclasses.asdict(gen_cfg),
-            "adapter": adapter or {},
-            "metadata": metadata or {},
-        }, fmt=fmt, quant=quant, codec=codec)
+        with self.tracer.span("bundle_publish", tid=TID_ENGINE,
+                              task=task_id, version=version, quant=quant):
+            manifest = write_artifact(task_dir, arrays, {
+                "task_id": task_id,
+                "version": version,
+                "generator": dataclasses.asdict(gen_cfg),
+                "adapter": adapter or {},
+                "metadata": metadata or {},
+            }, fmt=fmt, quant=quant, codec=codec)
         self._index[task_id] = (version, manifest["hash"])
         self._notify(task_id)
         return AdapterBundle(task_id=task_id, version=version,
@@ -151,18 +158,20 @@ class AdapterRegistry:
         task_dir = _safe_task_dir(self.root, task_id)
         if not os.path.isdir(task_dir):
             raise KeyError(f"no bundle for task {task_id!r} in {self.root}")
-        if dequantize:
-            arrays, manifest = read_artifact(task_dir, verify=verify)
-            state, qstate, qmeta = arrays_to_tree(arrays), None, None
-        else:
-            tensors, manifest = read_artifact_quantized(task_dir,
-                                                        verify=verify)
-            state = None
-            qstate = {name.replace("|", "/"): qt.parts
-                      for name, qt in tensors.items()}
-            qmeta = tuple(sorted(
-                (name.replace("|", "/"), qt.meta)
-                for name, qt in tensors.items()))
+        with self.tracer.span("bundle_load", tid=TID_ENGINE, task=task_id,
+                              dequantize=dequantize):
+            if dequantize:
+                arrays, manifest = read_artifact(task_dir, verify=verify)
+                state, qstate, qmeta = arrays_to_tree(arrays), None, None
+            else:
+                tensors, manifest = read_artifact_quantized(task_dir,
+                                                            verify=verify)
+                state = None
+                qstate = {name.replace("|", "/"): qt.parts
+                          for name, qt in tensors.items()}
+                qmeta = tuple(sorted(
+                    (name.replace("|", "/"), qt.meta)
+                    for name, qt in tensors.items()))
         gen_cfg = GeneratorConfig(**manifest["generator"])
         bundle = AdapterBundle(
             task_id=task_id, version=int(manifest.get("version", 1)),

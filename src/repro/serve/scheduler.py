@@ -27,6 +27,7 @@ from collections import deque
 from enum import Enum
 from typing import Iterable
 
+from repro.obs.events import ADMITTED, QUEUED, SUBMIT
 from repro.serve.paged import pages_for_tokens
 
 
@@ -196,7 +197,8 @@ class Scheduler:
                  max_decode_horizon: int = 8,
                  interference_horizon: int | None = None,
                  max_prefill_group: int | None = None,
-                 page_pool=None, prefill_chunk: int | None = None):
+                 page_pool=None, prefill_chunk: int | None = None,
+                 event_log=None):
         if max_decode_horizon < 1:
             raise ValueError("max_decode_horizon must be >= 1")
         if max_prefill_group is not None and max_prefill_group < 1:
@@ -223,6 +225,11 @@ class Scheduler:
                                      else max(1, interference_horizon))
         self.waiting: deque[Request] = deque()
         self._ids = itertools.count()
+        # optional repro.obs.EventLog: the scheduler emits the lifecycle
+        # events it owns — submit (request minted), queued (entered the
+        # FIFO), admitted (won a slot + page reservation) — with the same
+        # timestamps queue-wait is later derived from. None = no logging.
+        self.event_log = event_log
 
     # ------------------------------------------------------------------
     def submit(self, task_id: str, prompt: Iterable[int],
@@ -256,7 +263,13 @@ class Scheduler:
                     f"{self.page_pool.capacity_pages})")
         req = Request(req_id=next(self._ids), task_id=task_id,
                       prompt=prompt, max_new_tokens=max_new_tokens)
+        if self.event_log is not None:
+            self.event_log.emit(req.req_id, SUBMIT, task=task_id,
+                                prompt_len=len(prompt),
+                                max_new_tokens=max_new_tokens)
         self.waiting.append(req)
+        if self.event_log is not None:
+            self.event_log.emit(req.req_id, QUEUED, depth=len(self.waiting))
         return req
 
     def has_work(self) -> bool:
@@ -300,6 +313,11 @@ class Scheduler:
             self.pool.assign(slot, req)
             if self.page_pool is not None:
                 self.page_pool.reserve(slot, need)
+            if self.event_log is not None:
+                self.event_log.emit(
+                    req.req_id, ADMITTED, slot=slot,
+                    reserved_pages=(need if self.page_pool is not None
+                                    else 0))
             if (self.prefill_chunk is not None
                     and req.prompt_len > self.prefill_chunk):
                 req.chunked = True

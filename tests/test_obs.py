@@ -1,0 +1,391 @@
+"""Observability layer: lifecycle event log (ordering invariants + derived
+latencies), Chrome-trace tracer (schema-checked via scripts/check_trace.py),
+Prometheus text exposition (golden file), and Histogram.percentile property
+tests against a sorted-list reference."""
+import bisect
+import importlib.util
+import json
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.obs import (ADMITTED, DECODE_BLOCK, FINISH, LIFECYCLE_ORDER,
+                       NULL_TRACER, PREFILL, PREFILL_CHUNK, QUEUED, SUBMIT,
+                       THREAD_NAMES, EVICT, EventLog, Tracer,
+                       render_prometheus)
+from repro.serve.metrics import DEFAULT_BUCKETS, Histogram, Metrics
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN = os.path.join(HERE, "golden", "prometheus_exposition.txt")
+
+
+def _load_check_trace():
+    spec = importlib.util.spec_from_file_location(
+        "check_trace", os.path.join(HERE, "..", "scripts", "check_trace.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+check_trace = _load_check_trace()
+
+
+def ticker(step=1.0, start=0.0):
+    """Deterministic monotonic clock: start, start+step, ..."""
+    state = {"t": start - step}
+
+    def clock():
+        state["t"] += step
+        return state["t"]
+    return clock
+
+
+# ---------------------------------------------------------------------------
+# EventLog: ordering invariants.
+# ---------------------------------------------------------------------------
+
+def emit_life(log, rid, *, chunks=0, blocks=2, terminal=FINISH):
+    """One legal request life; returns the log for chaining."""
+    log.emit(rid, SUBMIT, task="t", prompt_len=4, max_new_tokens=8)
+    log.emit(rid, QUEUED, depth=1)
+    log.emit(rid, ADMITTED, slot=0, reserved_pages=2)
+    if chunks:
+        for i in range(chunks):
+            log.emit(rid, PREFILL_CHUNK, tokens=int(i == chunks - 1),
+                     start=i * 8, length=8)
+    else:
+        log.emit(rid, PREFILL, tokens=1, prompt_len=4)
+    for _ in range(blocks):
+        log.emit(rid, DECODE_BLOCK, tokens=4, k=4)
+    if terminal:
+        log.emit(rid, terminal, tokens=1 + 4 * blocks)
+    return log
+
+
+def test_valid_lifecycles_pass_validation():
+    log = EventLog(clock=ticker())
+    emit_life(log, 0)
+    emit_life(log, 1, chunks=3)
+    emit_life(log, 2, blocks=0, terminal=EVICT)
+    assert log.validate_all(require_terminal=True) == []
+
+
+def test_monotone_timestamp_violation_detected():
+    t = iter([0.0, 1.0, 2.0, 3.0, 2.5, 4.0, 5.0])
+    log = EventLog(clock=lambda: next(t))
+    emit_life(log, 7, blocks=1)
+    assert any("backwards" in v for v in log.validate(7))
+
+
+def test_rank_order_violation_detected():
+    log = EventLog(clock=ticker())
+    log.emit(3, SUBMIT)
+    log.emit(3, DECODE_BLOCK, tokens=1)
+    log.emit(3, ADMITTED)          # rank went backwards
+    assert any("out of lifecycle order" in v for v in log.validate(3))
+
+
+def test_duplicate_non_repeatable_detected():
+    log = EventLog(clock=ticker())
+    log.emit(1, SUBMIT)
+    log.emit(1, SUBMIT)
+    assert any("duplicate" in v for v in log.validate(1))
+
+
+def test_exactly_one_terminal_event():
+    log = EventLog(clock=ticker())
+    emit_life(log, 0)
+    log.emit(0, FINISH)            # second terminal
+    vs = log.validate(0)
+    assert any("after terminal" in v for v in vs)
+    assert any("terminal events" in v for v in vs)
+    # repeatable events stay legal; unknown names are flagged
+    log.emit(5, SUBMIT)
+    log.emit(5, "teleported")
+    assert any("unknown event" in v for v in log.validate(5))
+
+
+def test_require_terminal_flags_unfinished():
+    log = EventLog(clock=ticker())
+    log.emit(0, SUBMIT)
+    log.emit(0, QUEUED)
+    assert log.validate_all() == []
+    assert any("no terminal" in v
+               for v in log.validate_all(require_terminal=True))
+
+
+def test_finished_logs_bounded_fifo():
+    log = EventLog(clock=ticker(), max_finished=2)
+    for rid in range(4):
+        emit_life(log, rid, blocks=0)
+    assert log.request_ids() == [2, 3]
+    assert log.events_for(0) == []
+
+
+# ---------------------------------------------------------------------------
+# EventLog: derived latencies.
+# ---------------------------------------------------------------------------
+
+def test_summary_derives_expected_latencies():
+    # submit@0 queued@1 admitted@2 prefill(1 tok)@3 block(4 tok)@4
+    # block(2 tok)@5 finish@6  (ticker: one second per event)
+    log = EventLog(clock=ticker())
+    log.emit(0, SUBMIT)
+    log.emit(0, QUEUED)
+    log.emit(0, ADMITTED)
+    log.emit(0, PREFILL, tokens=1)
+    log.emit(0, DECODE_BLOCK, tokens=4, k=4)
+    log.emit(0, DECODE_BLOCK, tokens=2, k=4)
+    log.emit(0, FINISH)
+    s = log.summary(0)
+    assert s["queue_wait_s"] == pytest.approx(2.0)
+    assert s["ttft_s"] == pytest.approx(3.0)
+    assert s["e2e_s"] == pytest.approx(6.0)
+    assert s["n_tokens"] == 7
+    # ITL: the 4-token block amortizes its 1s gap (0.25s x4), the 2-token
+    # block its 1s gap (0.5s x2); the prefill token has no prior delivery
+    assert s["itl_samples"] == pytest.approx([0.25] * 4 + [0.5] * 2)
+
+
+def test_summary_chunked_prefill_ttft_at_last_chunk():
+    log = EventLog(clock=ticker())
+    log.emit(0, SUBMIT)                              # t=0
+    log.emit(0, ADMITTED)                            # t=1
+    log.emit(0, PREFILL_CHUNK, tokens=0, start=0)    # t=2: no delivery
+    log.emit(0, PREFILL_CHUNK, tokens=0, start=8)    # t=3
+    log.emit(0, PREFILL_CHUNK, tokens=1, start=16)   # t=4: first token
+    log.emit(0, FINISH)                              # t=5
+    s = log.summary(0)
+    assert s["ttft_s"] == pytest.approx(4.0)
+    assert s["itl_samples"] == [] and s["n_tokens"] == 1
+
+
+def test_summary_underivable_fields_are_none():
+    log = EventLog(clock=ticker())
+    log.emit(0, SUBMIT)
+    s = log.summary(0)
+    assert s["queue_wait_s"] is None and s["ttft_s"] is None
+    assert s["e2e_s"] is None and s["itl_samples"] == []
+
+
+# ---------------------------------------------------------------------------
+# Tracer: Chrome trace-event schema.
+# ---------------------------------------------------------------------------
+
+def make_trace():
+    tr = Tracer(clock=ticker(0.5))
+    with tr.span("engine_step"):
+        with tr.span("decode_block", tid=2, k=8, batch=4) as sp:
+            sp.note(live_pages=3)
+        tr.instant("jit_compile", tid=2, fn="decode_block[k8]", variants=1)
+        tr.counter("kv_pages", in_use=12, free=4)
+    return tr
+
+
+def test_trace_schema_valid_and_spans_present():
+    doc = make_trace().to_chrome()
+    assert check_trace.validate_trace(
+        doc, require=["engine_step", "decode_block"]) == []
+    # metadata names every subsystem lane
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    named = {e["args"]["name"] for e in meta}
+    assert set(THREAD_NAMES.values()) <= named
+    assert doc["displayTimeUnit"] == "ms"
+
+
+def test_trace_span_timing_and_note_args():
+    doc = make_trace().to_chrome()
+    spans = {e["name"]: e for e in doc["traceEvents"] if e["ph"] == "X"}
+    block = spans["decode_block"]
+    # ticker(0.5): tracer t0=0.0; outer enter 0.5, inner enter 1.0, inner
+    # exit 1.5 -> ts=1.0s=1e6us, dur=0.5s=5e5us; note() args landed
+    assert block["ts"] == pytest.approx(1.0e6)
+    assert block["dur"] == pytest.approx(0.5e6)
+    assert block["args"] == {"k": 8, "batch": 4, "live_pages": 3}
+    # inner span nests inside the outer one on the timeline
+    outer = spans["engine_step"]
+    assert outer["ts"] <= block["ts"]
+    assert outer["ts"] + outer["dur"] >= block["ts"] + block["dur"]
+
+
+def test_trace_file_round_trip_passes_cli_checker(tmp_path):
+    path = str(tmp_path / "trace.json")
+    make_trace().save(path)
+    with open(path) as f:
+        doc = json.load(f)
+    assert check_trace.validate_trace(doc) == []
+
+
+def test_schema_checker_rejects_malformed():
+    bad = {"traceEvents": [
+        {"name": "x", "ph": "X", "pid": 1, "tid": 0, "ts": -1, "dur": "z"},
+        {"name": "c", "ph": "C", "pid": 1, "tid": 0, "ts": 0,
+         "args": {"v": "NaNish"}},
+        {"ph": "i", "pid": 1, "tid": 0, "ts": 0},
+    ]}
+    problems = check_trace.validate_trace(bad, require=["absent_span"])
+    assert len(problems) == 5  # bad ts, bad dur, bad counter, missing
+    #                            name, required span absent
+    assert check_trace.validate_trace({"events": []})
+
+
+def test_null_tracer_is_inert():
+    assert NULL_TRACER.enabled is False
+    before = len(NULL_TRACER.events)
+    with NULL_TRACER.span("x", tid=3, a=1) as sp:
+        sp.note(b=2)
+    NULL_TRACER.instant("y")
+    NULL_TRACER.counter("z", v=1)
+    assert len(NULL_TRACER.events) == before == 0
+    # the disabled span is one shared object — no per-call allocation
+    assert NULL_TRACER.span("a") is NULL_TRACER.span("b")
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition: golden file.
+# ---------------------------------------------------------------------------
+
+def golden_metrics() -> Metrics:
+    """Deterministic registry covering all three instrument kinds, an
+    empty histogram, and a small-bucket histogram."""
+    m = Metrics()
+    m.counter("tokens_generated").inc(1234)
+    m.counter("requests_completed").inc(7)
+    m.gauge("tokens_per_s").set(512.5)
+    m.gauge("active_slots").set(3)
+    h = m.histogram("decode_step_s")
+    for v in (2e-4, 3e-4, 1.5e-3, 1.6e-3, 0.02):
+        h.observe(v)
+    m.histogram("ttft_s")               # declared, no observations
+    small = m.histogram("queue_depth", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 3.0, 9.0):
+        small.observe(v)
+    return m
+
+
+def test_prometheus_exposition_matches_golden():
+    text = render_prometheus(golden_metrics())
+    if not os.path.exists(GOLDEN):      # pragma: no cover - regen path
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            f.write(text)
+        pytest.fail(f"golden file was missing; wrote {GOLDEN} — rerun")
+    with open(GOLDEN) as f:
+        assert text == f.read()
+
+
+def test_prometheus_histogram_series_cumulative_and_closed():
+    text = render_prometheus(golden_metrics())
+    lines = [ln for ln in text.splitlines()
+             if ln.startswith("repro_serve_queue_depth_bucket")]
+    # cumulative counts over bounds 1/2/4 for samples 0.5,1.5,3.0,9.0
+    assert lines == [
+        'repro_serve_queue_depth_bucket{le="1"} 1',
+        'repro_serve_queue_depth_bucket{le="2"} 2',
+        'repro_serve_queue_depth_bucket{le="4"} 3',
+        'repro_serve_queue_depth_bucket{le="+Inf"} 4',
+    ]
+    assert "repro_serve_queue_depth_sum 14" in text
+    assert "repro_serve_queue_depth_count 4" in text
+    # counters carry the conventional _total suffix; empty histograms
+    # still expose their full (all-zero) series
+    assert "repro_serve_tokens_generated_total 1234" in text
+    assert 'repro_serve_ttft_s_bucket{le="+Inf"} 0' in text
+
+
+def test_prometheus_all_series_parse_as_numbers():
+    for ln in render_prometheus(golden_metrics()).splitlines():
+        if ln.startswith("#") or not ln:
+            continue
+        val = ln.rsplit(" ", 1)[1]
+        assert val in ("+Inf", "-Inf", "NaN") or float(val) is not None
+
+
+# ---------------------------------------------------------------------------
+# Histogram.percentile: edge cases + property tests vs sorted reference.
+# ---------------------------------------------------------------------------
+
+def test_percentile_negative_observations_not_floored_at_zero():
+    h = Histogram()
+    for v in (-5.0, -1.0):
+        h.observe(v)
+    # pre-fix, the i==0 branch floored lo at 0.0 and reported p50 >= 0 —
+    # mass the distribution does not have
+    assert -5.0 <= h.percentile(50) <= -1.0
+    assert h.percentile(0) == -5.0 and h.percentile(100) == -1.0
+
+
+def test_percentile_clamped_to_observed_range():
+    h = Histogram()
+    h.observe(0.42)
+    for p in (0, 1, 50, 99, 100):
+        assert h.percentile(p) == 0.42
+    assert h.percentile(50) == h.min == h.max
+
+
+def test_percentile_empty_histogram_is_zero():
+    assert Histogram().percentile(50) == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 64),
+       negative=st.booleans())
+def test_percentile_within_reference_bucket(seed, n, negative):
+    """For each p: the interpolated percentile must land inside the bucket
+    holding the sorted-list reference order statistic (tightened to the
+    observed [min, max]) and be monotone in p."""
+    rng = np.random.default_rng(seed)
+    # log-uniform over the default buckets' dynamic range, plus optional
+    # sign flips so the first-bucket (i == 0) branch sees negative mass
+    samples = 10.0 ** rng.uniform(-4.5, 2.5, n)
+    if negative:
+        samples = samples * rng.choice([-1.0, 1.0], n)
+    h = Histogram()
+    for v in samples:
+        h.observe(v)
+    srt = sorted(samples)
+    bounds = list(DEFAULT_BUCKETS)
+    prev = -math.inf
+    for p in (0.0, 1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0):
+        got = h.percentile(p)
+        assert h.min <= got <= h.max
+        assert got >= prev              # monotone in p
+        prev = got
+        # reference order statistic for target mass p/100*n
+        target = p / 100.0 * n
+        ref = srt[max(math.ceil(target), 1) - 1]
+        i = bisect.bisect_left(bounds, ref)
+        lo = max(bounds[i - 1] if i else h.min, h.min)
+        hi = min(bounds[i] if i < len(bounds) else h.max, h.max)
+        assert lo <= got <= hi or got == pytest.approx(ref)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 48))
+def test_cumulative_buckets_match_reference_counts(seed, n):
+    """cumulative_buckets() must agree with counting the samples directly
+    (le semantics: count of samples <= bound), and close at count."""
+    rng = np.random.default_rng(seed)
+    samples = 10.0 ** rng.uniform(-5, 3, n)
+    h = Histogram()
+    for v in samples:
+        h.observe(v)
+    for bound, cum in h.cumulative_buckets():
+        assert cum == int(np.sum(samples <= bound))
+    assert h.cumulative_buckets()[-1][1] <= h.count
+
+
+def test_metrics_instruments_iterates_all_kinds_sorted():
+    m = golden_metrics()
+    rows = list(m.instruments())
+    assert [r[0] for r in rows] == sorted(r[0] for r in rows)
+    kinds = {name: kind for name, kind, _ in rows}
+    assert kinds["tokens_generated"] == "counter"
+    assert kinds["tokens_per_s"] == "gauge"
+    assert kinds["decode_step_s"] == "histogram"
+    assert len(rows) == 7
