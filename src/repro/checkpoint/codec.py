@@ -251,6 +251,181 @@ def dequantize_jnp(parts: dict, meta: tuple):
 
 
 # ---------------------------------------------------------------------------
+# Device-layout rows codec (serving stacks).
+#
+# The wire codec above quantizes whole tensors for storage. The serving
+# engine needs a different granularity: its per-slot stacked adapter buffers
+# are written one SLOT at a time (incremental `.at[:, slot]` writes) and read
+# one LAYER at a time (lax.scan over the layer axis), so each leading-axis
+# row must be independently decodable — one scale (plane) per row, never a
+# tensor-global statistic that a single-slot write would invalidate. These
+# "rows" functions quantize every leading-axis row of an array on its own:
+# stacking rows, slicing rows, and concatenating rows all commute with the
+# codec. np/jnp twins mirror each other the same way the wire codec's do —
+# int8 bit-equal, nf4 equal on CPU — so host-side references and the jitted
+# serving path agree (tests/test_bundle_codec.py pins this).
+# ---------------------------------------------------------------------------
+
+def rows_meta(scheme: str, trailing_shape: tuple[int, ...],
+              block: int = NF4_BLOCK) -> tuple:
+    """Hashable static meta for the rows codec: (scheme, trailing_shape,
+    block). The leading row count is NOT part of the meta — it is carried by
+    the parts arrays themselves, which is what lets one meta describe the
+    same adapter leaf at every stacking depth (a (L, B, m, r) slot stack and
+    its (B, m, r) per-layer slice share a meta)."""
+    if scheme not in ("int8", "nf4"):
+        raise ValueError(f"rows codec supports int8/nf4, got {scheme!r}")
+    return (scheme, tuple(int(d) for d in trailing_shape),
+            int(block) if scheme == "nf4" else 0)
+
+
+def rows_part_shapes(meta: tuple, lead: tuple[int, ...]
+                     ) -> dict[str, tuple[tuple[int, ...], str]]:
+    """{"codes"/"scales": (shape, dtype_str)} for rows parts with the given
+    leading (row/stack) dims — the engine sizes its persistent coded stack
+    buffers from this. All-zero parts dequantize to exactly 0.0 under both
+    schemes (the scale factor is zero), which is what keeps freed-slot
+    zeroing a plain zero-write."""
+    scheme, trailing, block = meta
+    lead = tuple(int(d) for d in lead)
+    numel = int(np.prod(trailing, dtype=np.int64)) if trailing else 1
+    if scheme == "int8":
+        return {"codes": (lead + trailing, "int8"),
+                "scales": (lead, "float16")}
+    nblocks = max(1, -(-numel // block))
+    return {"codes": (lead + (nblocks * block // 2,), "uint8"),
+            "scales": (lead + (nblocks,), "float16")}
+
+
+def quantize_rows_np(arr: np.ndarray, scheme: str,
+                     block: int = NF4_BLOCK) -> dict[str, np.ndarray]:
+    """Quantize each leading-axis row of `arr` independently (numpy).
+
+    int8: {"codes" (L, *S) int8, "scales" (L,) fp16} — one symmetric scale
+    per row, fixed in fp16 BEFORE the codes (same grid contract as
+    quantize_int8). nf4: rows are flattened, zero-padded to a block
+    multiple, and block-quantized — {"codes" (L, pad//2) uint8 packed,
+    "scales" (L, nblocks) fp16}."""
+    a = np.asarray(arr, np.float32)
+    lead = a.shape[0]
+    flat = a.reshape(lead, -1)
+    if scheme == "int8":
+        amax = np.max(np.abs(flat), axis=1) if flat.shape[1] else \
+            np.zeros((lead,), np.float32)
+        scales = np.clip(amax / 127.0, 0.0, 6.0e4).astype(np.float16)
+        s = scales.astype(np.float32)
+        codes = np.where(
+            (s == 0.0)[:, None], np.int8(0),
+            np.clip(np.rint(flat / np.where(s == 0.0, 1.0, s)[:, None]),
+                    -127, 127).astype(np.int8))
+        return {"codes": codes.reshape(a.shape),
+                "scales": scales}
+    if scheme == "nf4":
+        n = flat.shape[1]
+        nblocks = max(1, -(-n // block))
+        pad = nblocks * block - n
+        if pad:
+            flat = np.concatenate(
+                [flat, np.zeros((lead, pad), np.float32)], axis=1)
+        blocks = flat.reshape(lead, nblocks, block)
+        absmax = np.clip(np.max(np.abs(blocks), axis=2),
+                         0.0, 6.0e4).astype(np.float16)
+        s = absmax.astype(np.float32)
+        norm = blocks / np.where(s == 0.0, 1.0, s)[:, :, None]
+        idx = np.argmin(np.abs(norm[..., None] - NF4_CODES[None, None, None]),
+                        axis=-1).astype(np.uint8).reshape(lead, -1)
+        packed = ((idx[:, 0::2] << 4) | idx[:, 1::2]).astype(np.uint8)
+        return {"codes": packed, "scales": absmax}
+    raise ValueError(f"rows codec supports int8/nf4, got {scheme!r}")
+
+
+def dequantize_rows_np(parts: dict[str, np.ndarray], meta: tuple
+                       ) -> np.ndarray:
+    """Numpy inverse of quantize_rows_np: (L, *meta.trailing) float32."""
+    scheme, trailing, block = meta
+    codes = np.asarray(parts["codes"])
+    scales = np.asarray(parts["scales"])
+    lead = codes.shape[0]
+    if scheme == "int8":
+        return (codes.astype(np.float32).reshape(lead, -1)
+                * scales.astype(np.float32)[:, None]
+                ).reshape((lead,) + tuple(trailing))
+    numel = int(np.prod(trailing, dtype=np.int64)) if trailing else 1
+    hi = (codes >> 4).astype(np.uint8)
+    lo = (codes & 0xF).astype(np.uint8)
+    idx = np.stack([hi, lo], axis=2).reshape(lead, -1)
+    vals = NF4_CODES[idx] * np.repeat(scales.astype(np.float32),
+                                      block, axis=1)
+    return vals[:, :numel].reshape((lead,) + tuple(trailing))
+
+
+def quantize_rows_jnp(arr, scheme: str, block: int = NF4_BLOCK) -> dict:
+    """jnp twin of quantize_rows_np for use inside a jitted computation
+    (the engine quantizes effective adapter leaves on device at admission).
+    Same math, same fp16 rounding points: int8 codes/scales are bit-equal
+    to the numpy path, so a host-side reference restack reproduces the
+    device-resident coded stacks exactly."""
+    import jax.numpy as jnp          # deferred: keep this module jax-free
+    a = jnp.asarray(arr, jnp.float32)
+    lead = a.shape[0]
+    flat = a.reshape(lead, -1)
+    if scheme == "int8":
+        amax = jnp.max(jnp.abs(flat), axis=1) if flat.shape[1] else \
+            jnp.zeros((lead,), jnp.float32)
+        scales = jnp.clip(amax / 127.0, 0.0, 6.0e4).astype(jnp.float16)
+        s = scales.astype(jnp.float32)
+        codes = jnp.where(
+            (s == 0.0)[:, None], jnp.int8(0),
+            jnp.clip(jnp.rint(flat / jnp.where(s == 0.0, 1.0, s)[:, None]),
+                     -127, 127).astype(jnp.int8))
+        return {"codes": codes.reshape(a.shape), "scales": scales}
+    if scheme == "nf4":
+        n = flat.shape[1]
+        nblocks = max(1, -(-n // block))
+        pad = nblocks * block - n
+        if pad:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((lead, pad), jnp.float32)], axis=1)
+        blocks = flat.reshape(lead, nblocks, block)
+        absmax = jnp.clip(jnp.max(jnp.abs(blocks), axis=2),
+                          0.0, 6.0e4).astype(jnp.float16)
+        s = absmax.astype(jnp.float32)
+        norm = blocks / jnp.where(s == 0.0, 1.0, s)[:, :, None]
+        idx = jnp.argmin(
+            jnp.abs(norm[..., None] - jnp.asarray(NF4_CODES)),
+            axis=-1).astype(jnp.uint8).reshape(lead, -1)
+        packed = ((idx[:, 0::2] << 4) | idx[:, 1::2]).astype(jnp.uint8)
+        return {"codes": packed, "scales": absmax}
+    raise ValueError(f"rows codec supports int8/nf4, got {scheme!r}")
+
+
+def dequantize_rows_jnp(parts: dict, meta: tuple):
+    """jnp inverse of the rows codec for use INSIDE a jitted computation.
+
+    int8 is exactly codes.f32 * scale.f32 per row — the same elementwise op
+    the fused adapter-apply kernels run in VMEM before their matmul, which
+    is why fused-dequant serving is bit-equal to dequantize-then-matmul
+    (token-identical by construction, not by luck)."""
+    import jax.numpy as jnp          # deferred: keep this module jax-free
+    scheme, trailing, block = meta
+    codes = parts["codes"]
+    scales = parts["scales"]
+    lead = codes.shape[0]
+    if scheme == "int8":
+        return (codes.astype(jnp.float32).reshape(lead, -1)
+                * scales.astype(jnp.float32)[:, None]
+                ).reshape((lead,) + tuple(trailing))
+    numel = int(np.prod(trailing, dtype=np.int64)) if trailing else 1
+    idx = jnp.stack([codes >> 4, codes & 0xF], axis=2).reshape(lead, -1)
+    # scale application via (rows, nblocks, block) broadcast, not
+    # jnp.repeat: same per-element code*scale multiply (bit-equal to the
+    # numpy path), one gather fewer on the decode hot path
+    vals = (jnp.asarray(NF4_CODES)[idx].reshape(lead, -1, block)
+            * scales.astype(jnp.float32)[:, :, None]).reshape(lead, -1)
+    return vals[:, :numel].reshape((lead,) + tuple(trailing))
+
+
+# ---------------------------------------------------------------------------
 # v2 payload encode/decode.
 # ---------------------------------------------------------------------------
 

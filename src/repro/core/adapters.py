@@ -107,23 +107,116 @@ def split_adapters(params: PyTree) -> tuple[PyTree, PyTree]:
     return unflatten_paths(base), (unflatten_paths(adap) if adap else {})
 
 
-def lora_apply(x: Array, a: Array | None, b: Array | None,
-               scale: float = 1.0) -> Array:
+@jax.tree_util.register_pytree_with_keys_class
+class GroupedAdapter:
+    """Explicit per-example (grouped) adapter factor — a pytree wrapper the
+    serving engine places in the decode params tree where a plain shared
+    LoRA factor would sit.
+
+    ``lora_apply`` used to GUESS grouped application from shapes
+    (``a.ndim == 3 and a.shape[0] == x.shape[0]``), which misfires whenever
+    a stacked base weight's leading dim happens to equal the batch dim (a
+    3-expert MoE factor in a 3-slot decode batch would silently be applied
+    per-example). The wrapper makes the mode explicit: a GroupedAdapter
+    factor is ALWAYS applied per batch row; a plain array is ALWAYS shared.
+
+    `parts` holds the factor's arrays with a leading slot/batch dim:
+    ``{"raw": (..., B, m, r)}`` for scheme "none" (fp32 stacks), or
+    ``{"codes", "scales"}`` in the rows-codec layout
+    (repro.checkpoint.codec.quantize_rows_np) for int8/nf4 coded stacks —
+    the device-resident representation the fused dequant-and-apply kernels
+    (repro.kernels.adapter_apply) consume without ever materializing fp32
+    in HBM. `shape` is the logical trailing shape of ONE adapter factor
+    ((m, r) for an A, (r, n) for a B); scheme/shape/block/use_pallas/
+    interpret are static aux data, so the wrapper rides jit boundaries,
+    lax.scan layer unstacking, and NamedSharding trees like any pytree
+    node while carrying its own dequant recipe."""
+
+    __slots__ = ("parts", "scheme", "shape", "block", "use_pallas",
+                 "interpret")
+
+    def __init__(self, parts: dict, *, scheme: str = "none",
+                 shape: tuple[int, ...] | None = None, block: int = 0,
+                 use_pallas: bool = False, interpret: bool = False):
+        self.parts = dict(parts)
+        self.scheme = scheme
+        self.shape = None if shape is None else tuple(int(d) for d in shape)
+        self.block = int(block)
+        self.use_pallas = bool(use_pallas)
+        self.interpret = bool(interpret)
+
+    @property
+    def meta(self) -> tuple:
+        """Rows-codec meta (scheme, trailing shape, block) for coded parts."""
+        return (self.scheme, self.shape, self.block)
+
+    def nbytes(self) -> int:
+        """Device bytes held by the factor's parts (coded, not fp32)."""
+        return sum(int(v.nbytes) for v in self.parts.values())
+
+    def tree_flatten_with_keys(self):
+        keys = tuple(sorted(self.parts))
+        children = [(jax.tree_util.DictKey(k), self.parts[k]) for k in keys]
+        return children, (keys, self.scheme, self.shape, self.block,
+                          self.use_pallas, self.interpret)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, scheme, shape, block, use_pallas, interpret = aux
+        return cls(dict(zip(keys, children)), scheme=scheme, shape=shape,
+                   block=block, use_pallas=use_pallas, interpret=interpret)
+
+    def map_parts(self, fn) -> "GroupedAdapter":
+        """A new wrapper with fn applied to every part array (sharding
+        trees, dtype casts) — aux data preserved."""
+        return GroupedAdapter({k: fn(k, v) for k, v in self.parts.items()},
+                              scheme=self.scheme, shape=self.shape,
+                              block=self.block, use_pallas=self.use_pallas,
+                              interpret=self.interpret)
+
+    def __repr__(self):
+        return (f"GroupedAdapter(scheme={self.scheme!r}, "
+                f"shape={self.shape}, parts={sorted(self.parts)})")
+
+
+def _grouped_apply(x: Array, a, b, scale: float) -> Array:
+    """Per-example application for GroupedAdapter or plain stacked factors:
+    a: (B, m, r), b: (B, r, n) against x: (B, ..., m)."""
+    if isinstance(a, GroupedAdapter) or isinstance(b, GroupedAdapter):
+        from repro.kernels.adapter_apply import grouped_dequant_lora_apply
+        return grouped_dequant_lora_apply(x, a, b, scale)
+    h = jnp.einsum("b...m,bmr->b...r", x, a.astype(x.dtype))
+    y = jnp.einsum("b...r,brn->b...n", h, b.astype(x.dtype))
+    return y * scale
+
+
+def lora_apply(x: Array, a, b, scale: float = 1.0, *,
+               per_example: bool | None = None) -> Array:
     """((x @ A) @ B) * scale, or 0 if no adapter. x: (..., m).
 
-    Per-example adapters (multi-tenant serving, repro.serve): when a/b carry
-    one extra leading dim matching x's batch dim — a: (B, m, r), b: (B, r, n)
-    against x: (B, ..., m) — each batch row gets its own adapter. This is how
-    mixed-task decode batches apply a different task's LoRA per slot without
-    merging (paper Table 4).
+    Application mode is EXPLICIT, never shape-guessed:
+
+    * a/b are :class:`GroupedAdapter` wrappers -> per-example (grouped)
+      application — each batch row applies its own slot's adapter, fused
+      with dequantization when the wrapper carries coded parts (multi-
+      tenant serving, repro.serve; paper Table 4's mixed-task batches);
+    * ``per_example=True`` -> grouped application of plain stacked arrays
+      a: (B, m, r) / b: (B, r, n) against x: (B, ..., m);
+    * otherwise -> the shared path ``einsum('...m,mr->...r')`` regardless
+      of leading dims (a stacked base weight whose lead happens to equal
+      the batch size is still a SHARED factor — the old heuristic
+      ``a.ndim == 3 and a.shape[0] == x.shape[0]`` got exactly that wrong).
     """
     if a is None or b is None:
         return jnp.zeros(x.shape[:-1] + (0,), x.dtype)  # caller guards
-    if a.ndim == 3 and x.ndim >= 2 and a.shape[-2] == x.shape[-1] \
-            and a.shape[0] == x.shape[0]:
-        h = jnp.einsum("b...m,bmr->b...r", x, a.astype(x.dtype))
-        y = jnp.einsum("b...r,brn->b...n", h, b.astype(x.dtype))
-        return y * scale
+    grouped = isinstance(a, GroupedAdapter) or isinstance(b, GroupedAdapter)
+    if per_example is None:
+        per_example = grouped
+    elif grouped and not per_example:
+        raise ValueError("GroupedAdapter factors are always per-example; "
+                         "per_example=False contradicts the wrapper")
+    if per_example:
+        return _grouped_apply(x, a, b, scale)
     h = jnp.einsum("...m,mr->...r", x, a.astype(x.dtype))
     y = jnp.einsum("...r,rn->...n", h, b.astype(x.dtype))
     return y * scale
@@ -132,7 +225,10 @@ def lora_apply(x: Array, a: Array | None, b: Array | None,
 def dense(x: Array, w: Array, lora_a: Array | None = None,
           lora_b: Array | None = None, scale: float = 1.0) -> Array:
     """y = x @ W (+ unmerged LoRA path). The universal linear used by every
-    model; adapters are applied unmerged (README.md §Serving walkthrough)."""
+    model; adapters are applied unmerged (README.md §Serving walkthrough).
+    In serving, lora_a/lora_b may arrive as :class:`GroupedAdapter`
+    wrappers (per-slot, possibly coded) — lora_apply dispatches on the
+    wrapper, so model code is oblivious to the stack representation."""
     y = jnp.einsum("...m,mn->...n", x, w.astype(x.dtype))
     if lora_a is not None and lora_b is not None:
         y = y + lora_apply(x, lora_a, lora_b, scale)

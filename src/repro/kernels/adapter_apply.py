@@ -1,0 +1,228 @@
+"""Fused grouped dequant-and-apply: serve quantized adapters without ever
+materializing fp32 factors in HBM.
+
+The serving engine keeps per-slot adapter stacks device-resident as int8/nf4
+code blocks + fp16 scale planes (repro.checkpoint.codec rows layout). The
+kernels here fuse the lossy inverse into the adapter matmul itself:
+
+    y = ((x @ deq(A_codes, A_scales)) @ deq(B_codes, B_scales)) * s
+
+so the decode hot path reads ~5-8x fewer adapter bytes per token than the
+fp32 stacks. Two launch shapes form the family:
+
+* ``grouped_dequant_lora_apply`` — the grouped variant: each batch row b
+  dequantizes and applies ITS OWN slot's coded factors (a_parts lead with
+  the batch dim) in one launch; grid = (B,), one program per row. This is
+  the mixed-task decode-batch path (paper Table 4) and replaces the plain
+  ``bmr/brn`` einsum dispatch in core/adapters.py::lora_apply.
+* ``dequant_lora_apply`` — the shared variant: one coded (m, r) / (r, n)
+  factor pair (rows lead 1) applied to every row of x. Implemented as the
+  grouped launch with batch 1, so both shapes share one kernel body.
+
+Correctness contract (tests/test_kernels.py sweeps both variants through the
+padding wrapper): the Pallas kernels must match kernels/ref.py::
+grouped_dequant_lora_ref — which dequantizes elementwise (exactly
+codec.dequantize_rows_jnp) and THEN matmuls — to fp32-reassociation
+tolerance: both sides feed identical dequantized values into the two GEMMs,
+so matmul reduction order is the only admissible difference. The
+dequant-then-matmul order is load-bearing — factoring the scale out of the
+matmul (``(x @ A) * s``) is NOT fp-equal to ``x @ (A * s)``. The engine's
+BIT-level int8 guarantee lives one level down, on the reference path
+itself: dequantizing int8 codes yields exactly the materialized fp32
+factors, so the reference over coded parts is bit-equal to the plain
+per-example einsums over deq(q(W)) stacks. On CPU hosts the engine serves
+through that reference (``use_pallas=False``), which is why
+quantized_stacks int8 decode is token-identical to the fp32-stack oracle
+arm by construction.
+
+Layout notes: int8 codes pad with zero rows/cols (zero codes dequantize to
+exactly 0.0, so padding cannot perturb the matmul); nf4 codes stay packed
+(two 4-bit indices per byte) and are unpacked in VMEM via shift/mask + a
+16-wide one-hot matmul against the NF4 codebook — tested in interpret mode
+(the CPU correctness path); on real TPUs the narrow uint8 unpack may want a
+layout pass, see docs/ARCHITECTURE.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.checkpoint.codec import NF4_CODES
+from repro.kernels import ref
+
+Array = jax.Array
+
+LANES = 128      # MXU/VPU lane width: last dim padding target
+SUBLANES = 8     # fp32 sublane count: second-to-last dim padding target
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _int8_grouped_kernel(scale, x_ref, ac_ref, as_ref, bc_ref, bs_ref,
+                         o_ref):
+    """One program = one batch row: dequantize this row's int8 factors in
+    VMEM, then chain the two adapter GEMMs. Blocks: x (1, T, m), a codes
+    (1, m, r) int8, a scale (1, 1) f32, b codes (1, r, n) int8, b scale
+    (1, 1) f32, out (1, T, n)."""
+    a = ac_ref[0].astype(jnp.float32) * as_ref[0, 0]
+    b = bc_ref[0].astype(jnp.float32) * bs_ref[0, 0]
+    h = jnp.dot(x_ref[0].astype(jnp.float32), a,
+                preferred_element_type=jnp.float32)
+    y = jnp.dot(h, b, preferred_element_type=jnp.float32)
+    o_ref[0] = (y * scale).astype(o_ref.dtype)
+
+
+def _nf4_decode(codes, scales, codebook, block, dims):
+    """Unpack + dequantize one row's packed nf4 factor inside the kernel.
+
+    codes: (1, P2) uint8 (two 4-bit indices per byte, high nibble first);
+    scales: (1, NB) f32 per-block absmax; codebook: (16, 1) f32 NF4_CODES
+    (an operand, not a captured constant — Pallas kernels can't close over
+    arrays). Returns the (rows_p, cols_p) zero-padded fp32 factor. The
+    codebook gather is a 16-wide one-hot matmul (P, 16) @ (16, 1) —
+    gathers by dynamic index don't map to the VPU, a tiny matmul does.
+    """
+    rows, cols, rows_p, cols_p = dims
+    p2 = codes.shape[1]
+    p = p2 * 2
+    hi = (codes >> 4).astype(jnp.int32)
+    lo = (codes & jnp.uint8(0xF)).astype(jnp.int32)
+    idx = jnp.stack([hi, lo], axis=2).reshape(p)         # interleaved (P,)
+    onehot = (idx[:, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (p, 16), 1))
+    vals = jnp.dot(onehot.astype(jnp.float32), codebook,
+                   preferred_element_type=jnp.float32)[:, 0]      # (P,)
+    sc = jnp.repeat(scales[0], block, total_repeat_length=p)
+    deq = (vals * sc)[: rows * cols].reshape(rows, cols)
+    return jnp.pad(deq, ((0, rows_p - rows), (0, cols_p - cols)))
+
+
+def _nf4_grouped_kernel(scale, block, a_dims, b_dims, cb_ref, x_ref, ac_ref,
+                        as_ref, bc_ref, bs_ref, o_ref):
+    """nf4 twin of _int8_grouped_kernel: codes arrive packed and are
+    unpacked/dequantized in VMEM before the same two GEMMs."""
+    a = _nf4_decode(ac_ref[...], as_ref[...], cb_ref[...], block, a_dims)
+    b = _nf4_decode(bc_ref[...], bs_ref[...], cb_ref[...], block, b_dims)
+    h = jnp.dot(x_ref[0].astype(jnp.float32), a,
+                preferred_element_type=jnp.float32)
+    y = jnp.dot(h, b, preferred_element_type=jnp.float32)
+    o_ref[0] = (y * scale).astype(o_ref.dtype)
+
+
+def _grouped_pallas(x3: Array, a_parts: dict, a_meta: tuple, b_parts: dict,
+                    b_meta: tuple, scale: float, interpret: bool) -> Array:
+    """Padded grouped launch. x3: (B, T, m); parts lead with B; metas are
+    rows-codec (scheme, trailing_shape, block) with matching schemes."""
+    bsz, t, m = x3.shape
+    scheme, _, block = a_meta
+    r, n = b_meta[1]
+    t_p = _round_up(t, SUBLANES)
+    m_p = _round_up(m, LANES)
+    r_p = _round_up(r, LANES)
+    n_p = _round_up(n, LANES)
+    x_p = jnp.pad(x3, ((0, 0), (0, t_p - t), (0, m_p - m)))
+    a_sc = a_parts["scales"].astype(jnp.float32)
+    b_sc = b_parts["scales"].astype(jnp.float32)
+    if scheme == "int8":
+        # zero codes dequantize to exactly 0.0 -> padding is inert
+        ac = jnp.pad(a_parts["codes"], ((0, 0), (0, m_p - m), (0, r_p - r)))
+        bc = jnp.pad(b_parts["codes"], ((0, 0), (0, r_p - r), (0, n_p - n)))
+        a_sc = a_sc.reshape(bsz, 1)
+        b_sc = b_sc.reshape(bsz, 1)
+        kern = functools.partial(_int8_grouped_kernel, float(scale))
+        in_specs = [
+            pl.BlockSpec((1, t_p, m_p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m_p, r_p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, r_p, n_p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ]
+        operands = (x_p, ac, a_sc, bc, b_sc)
+    else:  # nf4: codes stay packed; pad-to-tile happens inside the kernel
+        ac, bc = a_parts["codes"], b_parts["codes"]
+        cb = jnp.asarray(NF4_CODES, jnp.float32).reshape(16, 1)
+        kern = functools.partial(
+            _nf4_grouped_kernel, float(scale), block,
+            (m, r, m_p, r_p), (r, n, r_p, n_p))
+        in_specs = [
+            pl.BlockSpec((16, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, t_p, m_p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, ac.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((1, a_sc.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((1, bc.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((1, b_sc.shape[1]), lambda i: (i, 0)),
+        ]
+        operands = (cb, x_p, ac, a_sc, bc, b_sc)
+    out = pl.pallas_call(
+        kern,
+        grid=(bsz,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, t_p, n_p), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, t_p, n_p), x3.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*operands)
+    return out[:, :t, :n]
+
+
+def _as_factor(f) -> tuple[dict, tuple, bool, bool]:
+    """(parts, meta, use_pallas, interpret) from a GroupedAdapter wrapper or
+    a plain stacked array (treated as scheme "none")."""
+    from repro.core.adapters import GroupedAdapter
+    if isinstance(f, GroupedAdapter):
+        return f.parts, f.meta, f.use_pallas, f.interpret
+    return {"raw": f}, ("none", tuple(f.shape[1:]), 0), False, False
+
+
+def grouped_dequant_lora_apply(x: Array, a, b, scale: float = 1.0) -> Array:
+    """Fused grouped adapter apply: each batch row applies its own slot's
+    (possibly coded) factors. x: (B, ..., m); a/b: GroupedAdapter wrappers
+    (or plain (B, m, r)/(B, r, n) stacks). Returns (B, ..., n) in x.dtype.
+
+    Dispatch: scheme "none" (fp32 stacks) and CPU serving always take the
+    jnp reference — for coded factors that IS the gather-dequant-matmul
+    oracle, so fused-int8 decode is bit-equal to the materialized-fp32
+    path; ``use_pallas`` on the wrapper routes to the Pallas launch
+    (``interpret=True`` for the CPU correctness path).
+    """
+    a_parts, a_meta, a_up, a_ip = _as_factor(a)
+    b_parts, b_meta, b_up, b_ip = _as_factor(b)
+    use_pallas = a_up or b_up
+    interpret = a_ip or b_ip
+    if (not use_pallas or a_meta[0] == "none" or b_meta[0] == "none"
+            or a_meta[0] != b_meta[0]):
+        return ref.grouped_dequant_lora_ref(x, a_parts, a_meta, b_parts,
+                                            b_meta, scale)
+    bsz, m = x.shape[0], x.shape[-1]
+    n = b_meta[1][1]
+    x3 = x.reshape(bsz, -1, m)
+    out = _grouped_pallas(x3, a_parts, a_meta, b_parts, b_meta, scale,
+                          interpret)
+    return out.reshape(x.shape[:-1] + (n,))
+
+
+def dequant_lora_apply(x: Array, a_parts: dict, a_meta: tuple, b_parts: dict,
+                       b_meta: tuple, scale: float = 1.0, *,
+                       use_pallas: bool = True,
+                       interpret: bool = False) -> Array:
+    """Shared-adapter fused apply: ONE coded (m, r)/(r, n) factor pair (rows
+    lead 1, rows-codec layout) applied to every row of x: (..., m). Runs as
+    the grouped launch with batch 1; ``use_pallas=False`` is the jnp oracle
+    (and the CPU serving path)."""
+    if (not use_pallas or a_meta[0] == "none" or b_meta[0] == "none"
+            or a_meta[0] != b_meta[0]):
+        return ref.dequant_lora_ref(x, a_parts, a_meta, b_parts, b_meta,
+                                    scale)
+    m = x.shape[-1]
+    n = b_meta[1][1]
+    x3 = x.reshape(1, -1, m)
+    out = _grouped_pallas(x3, a_parts, a_meta, b_parts, b_meta, scale,
+                          interpret)
+    return out.reshape(x.shape[:-1] + (n,))

@@ -92,6 +92,50 @@ def paged_decode_attention_ref(q: Array, k_pages: Array, v_pages: Array,
     return out.astype(q.dtype)
 
 
+def _deq_rows(parts: dict, meta: tuple):
+    """Dequantize rows parts ({"raw"} passthrough or codec rows layout)."""
+    scheme, shape, block = meta
+    if scheme == "none":
+        return parts["raw"]
+    from repro.checkpoint.codec import dequantize_rows_jnp
+    return dequantize_rows_jnp(parts, (scheme, shape, block))
+
+
+def grouped_dequant_lora_ref(x: Array, a_parts: dict, a_meta: tuple,
+                             b_parts: dict, b_meta: tuple,
+                             scale: float) -> Array:
+    """Gather-dequant-matmul oracle for the grouped fused adapter apply —
+    the XLA serving path on CPU hosts and the correctness contract for the
+    Pallas kernels in adapter_apply.py.
+
+    x: (B, ..., m); a_parts/b_parts carry per-row coded adapter factors
+    with leading batch dim B (rows-codec layout, repro.checkpoint.codec) or
+    ``{"raw": (B, m, r)}`` fp32 stacks; metas are (scheme, trailing_shape,
+    block). Dequantizes each row's factors elementwise (exactly
+    ``dequantize_rows_jnp``) and THEN runs the per-example einsum — the
+    dequant-then-matmul order is the whole point: it makes the int8 fused
+    path bit-equal to serving from materialized fp32 stacks (same dequant
+    values into the same einsum), so token identity holds by construction.
+    """
+    a = _deq_rows(a_parts, a_meta)                    # (B, m, r) fp32
+    b = _deq_rows(b_parts, b_meta)                    # (B, r, n) fp32
+    h = jnp.einsum("b...m,bmr->b...r", x, a.astype(x.dtype))
+    y = jnp.einsum("b...r,brn->b...n", h, b.astype(x.dtype))
+    return y * scale
+
+
+def dequant_lora_ref(x: Array, a_parts: dict, a_meta: tuple, b_parts: dict,
+                     b_meta: tuple, scale: float) -> Array:
+    """Shared-adapter twin of grouped_dequant_lora_ref: one coded (m, r) /
+    (r, n) factor pair (leading rows dim 1) applied to every row of
+    x: (..., m)."""
+    a = _deq_rows(a_parts, a_meta)[0]                 # (m, r)
+    b = _deq_rows(b_parts, b_meta)[0]                 # (r, n)
+    h = jnp.einsum("...m,mr->...r", x, a.astype(x.dtype))
+    y = jnp.einsum("...r,rn->...n", h, b.astype(x.dtype))
+    return y * scale
+
+
 def mcnc_linear_ref(x: Array, w0: Array, alpha: Array, beta: Array,
                     w1: Array, w2: Array, w3: Array, freq: float) -> Array:
     """Fused consumer: y = x @ (w0 + reshape(expand(alpha, beta))[:m, :n]).

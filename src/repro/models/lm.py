@@ -441,7 +441,12 @@ def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
     MLA decode keeps a shared position). active: optional (B,) bool mask —
     inactive rows still flow through the batch (SPMD) but leave every cache
     row bit-identical, so finished/empty serving slots can ride inside a
-    fused multi-token decode block (repro.serve). Returns (logits
+    fused multi-token decode block (repro.serve). Adapter leaves in
+    `params` may be GroupedAdapter wrappers (per-slot fp32 or rows-coded
+    stacks): the layer scan unstacks their parts like any leaf, and
+    core.adapters.dense dispatches them to the grouped fused
+    (dequant-and-)apply (train.steps stages coded non-Pallas wrappers
+    once per decode block before calling in here). Returns (logits
     (B, vocab), updated cache)."""
     if jnp.ndim(pos) == 1 or active is not None:
         assert cfg.attn_type != "mla", "per-row decode positions need GQA"

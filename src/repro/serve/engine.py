@@ -61,7 +61,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.checkpoint.codec import dequantize_jnp
+from repro.checkpoint.codec import (dequantize_jnp, dequantize_rows_jnp,
+                                    quantize_rows_jnp, rows_meta,
+                                    rows_part_shapes)
+from repro.core.adapters import GroupedAdapter
 from repro.core.reparam import expand_tree, flatten_with_paths, \
     unflatten_paths
 from repro.kernels.ops import kernel_expand_fn
@@ -77,7 +80,10 @@ from repro.serve.registry import AdapterRegistry
 from repro.serve.scheduler import (ChunkPrefill, PrefillGroup, Request,
                                    Scheduler, SlotPool)
 from repro.sharding.rules import data_axes, sanitize_pspec, use_rules
-from repro.sharding.specs import (cache_pspecs, effective_adapter_pspecs,
+from repro.sharding.specs import (cache_pspecs,
+                                  coded_effective_adapter_pspecs,
+                                  coded_stacked_adapter_pspecs,
+                                  effective_adapter_pspecs,
                                   stacked_adapter_pspecs)
 from repro.train.steps import (TaskBundle, make_assembled_chunk_prefill_step,
                                make_assembled_decode_step,
@@ -96,13 +102,17 @@ def _adapter_paths(flat_base: dict[str, Array]) -> list[str]:
     return sorted(p for p in flat_base if ADAPTER_MARK in p)
 
 
-def _write_slots(stacked: dict[str, Array], eff: dict[str, Array],
-                 idx: Array) -> dict[str, Array]:
+def _write_slots(stacked: PyTree, eff: PyTree, idx: Array) -> PyTree:
     """Incremental stacked-adapter write: broadcast one task's effective
-    leaves (L, m, r) into the per-slot stack (L, n_slots, m, r) at `idx`.
-    Jitted with the stack donated — steady state never copies the pool."""
-    return {p: stacked[p].at[:, idx].set(eff[p][:, None].astype(
-        stacked[p].dtype)) for p in stacked}
+    leaves (L, ...) into the per-slot stack (L, n_slots, ...) at `idx`.
+    Jitted with the stack donated — steady state never copies the pool.
+    Tree-mapped so the same writer serves the fp32 stacks ({path: array})
+    and the quantized_stacks layout ({path: {"codes", "scales"}}) — codes
+    and scale planes are separate persistent buffers written in one
+    dispatch."""
+    return jax.tree.map(
+        lambda st, e: st.at[:, idx].set(e[:, None].astype(st.dtype)),
+        stacked, eff)
 
 
 def _scatter_prefill(kv: PyTree, group_cache: PyTree, tokens: Array,
@@ -262,6 +272,8 @@ class ServeEngine:
                  interference_horizon: int | None = None,
                  legacy_decode: bool = False,
                  quantized_cache: bool = False,
+                 quantized_stacks: str | None = None,
+                 fused_apply: bool = True,
                  dense_cache: bool | None = None,
                  page_size: int = 16,
                  n_pages: int | None = None,
@@ -279,6 +291,13 @@ class ServeEngine:
         if mesh is not None and legacy_decode:
             raise ValueError("legacy_decode is a single-device benchmark "
                              "arm; it has no sharded variant")
+        if quantized_stacks not in (None, "int8", "nf4"):
+            raise ValueError(f"quantized_stacks must be None, 'int8' or "
+                             f"'nf4', got {quantized_stacks!r}")
+        if quantized_stacks is not None and legacy_decode:
+            raise ValueError("legacy_decode reproduces the PR-1 fp32 "
+                             "restack path; it has no quantized-stack "
+                             "variant")
         # dense_cache=None resolves to the paged KV pool whenever the model
         # supports it (dense GQA, no window); legacy_decode and the
         # remaining cache layouts (hybrid/rwkv recurrent state) keep the
@@ -328,6 +347,20 @@ class ServeEngine:
         # entry — the regime where adapter count, not traffic per adapter,
         # is the bottleneck.
         self.quantized_cache = quantized_cache
+        # quantized_stacks: hold the persistent PER-SLOT adapter stacks in
+        # their coded form — int8/nf4 code blocks + fp16 scale planes
+        # (checkpoint.codec rows layout), separate persistent donated
+        # buffers per part — and fuse dequantization into the adapter
+        # matmul of every decode block (kernels/adapter_apply.py). The
+        # decode hot path then reads ~5-8x fewer adapter bytes per token
+        # and never materializes fp32 adapter factors in device memory.
+        # fused_apply=False keeps the quantizer but stacks the REQUANTIZED
+        # fp32 leaves (deq(q(eff))) instead — the differential oracle arm
+        # the fused path is held token-identical against (int8 exactly,
+        # by construction: same dequant values into the same matmuls).
+        self.quantized_stacks = quantized_stacks
+        self.fused_apply = fused_apply
+        self._coded_stacks = quantized_stacks is not None and fused_apply
         self.pool = SlotPool(n_slots, cache_cap)
         # paged KV memory control plane (None on the dense arms): the
         # default pool size gives capacity PARITY with the dense layout
@@ -366,6 +399,15 @@ class ServeEngine:
         self.base = base
         self._flat_base = flatten_with_paths(base)
         self._adapter_paths = _adapter_paths(self._flat_base)
+        # rows-codec meta per adapter path: one meta describes both the
+        # (L, ...) effective leaf the quantizer emits and the (L, slots,
+        # ...) stacked buffer (the row count is carried by the arrays).
+        # Computed before _setup_sharding — the coded-stack pspecs need the
+        # part shapes.
+        self._stack_meta = (
+            {p: rows_meta(quantized_stacks, self._flat_base[p].shape[1:])
+             for p in self._adapter_paths}
+            if quantized_stacks is not None else None)
         param_dtype = jnp.dtype(self.cfg.param_dtype)
         if dense_cache:
             self.kv = lm.init_cache(self.cfg, n_slots, cache_cap,
@@ -447,17 +489,60 @@ class ServeEngine:
         # hold the host-side reference so hot-swap/eviction never mutates an
         # in-flight slot, and so tests can rebuild the stack from scratch
         self._slot_adapters: list[tuple | None] = [None] * n_slots
-        self._zero_adapters = self._place_eff(
-            {p: jnp.zeros_like(self._flat_base[p])
-             for p in self._adapter_paths})
-        # persistent stacked adapter buffer {path: (L, n_slots, m, r)},
-        # updated incrementally via _write_slots — NEVER restacked wholesale
-        self._stacked = {
-            p: jnp.zeros(v.shape[:1] + (n_slots,) + v.shape[1:], v.dtype)
-            for p, v in ((p, self._flat_base[p])
-                         for p in self._adapter_paths)}
+        # coded parts per slot (quantized_stacks fused mode): the host-side
+        # reference _restack_from_scratch rebuilds the coded stacks from,
+        # mirroring _slot_adapters' role for the fp32 stacks
+        self._slot_qparts: list[dict | None] = [None] * n_slots
+        if self._coded_stacks:
+            # all-zero codes + scales dequantize to exactly 0.0 under both
+            # schemes, so freed-slot zeroing stays a plain zero-write
+            zeros = {
+                p: {part: jnp.zeros(shp, jnp.dtype(dt))
+                    for part, (shp, dt) in rows_part_shapes(
+                        self._stack_meta[p],
+                        self._flat_base[p].shape[:1]).items()}
+                for p in self._adapter_paths}
+            if mesh is not None:
+                zeros = jax.device_put(zeros, self._coded_eff_sh)
+            self._zero_adapters = zeros
+            # persistent CODED per-slot stacks {path: {"codes": (L, slots,
+            # ...), "scales": (L, slots[, nb])}} — code blocks and fp16
+            # scale planes as separate persistent donated buffers, updated
+            # incrementally via the same _write_slots writer
+            self._stacked = {
+                p: {part: jnp.zeros(shp, jnp.dtype(dt))
+                    for part, (shp, dt) in rows_part_shapes(
+                        self._stack_meta[p],
+                        self._flat_base[p].shape[:1]
+                        + (n_slots,)).items()}
+                for p in self._adapter_paths}
+        else:
+            self._zero_adapters = self._place_eff(
+                {p: jnp.zeros_like(self._flat_base[p])
+                 for p in self._adapter_paths})
+            # persistent stacked adapter buffer {path: (L, n_slots, m, r)},
+            # updated incrementally via _write_slots — NEVER restacked
+            # wholesale
+            self._stacked = {
+                p: jnp.zeros(v.shape[:1] + (n_slots,) + v.shape[1:],
+                             v.dtype)
+                for p, v in ((p, self._flat_base[p])
+                             for p in self._adapter_paths)}
         if mesh is not None:
             self._stacked = jax.device_put(self._stacked, self._stacked_sh)
+        self._adapter_stack_nbytes = sum(
+            int(leaf.nbytes) for leaf in jax.tree.leaves(self._stacked))
+        # on-device rows quantizer: eff -> (coded parts, requantized fp32
+        # leaves). BOTH quantized arms run it per admission — prefill must
+        # see the same deq(q(eff)) numerics decode will serve, whether
+        # decode then reads the codes (fused) or the requantized fp32
+        # leaves (oracle) — so the two arms are token-identical for int8
+        # by construction.
+        self._quant_jit = (
+            instr(jax.jit(self._quantize_effective, **sharding_kw["quant"]),
+                  "quantize_rows", TID_EXPAND)
+            if quantized_stacks is not None else None)
+        self._quant_memo: dict[tuple, tuple] = {}
         self._decode_params: PyTree = None
         self._params_dirty = False
         self._rebuild_decode_params()
@@ -465,6 +550,8 @@ class ServeEngine:
         self._assembled: dict[tuple, PyTree] = {}
 
         self._declare_metrics()
+        self.metrics.gauge("adapter_stack_bytes").set(
+            self._adapter_stack_nbytes)
 
     # ------------------------------------------------------------------
     # Mesh placement (tentpole: sharded serving).
@@ -477,7 +564,7 @@ class ServeEngine:
         explicit sharding kwargs for the hot-path jits. Single-device mode
         returns empty kwargs and touches nothing."""
         empty = {"scatter": {}, "slot_writer": {}, "expand": {},
-                 "activate": {}, "chunk": {}}
+                 "activate": {}, "chunk": {}, "quant": {}}
         if self.mesh is None:
             self._repl_sh = None
             return empty
@@ -520,12 +607,44 @@ class ServeEngine:
             p: named(st_pspecs[p], self._flat_base[p].shape[:1]
                      + (n_slots,) + self._flat_base[p].shape[1:])
             for p in self._adapter_paths}
-        # decode params tree = base overlaid with the stacked buffers
+        quant_kw = {}
+        if self.quantized_stacks is not None:
+            # one task's coded leaves (quantizer jit output, lead (L,)) and
+            # — in fused mode — the coded per-slot stacks (lead (L, slots)):
+            # codes slot-over-data like the fp32 stacks, scale planes
+            # replicated (sharding.specs has the rationale)
+            ceff = coded_effective_adapter_pspecs(self.bundle.base_specs,
+                                                  self.quantized_stacks)
+            cst = coded_stacked_adapter_pspecs(self.bundle.base_specs,
+                                               self.quantized_stacks, dp=dp)
+            self._coded_eff_sh = {
+                p: {part: named(ceff[p][part], shp)
+                    for part, (shp, _) in rows_part_shapes(
+                        self._stack_meta[p],
+                        self._flat_base[p].shape[:1]).items()}
+                for p in self._adapter_paths}
+            if self._coded_stacks:
+                self._stacked_sh = {
+                    p: {part: named(cst[p][part], shp)
+                        for part, (shp, _) in rows_part_shapes(
+                            self._stack_meta[p],
+                            self._flat_base[p].shape[:1]
+                            + (n_slots,)).items()}
+                    for p in self._adapter_paths}
+            quant_kw = {"out_shardings": (self._coded_eff_sh,
+                                          self._eff_sh)}
+        # decode params tree = base overlaid with the stacked buffers,
+        # each stacked leaf behind the same GroupedAdapter wrapper (same
+        # static aux) the live params carry, so in_shardings line up
         flat_sh = dict(self._base_sh)
-        flat_sh.update(self._stacked_sh)
+        for p in self._adapter_paths:
+            st = self._stacked_sh[p]
+            flat_sh[p] = self._make_wrapper(
+                p, st if self._coded_stacks else {"raw": st})
         self._decode_params_sh = unflatten_paths(flat_sh)
         vec = self._repl_sh
         return {
+            "quant": quant_kw,
             # donated buffers keep their placement across every step: the
             # out shardings repeat the canonical in shardings verbatim
             "scatter": {"out_shardings": (self._kv_sh, vec, vec, vec)},
@@ -572,6 +691,12 @@ class ServeEngine:
                      "decode_block_s", "decode_step_s", "expansion_s"):
             self.metrics.histogram(name)
         self.metrics.gauge("tokens_per_s")
+        # adapter residency: device bytes the persistent per-slot stacks
+        # hold (coded stacks shrink this 4-8x) and how many distinct tasks
+        # currently occupy slots — the capacity axis NOLA's many-adapters
+        # regime cares about
+        self.metrics.gauge("adapter_stack_bytes")
+        self.metrics.gauge("resident_tasks")
         if self.pages is not None:
             for name in ("pages_in_use", "free_pages", "peak_pages_in_use",
                          "kv_bytes_in_use"):
@@ -612,6 +737,47 @@ class ServeEngine:
         flat = {path: dequantize_jnp(qstate[path], meta)
                 for path, meta in qmeta}
         return self._expand_effective(unflatten_paths(flat))
+
+    def _quantize_effective(self, eff: dict[str, Array]
+                            ) -> tuple[dict, dict]:
+        """Rows-quantize one task's effective leaves on device
+        (quantized_stacks mode): {path: (L, ...)} fp32 -> (coded parts
+        {path: {"codes", "scales"}}, requantized fp32 leaves
+        {path: deq(q(eff))}). Prefill always assembles with the
+        REQUANTIZED leaves so the prompt's K/V and first token see exactly
+        the numerics decode will serve — fused decode dequantizes the same
+        codes, the oracle arm stacks these same fp32 leaves."""
+        qparts, eff_q = {}, {}
+        for p in self._adapter_paths:
+            qp = quantize_rows_jnp(eff[p], self.quantized_stacks)
+            qparts[p] = qp
+            eff_q[p] = dequantize_rows_jnp(qp, self._stack_meta[p]).astype(
+                self._flat_base[p].dtype)
+        return qparts, eff_q
+
+    def _quantized_leaves(self, key: tuple, eff: dict[str, Array]
+                          ) -> tuple[dict[str, Array], PyTree]:
+        """(prefill leaves, stack payload) for one admission. Identity off
+        quantized_stacks; otherwise runs the quantizer jit (memoized per
+        expansion identity, bounded like _assembled) and returns the
+        requantized fp32 leaves for prefill plus — depending on
+        fused_apply — the coded parts or those same fp32 leaves for the
+        per-slot stack write."""
+        if self.quantized_stacks is None:
+            return eff, eff
+        ck = (key[0], key[1], id(eff))
+        hit = self._quant_memo.get(ck)
+        if hit is None:
+            with self.tracer.span("quantize_rows", tid=TID_EXPAND,
+                                  task=key[0],
+                                  scheme=self.quantized_stacks):
+                with self._rules():
+                    hit = self._quant_jit(eff)
+            self._quant_memo[ck] = hit
+            while len(self._quant_memo) > self.pool.n_slots:
+                self._quant_memo.pop(next(iter(self._quant_memo)))
+        qparts, eff_q = hit
+        return eff_q, (qparts if self._coded_stacks else eff_q)
 
     def adapters_for(self, task_id: str) -> tuple[tuple, dict[str, Array]]:
         """Effective adapter leaves for the task's LIVE bundle.
@@ -728,6 +894,7 @@ class ServeEngine:
             # hot-swapped expansions stay pinned, defeating the cache byte
             # budget
             self._slot_adapters[slot] = None
+            self._slot_qparts[slot] = None
             freed.append(slot)
             req.t_finish = time.perf_counter()
             self.events.emit(req.req_id, FINISH,
@@ -756,6 +923,10 @@ class ServeEngine:
             self.metrics.gauge("kv_bytes_in_use").set(
                 st["pages_in_use"] * self._page_bytes)
         self.metrics.gauge("active_slots").set(len(self.pool.active_slots()))
+        self.metrics.gauge("adapter_stack_bytes").set(
+            self._adapter_stack_nbytes)
+        self.metrics.gauge("resident_tasks").set(
+            len({sa[0][0] for sa in self._slot_adapters if sa is not None}))
         dt = time.perf_counter() - t_step
         tok = self.metrics.counter("tokens_generated").value - tok0
         if tok:
@@ -821,12 +992,34 @@ class ServeEngine:
         self.metrics.counter("adapter_slot_writes").inc(int(idx.size))
 
     # ------------------------------------------------------------------
+    def _make_wrapper(self, path: str, parts: dict) -> GroupedAdapter:
+        """Wrap one stacked adapter leaf's parts for the decode params
+        tree. The GroupedAdapter marks the factor as per-example — each
+        batch row applies ITS slot's adapter — explicitly instead of via
+        lora_apply's old shape heuristic, and in quantized_stacks mode
+        carries the rows-codec dequant recipe the fused kernels consume.
+        Static aux only depends on engine config, so every rebuild
+        produces jit-cache-compatible trees (and the mesh sharding tree
+        built from the same wrapper lines up leaf-for-leaf)."""
+        if self._coded_stacks:
+            scheme, shape, block = self._stack_meta[path]
+            return GroupedAdapter(parts, scheme=scheme, shape=shape,
+                                  block=block,
+                                  use_pallas=self.bundle.use_pallas,
+                                  interpret=self.bundle.interpret)
+        return GroupedAdapter(
+            parts, scheme="none",
+            shape=tuple(self._flat_base[path].shape[1:]))
+
     def _rebuild_decode_params(self):
         """Re-link the decode params tree onto the current stacked buffers.
         Host-side dict surgery only (no device work); called when a slot
         write replaces buffer objects, never in steady-state decode."""
         flat = dict(self._flat_base)
-        flat.update(self._stacked)
+        for p in self._adapter_paths:
+            st = self._stacked[p]
+            flat[p] = self._make_wrapper(
+                p, st if self._coded_stacks else {"raw": st})
         self._decode_params = unflatten_paths(flat)
 
     def _prefill_params(self, key: tuple, eff: dict[str, Array]) -> PyTree:
@@ -857,6 +1050,9 @@ class ServeEngine:
     def _prefill_group_impl(self, group: PrefillGroup,
                             finished: list[Request]):
         key, eff = self.adapters_for(group.task_id)
+        # quantized_stacks: prefill with the requantized leaves, stack the
+        # coded parts (fused) or those same leaves (oracle)
+        eff, stack_eff = self._quantized_leaves(key, eff)
         params = self._prefill_params(key, eff)
         # host-built arrays stay numpy (uncommitted): in mesh mode a
         # jnp.asarray would commit them to device 0 and poison every jit
@@ -889,7 +1085,7 @@ class ServeEngine:
              self._remaining) = self._scatter_paged(
                 self.kv, group_cache, page_ids, self._tokens, self._pos,
                 self._remaining, idx, first_dev, group.prompt_len, rem)
-            self._stack_write(eff, idx)
+            self._stack_write(stack_eff, idx)
         else:
             rem = np.asarray(
                 [r.max_new_tokens - 1 for r in group.requests], np.int32)
@@ -898,7 +1094,7 @@ class ServeEngine:
                 self.kv, group_cache, self._tokens, self._pos,
                 self._remaining, idx, first_dev, group.prompt_len, rem)
             # incremental stacked-adapter write for the newly assigned slots
-            self._stack_write(eff, idx)
+            self._stack_write(stack_eff, idx)
         first = np.asarray(first_dev)
         for req, tok in zip(group.requests, first):
             req.generated.append(int(tok))
@@ -908,6 +1104,8 @@ class ServeEngine:
             if req.done:
                 finished.append(req)
             self._slot_adapters[req.slot] = (key, eff)
+            if self._coded_stacks:
+                self._slot_qparts[req.slot] = stack_eff
         self.metrics.counter("prefill_batches").inc()
         self.metrics.counter("prefill_tokens").inc(int(prompts.size))
         self.metrics.counter("tokens_generated").inc(len(group.requests))
@@ -948,7 +1146,11 @@ class ServeEngine:
         # versions (whole-prompt prefill is atomic at admission; chunked
         # prefill keeps that contract via the slot's pinned reference)
         if self._slot_adapters[chunk.slot] is None:
-            self._slot_adapters[chunk.slot] = self.adapters_for(req.task_id)
+            key, eff = self.adapters_for(req.task_id)
+            eff, stack_eff = self._quantized_leaves(key, eff)
+            self._slot_adapters[chunk.slot] = (key, eff)
+            if self._coded_stacks:
+                self._slot_qparts[chunk.slot] = stack_eff
         key, eff = self._slot_adapters[chunk.slot]
         params = self._prefill_params(key, eff)
         sidx = np.asarray([chunk.slot], np.int32)
@@ -975,7 +1177,8 @@ class ServeEngine:
         self._tokens, self._pos, self._remaining = self._activate(
             self._tokens, self._pos, self._remaining, sidx, first_dev,
             req.prompt_len, rem)
-        self._stack_write(eff, sidx)
+        self._stack_write(self._slot_qparts[chunk.slot]
+                          if self._coded_stacks else eff, sidx)
         req.generated.append(int(np.asarray(first_dev)[0]))
         self.events.emit(req.req_id, PREFILL_CHUNK, tokens=1,
                          start=chunk.start, length=chunk.length)
@@ -1075,16 +1278,25 @@ class ServeEngine:
         # the span covers dispatch AND the one host sync: on a warm block
         # its duration is essentially device time for K tokens
         with self.tracer.span("decode_block", tid=TID_DECODE, **span_args):
-            if self.pages is not None:
-                (tok_block, self.kv, self._tokens, self._pos,
-                 self._remaining) = self._block_fn_paged(k, num_pages)(
-                    self._decode_params, self.kv, self.pages.table,
-                    self._tokens, self._pos, self._remaining)
-            else:
-                (tok_block, self.kv, self._tokens, self._pos,
-                 self._remaining) = self._block_fn(k)(
-                    self._decode_params, self.kv, self._tokens, self._pos,
-                    self._remaining)
+            # the adapter_apply span annotates how this block applies its
+            # per-slot adapters (the work itself runs fused inside the
+            # block jit): scheme + fused flag + the resident stack bytes
+            # the block's reads are bounded by
+            with self.tracer.span(
+                    "adapter_apply", tid=TID_DECODE,
+                    scheme=self.quantized_stacks or "none",
+                    fused=self._coded_stacks,
+                    stack_bytes=self._adapter_stack_nbytes):
+                if self.pages is not None:
+                    (tok_block, self.kv, self._tokens, self._pos,
+                     self._remaining) = self._block_fn_paged(k, num_pages)(
+                        self._decode_params, self.kv, self.pages.table,
+                        self._tokens, self._pos, self._remaining)
+                else:
+                    (tok_block, self.kv, self._tokens, self._pos,
+                     self._remaining) = self._block_fn(k)(
+                        self._decode_params, self.kv, self._tokens,
+                        self._pos, self._remaining)
             block = np.asarray(tok_block)      # the one sync per K tokens
         dt = time.perf_counter() - t0
         harvested = 0
@@ -1123,16 +1335,34 @@ class ServeEngine:
         if keys == self._legacy_keys and self._legacy_params is not None:
             return self._legacy_params
         flat = dict(self._flat_base)
-        flat.update(self._restack_from_scratch())
+        for p, v in self._restack_from_scratch().items():
+            # explicit per-example marking: without it, a restacked
+            # (L, B, m, r) leaf would scan down to a plain (B, m, r) array
+            # and lora_apply would now apply it SHARED (the shape
+            # heuristic that used to guess "grouped" here is gone)
+            flat[p] = self._make_wrapper(p, {"raw": v})
         self._legacy_params = unflatten_paths(flat)
         self._legacy_keys = keys
         self.metrics.counter("adapter_full_restacks").inc()
         return self._legacy_params
 
-    def _restack_from_scratch(self) -> dict[str, Array]:
+    def _restack_from_scratch(self) -> dict[str, Any]:
         """Wholesale per-slot adapter stack from the host-side slot
-        references — the exact layout the incremental writer maintains."""
+        references — the exact layout the incremental writer maintains.
+        quantized_stacks fused mode restacks the CODED parts (from
+        _slot_qparts) so the oracle covers the codes and scale planes
+        bit-for-bit."""
         out = {}
+        if self._coded_stacks:
+            for path in self._adapter_paths:
+                per_slot = [qp[path] if qp is not None
+                            else self._zero_adapters[path]
+                            for qp in self._slot_qparts]
+                out[path] = {
+                    part: jnp.stack([ps[part] for ps in per_slot],
+                                    axis=1).astype(ref.dtype)
+                    for part, ref in self._stacked[path].items()}
+            return out
         for path in self._adapter_paths:
             per_slot = [sa[1][path] if sa else self._zero_adapters[path]
                         for sa in self._slot_adapters]
@@ -1153,9 +1383,12 @@ class ServeEngine:
             req = self.pool.requests[s]
             tokens[s] = req.generated[-1]
             pos[s] = self.pool.pos[s]
-        logits, self.kv = self._legacy_decode_fn(params, self.kv,
-                                                 jnp.asarray(tokens),
-                                                 jnp.asarray(pos))
+        with self.tracer.span("adapter_apply", tid=TID_DECODE,
+                              scheme="none", fused=False,
+                              stack_bytes=self._adapter_stack_nbytes):
+            logits, self.kv = self._legacy_decode_fn(params, self.kv,
+                                                     jnp.asarray(tokens),
+                                                     jnp.asarray(pos))
         nxt = np.asarray(jnp.argmax(logits, -1))
         dt = time.perf_counter() - t0
         for s in decode_slots:
@@ -1174,6 +1407,14 @@ class ServeEngine:
         self.metrics.gauge("decode_horizon").set(1)
 
     # ------------------------------------------------------------------
+    def adapter_stack_bytes(self) -> int:
+        """Device bytes the persistent per-slot adapter stacks hold — the
+        upper bound on adapter bytes a fused decode block reads per token.
+        fp32 mode: n_slots full-precision factor stacks; quantized_stacks
+        fused mode: the int8/nf4 code blocks + fp16 scale planes, ~4-8x
+        smaller (serve_bench's quantized-resident arm gates the ratio)."""
+        return self._adapter_stack_nbytes
+
     def kv_pool_bytes(self) -> int:
         """Device bytes the KV pool ALLOCATES (dense: n_slots x cache_cap
         rows, committed up front; paged: n_pages x page_size, of which only

@@ -203,6 +203,42 @@ def stacked_adapter_pspecs(base_specs: PyTree,
     return out
 
 
+def coded_effective_adapter_pspecs(base_specs: PyTree, scheme: str
+                                   ) -> dict[str, dict[str, P]]:
+    """Flat {adapter_path: {"codes"/"scales": PartitionSpec}} for ONE task's
+    rows-coded effective leaves (the engine's on-device quantizer output,
+    checkpoint.codec.quantize_rows_jnp layout, leading dim = layers L).
+
+    int8 codes keep the leaf's fp32 shape, so they inherit its spec
+    verbatim; nf4 codes pack/flatten the trailing dims, so no trailing spec
+    survives — they replicate. Scale planes are KBs and always replicate
+    ("replicated-safe": every data shard applies its own rows' scales
+    without a gather)."""
+    out = {}
+    for path, spec in effective_adapter_pspecs(base_specs).items():
+        codes = spec if scheme == "int8" else P()
+        out[path] = {"codes": codes, "scales": P()}
+    return out
+
+
+def coded_stacked_adapter_pspecs(base_specs: PyTree, scheme: str,
+                                 dp: tuple[str, ...] = ("data",)
+                                 ) -> dict[str, dict[str, P]]:
+    """Flat specs for the engine's persistent CODED per-slot adapter stacks
+    (quantized_stacks mode): per path, codes (L, n_slots, ...) and scale
+    planes (L, n_slots[, nblocks]). The slot dim (axis 1) shards over dp on
+    the codes — same slots-over-data alignment as the fp32 stacks, so the
+    fused grouped dequant-apply reads its row's codes shard-locally — and
+    int8 codes additionally keep the leaf's trailing spec (their shape IS
+    the fp32 stack shape). Scale planes replicate: (L, n_slots) fp16 is
+    bytes-sized and every shard needs its rows' scales anyway."""
+    out = {}
+    for path, spec in stacked_adapter_pspecs(base_specs, dp=dp).items():
+        codes = spec if scheme == "int8" else P(None, dp)
+        out[path] = {"codes": codes, "scales": P()}
+    return out
+
+
 def batch_pspecs(batch_specs: PyTree, dp: tuple[str, ...] = ("data",)
                  ) -> PyTree:
     """Input batches: shard dim 0 (batch) over dp when divisible."""

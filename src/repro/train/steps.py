@@ -24,8 +24,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import ArchSpec, ShapeSpec
-from repro.core.adapters import (AdapterConfig, init_adapters,
-                                 merge_adapters_into_params)
+from repro.core.adapters import (AdapterConfig, GroupedAdapter,
+                                 init_adapters, merge_adapters_into_params)
 from repro.core.baselines import (NolaConfig, expand_nola, init_nola_state,
                                   plan_nola, pranc_generator)
 from repro.core.generator import GeneratorConfig, init_generator
@@ -323,6 +323,71 @@ def make_assembled_decode_step(bundle: TaskBundle):
     return step
 
 
+def _stage_coded_adapters(params: PyTree) -> PyTree:
+    """Dequantize rows-coded GroupedAdapter leaves ONCE per decode block.
+
+    The persistent donated buffers (and everything the host ever sees) stay
+    coded; this staging is a jit-local scratch amortized over the block's K
+    tokens. Without it the XLA reference path re-runs the nf4 nibble-unpack
+    + codebook-gather soup per layer per scan step — hundreds of tiny ops a
+    block, which is exactly the overhead regime serve_bench measures (and
+    gates: the quantized-resident arm must stay within 5% of fp32 decode).
+    Pallas-enabled wrappers pass through untouched: the kernels dequantize
+    per tile in VMEM and never want a staged fp32 operand. The staged
+    values are bit-identical to per-apply dequant (same dequantize_rows_jnp
+    into the same einsums), so token identity is unaffected.
+    """
+    from repro.checkpoint.codec import dequantize_rows_jnp
+
+    is_wrapper = lambda x: isinstance(x, GroupedAdapter)
+    coded: list[GroupedAdapter] = []
+
+    def collect(leaf):
+        if (is_wrapper(leaf) and leaf.scheme != "none"
+                and not leaf.use_pallas):
+            coded.append(leaf)
+        return leaf
+
+    jax.tree.map(collect, params, is_leaf=is_wrapper)
+    if not coded:
+        return params
+
+    # Batch the dequant by (scheme, block, row numel): the rows codec packs
+    # each row over its FLATTENED trailing dims, so every leaf whose rows
+    # hold the same element count shares one codes/scales layout — one
+    # concat + one dequant per class instead of a nibble-unpack/gather/scale
+    # soup per leaf (the XLA:CPU ref path is op-dispatch-bound at serving
+    # shapes, so op count IS the cost).
+    classes: dict[tuple, list[int]] = {}
+    for i, leaf in enumerate(coded):
+        numel = 1
+        for d in leaf.shape:
+            numel *= int(d)
+        classes.setdefault((leaf.scheme, leaf.block, numel), []).append(i)
+
+    staged: dict[int, GroupedAdapter] = {}
+    for (scheme, block, numel), idxs in classes.items():
+        leads = [coded[i].parts["codes"].shape[:2] for i in idxs]
+        cat = {
+            part: jnp.concatenate(
+                [coded[i].parts[part].reshape(
+                    (l * s,) if scheme == "int8" and part == "scales"
+                    else (l * s, -1))
+                 for (l, s), i in zip(leads, idxs)], axis=0)
+            for part in coded[idxs[0]].parts}
+        raw = dequantize_rows_jnp(cat, (scheme, (numel,), block))
+        off = 0
+        for (l, s), i in zip(leads, idxs):
+            shape = coded[i].shape
+            staged[id(coded[i])] = GroupedAdapter(
+                {"raw": raw[off:off + l * s].reshape((l, s) + shape)},
+                scheme="none", shape=shape)
+            off += l * s
+
+    return jax.tree.map(lambda leaf: staged.get(id(leaf), leaf),
+                        params, is_leaf=is_wrapper)
+
+
 def make_assembled_multi_decode_step(bundle: TaskBundle, horizon: int,
                                      unroll: int = 1):
     """Fused `horizon`-token greedy decode block over pre-assembled params.
@@ -351,6 +416,15 @@ def make_assembled_multi_decode_step(bundle: TaskBundle, horizon: int,
     per-iteration overhead it can partially fuse away when the loop body is
     replicated (~20% per token at unroll=8), at the price of program size
     and compile time — callers should unroll only their hottest horizon.
+
+    Adapter leaves inside `params` may be core.adapters.GroupedAdapter
+    wrappers (per-slot stacks, fp32 or rows-coded — the engine's
+    quantized_stacks mode): the wrapper is a registered pytree, so it rides
+    this jit boundary and the model's per-layer lax.scan unstacking
+    untouched, and lora_apply dispatches each layer's slice to the fused
+    grouped (dequant-and-)apply. Coded non-Pallas wrappers are staged by
+    _stage_coded_adapters at block entry (jit-local scratch, amortized over
+    K tokens); the persistent buffers outside this jit are always coded.
     """
     if bundle.arch.kind != "lm":
         raise ValueError("multi-step decode serves decoder-only LMs")
@@ -359,6 +433,8 @@ def make_assembled_multi_decode_step(bundle: TaskBundle, horizon: int,
     cfg = bundle.model_cfg
 
     def step(params, cache, tokens, pos, remaining):
+        params = _stage_coded_adapters(params)
+
         def body(carry, _):
             cache, tokens, pos, remaining = carry
             active = remaining > 0
@@ -407,7 +483,8 @@ def make_assembled_multi_decode_step_paged(bundle: TaskBundle, horizon: int,
 
     Returns step(params, pool, page_table, tokens, pos, remaining) ->
     (tok_block (horizon, B) int32, pool, tokens, pos, remaining) with the
-    same masking/emission contract as the dense block (-1 = inactive row).
+    same masking/emission contract as the dense block (-1 = inactive row)
+    — including the GroupedAdapter (coded per-slot stacks) threading notes.
     """
     if bundle.arch.kind != "lm":
         raise ValueError("multi-step decode serves decoder-only LMs")
@@ -416,6 +493,8 @@ def make_assembled_multi_decode_step_paged(bundle: TaskBundle, horizon: int,
     cfg = bundle.model_cfg
 
     def step(params, pool, page_table, tokens, pos, remaining):
+        params = _stage_coded_adapters(params)
+
         def body(carry, _):
             pool, tokens, pos, remaining = carry
             active = remaining > 0

@@ -256,3 +256,116 @@ def test_v2_smaller_than_v1_on_gaussian_state(tmp_path):
     write_artifact(d1, arrays, fmt=1)
     write_artifact(d2, arrays, fmt=2, quant="int8")
     assert dir_bytes(d1) > 3 * dir_bytes(d2)
+
+
+# ---------------------------------------------------------------------------
+# Rows codec (per-row quantization for the engine's coded adapter stacks):
+# the device quantizer must be the SAME function as the host reference, so
+# a host-side restack reproduces device-resident coded stacks exactly and
+# the serve tests can use numpy oracles against jit output.
+# ---------------------------------------------------------------------------
+
+_ROWS_TRAILING = [(), (1,), (3,), (7, 5), (64,), (65,), (127,), (2, 33),
+                  (4, 16, 3)]   # exact / partial / sub-block nf4 tails
+
+
+def _rows_case(lead, trailing, seed, zero_row):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0, 0.5, (lead,) + trailing).astype(np.float32)
+    if zero_row:
+        a[0] = 0.0                      # freed-slot row: scale must be 0
+    return a
+
+
+@settings(max_examples=30, deadline=None)
+@given(lead=st.integers(1, 6), trailing=st.sampled_from(_ROWS_TRAILING),
+       seed=st.integers(0, 2**16), zero_row=st.booleans())
+def test_rows_int8_np_jnp_bit_equal(lead, trailing, seed, zero_row):
+    """int8 rows: numpy and jnp quantizers produce bit-identical parts, and
+    both dequantizers invert them bit-identically — the token-identity
+    contract for quantized_stacks="int8" serving."""
+    import jax.numpy as jnp
+    a = _rows_case(lead, trailing, seed, zero_row)
+    meta = codec.rows_meta("int8", trailing)
+    p_np = codec.quantize_rows_np(a, "int8")
+    p_j = {k: np.asarray(v) for k, v in
+           codec.quantize_rows_jnp(jnp.asarray(a), "int8").items()}
+    for k in ("codes", "scales"):
+        np.testing.assert_array_equal(p_np[k], p_j[k], err_msg=k)
+    d_np = codec.dequantize_rows_np(p_np, meta)
+    d_j = np.asarray(codec.dequantize_rows_jnp(
+        {k: jnp.asarray(v) for k, v in p_np.items()}, meta))
+    np.testing.assert_array_equal(d_np, d_j)
+    assert d_np.shape == a.shape and d_np.dtype == np.float32
+    # one fp16 symmetric scale per row: reconstruction is within half a
+    # quantization step (+ fp16 scale rounding) of the input, per element
+    s = p_np["scales"].astype(np.float32).reshape((lead,) + (1,) * len(trailing))
+    amax = np.abs(a).reshape(lead, -1).max(axis=1).reshape(s.shape)
+    assert np.all(np.abs(d_np - a) <= 0.5 * s + amax * 2.0**-10 + 1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(lead=st.integers(1, 6), trailing=st.sampled_from(_ROWS_TRAILING),
+       seed=st.integers(0, 2**16), zero_row=st.booleans())
+def test_rows_nf4_np_jnp_agree(lead, trailing, seed, zero_row):
+    """nf4 rows: scale planes are bit-equal across np/jnp; dequantized
+    values agree within the committed drift bound (argmin ties on the
+    codebook may break differently, bounded by a code gap per element).
+    Given the SAME parts, the two dequantizers are bit-equal on CPU."""
+    import jax.numpy as jnp
+    a = _rows_case(lead, trailing, seed, zero_row)
+    meta = codec.rows_meta("nf4", trailing)
+    p_np = codec.quantize_rows_np(a, "nf4")
+    p_j = {k: np.asarray(v) for k, v in
+           codec.quantize_rows_jnp(jnp.asarray(a), "nf4").items()}
+    np.testing.assert_array_equal(p_np["scales"], p_j["scales"])
+    d_np = codec.dequantize_rows_np(p_np, meta)
+    d_j = codec.dequantize_rows_np(p_j, meta)
+    gap = 0.30                      # > max adjacent NF4 codebook gap
+    bound = p_np["scales"].astype(np.float32).max() * gap + 1e-6
+    assert np.max(np.abs(d_np - d_j)) <= bound
+    # roundtrip drift: within half the largest code gap per block scale
+    blk_err = np.max(np.abs(d_np - a))
+    assert blk_err <= p_np["scales"].astype(np.float32).max() * 0.15 + 1e-3
+    same_parts_dev = np.asarray(codec.dequantize_rows_jnp(
+        {k: jnp.asarray(v) for k, v in p_np.items()}, meta))
+    np.testing.assert_array_equal(d_np, same_parts_dev)
+
+
+@settings(max_examples=25, deadline=None)
+@given(lead=st.integers(1, 5), slots=st.integers(1, 4),
+       trailing=st.sampled_from(_ROWS_TRAILING), scheme=st.sampled_from(
+           ["int8", "nf4"]))
+def test_rows_part_shapes_describe_quantizer_output(lead, slots, trailing,
+                                                    scheme):
+    """rows_part_shapes is the engine's buffer-sizing contract: for lead
+    (L,) it matches the quantizer's actual output shapes/dtypes, and for
+    lead (L, n_slots) it is exactly the same with a slot dim at axis 1 —
+    what makes `.at[:, slot].set(part[:, None])` writes well-formed."""
+    a = _rows_case(lead, trailing, 7, False)
+    meta = codec.rows_meta(scheme, trailing)
+    parts = codec.quantize_rows_np(a, scheme)
+    flat_shapes = codec.rows_part_shapes(meta, (lead,))
+    stack_shapes = codec.rows_part_shapes(meta, (lead, slots))
+    assert set(parts) == set(flat_shapes) == {"codes", "scales"}
+    for k, arr in parts.items():
+        shape, dt = flat_shapes[k]
+        assert arr.shape == shape and arr.dtype == np.dtype(dt), k
+        sshape, sdt = stack_shapes[k]
+        assert sshape == shape[:1] + (slots,) + shape[1:] and sdt == dt, k
+
+
+def test_rows_all_zero_parts_dequantize_to_zero():
+    """Freed-slot contract: zero-filled part buffers (the engine's slot
+    clear) dequantize to exactly 0.0 under both schemes and both paths."""
+    import jax.numpy as jnp
+    for scheme in ("int8", "nf4"):
+        meta = codec.rows_meta(scheme, (5, 3))
+        shapes = codec.rows_part_shapes(meta, (4,))
+        parts = {k: np.zeros(s, np.dtype(dt)) for k, (s, dt) in
+                 shapes.items()}
+        want = np.zeros((4, 5, 3), np.float32)
+        np.testing.assert_array_equal(
+            codec.dequantize_rows_np(parts, meta), want)
+        np.testing.assert_array_equal(np.asarray(codec.dequantize_rows_jnp(
+            {k: jnp.asarray(v) for k, v in parts.items()}, meta)), want)

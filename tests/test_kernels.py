@@ -265,3 +265,169 @@ def test_kernel_expand_fn_dispatch():
                                                         jnp.ones((3, 4)),
                                                         jnp.ones((3,)))),
                                rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fused grouped dequant-and-apply (kernels/adapter_apply.py): Pallas kernels
+# (interpret mode) vs the gather-dequant-matmul oracle in kernels/ref.py,
+# randomized (B, T, m, r, n) deliberately off the (8, 128) tiles so every
+# draw crosses the pad-then-slice seam — for nf4 also the packed-code unpack
+# against partial trailing blocks. int8 is held BIT-equal (the engine's
+# token-identity gate stands on it); nf4 within a pinned drift bound.
+# ---------------------------------------------------------------------------
+
+def _mk_grouped(seed: int, scheme: str):
+    from repro.checkpoint.codec import quantize_rows_np, rows_meta
+    from repro.core.adapters import GroupedAdapter
+    rng = np.random.default_rng(seed)
+    b = int(rng.integers(1, 5))
+    t = int(rng.integers(1, 7))
+    m = int(rng.integers(2, 50))
+    r = int(rng.integers(1, 9))
+    n = int(rng.integers(2, 50))
+    x = jnp.asarray(rng.standard_normal((b, t, m)), jnp.float32)
+    a = rng.standard_normal((b, m, r)).astype(np.float32)
+    bb = rng.standard_normal((b, r, n)).astype(np.float32)
+    if scheme == "none":
+        wa = GroupedAdapter({"raw": jnp.asarray(a)}, scheme="none",
+                            shape=(m, r))
+        wb = GroupedAdapter({"raw": jnp.asarray(bb)}, scheme="none",
+                            shape=(r, n))
+        return x, wa, wb, a, bb
+    qa = quantize_rows_np(a, scheme)
+    qb = quantize_rows_np(bb, scheme)
+    _, _, block = rows_meta(scheme, (m, r))
+    mk = lambda parts, shape: GroupedAdapter(
+        {k: jnp.asarray(v) for k, v in parts.items()}, scheme=scheme,
+        shape=shape, block=block, use_pallas=True, interpret=True)
+    return x, mk(qa, (m, r)), mk(qb, (r, n)), a, bb
+
+
+def _no_pallas(w):
+    """Same wrapper, jnp-reference dispatch (the CPU serving oracle)."""
+    out = w.map_parts(lambda k, v: v)
+    out.use_pallas = False
+    return out
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_grouped_dequant_apply_int8_pallas_matches_ref(seed):
+    """int8 Pallas kernel (interpret) vs the jnp oracle: same dequantized
+    values into the two GEMMs, so only matmul reduction order can differ —
+    pinned to fp32-reassociation tolerance. (The engine's BIT-level int8
+    guarantee lives on the reference path itself — next test.)"""
+    from repro.kernels.adapter_apply import grouped_dequant_lora_apply
+    x, wa, wb, _, _ = _mk_grouped(seed, "int8")
+    r = grouped_dequant_lora_apply(x, _no_pallas(wa), _no_pallas(wb), 0.7)
+    p = grouped_dequant_lora_apply(x, wa, wb, 0.7)
+    assert p.shape == r.shape and p.dtype == r.dtype
+    np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                               rtol=2e-5, atol=2e-6)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_grouped_ref_int8_bit_equal_to_materialized_fp32(seed):
+    """The engine's token-identity keystone: the jnp reference path over
+    CODED int8 factors is BIT-equal to materializing deq(q(W)) as fp32
+    stacks and running the plain per-example einsums — dequant-then-matmul
+    feeds identical values into identical contractions. This is why
+    quantized_stacks int8 serving is token-identical to the fp32-stack
+    oracle arm by construction."""
+    from repro.checkpoint.codec import dequantize_rows_np
+    from repro.core.adapters import GroupedAdapter
+    from repro.kernels.adapter_apply import grouped_dequant_lora_apply
+    x, wa, wb, _, _ = _mk_grouped(seed + 3, "int8")
+    coded = grouped_dequant_lora_apply(x, _no_pallas(wa), _no_pallas(wb),
+                                       0.7)
+    deq = lambda w: jnp.asarray(dequantize_rows_np(
+        {k: np.asarray(v) for k, v in w.parts.items()}, w.meta))
+    fa = GroupedAdapter({"raw": deq(wa)}, scheme="none", shape=wa.shape)
+    fb = GroupedAdapter({"raw": deq(wb)}, scheme="none", shape=wb.shape)
+    fp32 = grouped_dequant_lora_apply(x, fa, fb, 0.7)
+    np.testing.assert_array_equal(np.asarray(coded), np.asarray(fp32))
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_grouped_dequant_apply_nf4_within_drift_bound(seed):
+    from repro.kernels.adapter_apply import grouped_dequant_lora_apply
+    x, wa, wb, _, _ = _mk_grouped(seed + 17, "nf4")
+    r = grouped_dequant_lora_apply(x, _no_pallas(wa), _no_pallas(wb), 1.3)
+    p = grouped_dequant_lora_apply(x, wa, wb, 1.3)
+    # kernel-vs-oracle drift bound (both sides share the lossy codes, so
+    # this is pure kernel arithmetic): pinned tight
+    np.testing.assert_allclose(np.asarray(p), np.asarray(r),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=4, deadline=None)
+def test_grouped_fp32_wrapper_bit_equal_to_einsum(seed):
+    """scheme "none" wrappers (the engine's default fp32 stacks behind the
+    explicit per-example marker) reproduce the plain bmr/brn einsum path
+    bit-for-bit — the refactor cannot perturb existing fp32 serving."""
+    from repro.kernels.adapter_apply import grouped_dequant_lora_apply
+    x, wa, wb, a, bb = _mk_grouped(seed + 5, "none")
+    h = jnp.einsum("b...m,bmr->b...r", x, jnp.asarray(a))
+    want = jnp.einsum("b...r,brn->b...n", h, jnp.asarray(bb)) * 0.5
+    got = grouped_dequant_lora_apply(x, wa, wb, 0.5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=4, deadline=None)
+def test_shared_dequant_apply_pallas_matches_ref(seed):
+    """Shared (rows lead 1) fused apply: one coded factor pair applied to
+    every row, Pallas interpret vs the jnp oracle."""
+    from repro.checkpoint.codec import quantize_rows_np, rows_meta
+    from repro.kernels.adapter_apply import dequant_lora_apply
+    rng = np.random.default_rng(seed)
+    t, m, r, n = (int(rng.integers(1, 9)), int(rng.integers(2, 60)),
+                  int(rng.integers(1, 9)), int(rng.integers(2, 60)))
+    x = jnp.asarray(rng.standard_normal((t, m)), jnp.float32)
+    qa = {k: jnp.asarray(v) for k, v in quantize_rows_np(
+        rng.standard_normal((1, m, r)).astype(np.float32), "int8").items()}
+    qb = {k: jnp.asarray(v) for k, v in quantize_rows_np(
+        rng.standard_normal((1, r, n)).astype(np.float32), "int8").items()}
+    am, bm = rows_meta("int8", (m, r)), rows_meta("int8", (r, n))
+    ref_out = dequant_lora_apply(x, qa, am, qb, bm, 0.9, use_pallas=False)
+    pal = dequant_lora_apply(x, qa, am, qb, bm, 0.9, use_pallas=True,
+                             interpret=True)
+    assert pal.shape == (t, n)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref_out),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_lora_apply_mode_is_explicit_not_shape_guessed():
+    """The old heuristic (a.ndim == 3 and a.shape[0] == x.shape[0] =>
+    grouped) misapplied stacked SHARED factors whose leading dim happened
+    to equal the batch. Plain 3D arrays must now raise from the shared
+    einsum (wrong dims) or require per_example=True; GroupedAdapter always
+    means per-example; per_example=False on a wrapper is a contract
+    violation."""
+    from repro.core.adapters import GroupedAdapter, lora_apply
+    rng = np.random.default_rng(0)
+    b, m, r, n = 3, 8, 2, 6
+    x = jnp.asarray(rng.standard_normal((b, m)), jnp.float32)
+    a3 = jnp.asarray(rng.standard_normal((b, m, r)), jnp.float32)
+    b3 = jnp.asarray(rng.standard_normal((b, r, n)), jnp.float32)
+    # explicit grouped application of plain stacks
+    grouped = lora_apply(x, a3, b3, per_example=True)
+    h = jnp.einsum("bm,bmr->br", x, a3)
+    want = jnp.einsum("br,brn->bn", h, b3)
+    np.testing.assert_array_equal(np.asarray(grouped), np.asarray(want))
+    # wrapper implies grouped with NO flag; identical result
+    wa = GroupedAdapter({"raw": a3}, scheme="none", shape=(m, r))
+    wb = GroupedAdapter({"raw": b3}, scheme="none", shape=(r, n))
+    np.testing.assert_array_equal(np.asarray(lora_apply(x, wa, wb)),
+                                  np.asarray(want))
+    # contradiction rejected
+    with pytest.raises(ValueError):
+        lora_apply(x, wa, wb, per_example=False)
+    # the heuristic's failure case: a stacked shared factor with lead == B
+    # now goes down the SHARED einsum (and fails on dims, loudly) instead
+    # of silently applying per-example
+    with pytest.raises((TypeError, ValueError)):
+        lora_apply(x, a3, b3)          # no flag, no wrapper -> shared path

@@ -258,6 +258,9 @@ def golden_metrics() -> Metrics:
     m.counter("requests_completed").inc(7)
     m.gauge("tokens_per_s").set(512.5)
     m.gauge("active_slots").set(3)
+    # quantized adapter-stack residency gauges (serve.engine PR 7)
+    m.gauge("adapter_stack_bytes").set(109392)
+    m.gauge("resident_tasks").set(2)
     h = m.histogram("decode_step_s")
     for v in (2e-4, 3e-4, 1.5e-3, 1.6e-3, 0.02):
         h.observe(v)
@@ -388,4 +391,6 @@ def test_metrics_instruments_iterates_all_kinds_sorted():
     assert kinds["tokens_generated"] == "counter"
     assert kinds["tokens_per_s"] == "gauge"
     assert kinds["decode_step_s"] == "histogram"
-    assert len(rows) == 7
+    assert kinds["adapter_stack_bytes"] == "gauge"
+    assert kinds["resident_tasks"] == "gauge"
+    assert len(rows) == 9

@@ -1021,3 +1021,125 @@ def test_mesh_engine_rejects_legacy_decode(served, tmp_path):
     with pytest.raises(ValueError):
         ServeEngine(bundle, base, gen_ws, reg, legacy_decode=True,
                     mesh=FakeMesh())
+
+
+# ---------------------------------------------------------------------------
+# Quantized adapter stacks (PR 7): the engine keeps per-slot adapter stacks
+# CODED (int8/nf4 rows + fp16 scale planes) through decode and dequantizes
+# inside the adapter apply — fp32 stacks are never materialized. Contract:
+# the int8 fused path is token-identical to both the requantized-fp32 oracle
+# arm (fused_apply=False) and the plain fp32 engine on the bench trace;
+# nf4 fused matches ITS oracle exactly (same dequantized values into the
+# same einsum) and must complete every request; the zero-restack discipline
+# and the incremental-write oracle carry over to the coded buffers.
+# ---------------------------------------------------------------------------
+
+def _stacks_trace(**engine_kw):
+    return dict(QUANT_TRACE,
+                engine={**QUANT_TRACE["engine"], **engine_kw})
+
+
+def test_quantized_stacks_int8_fused_token_identical_to_fp32():
+    """int8 coded stacks + fused dequant-apply serve the SAME tokens as the
+    fp32 default engine AND as the oracle arm that serves the requantized
+    fp32 expansion from plain stacks — with identical scheduling counters
+    and zero full restacks (incremental coded writes only)."""
+    fp32 = run_trace(QUANT_TRACE)
+    fused = run_trace(_stacks_trace(quantized_stacks="int8"))
+    oracle = run_trace(_stacks_trace(quantized_stacks="int8",
+                                     fused_apply=False))
+    assert fused["tokens"] == oracle["tokens"] == fp32["tokens"]
+    assert fused["counters"] == oracle["counters"] == fp32["counters"]
+    assert fused["counters"]["adapter_full_restacks"] == 0
+    assert fused["counters"]["adapter_slot_writes"] > 0
+
+
+def test_quantized_stacks_nf4_fused_matches_oracle_and_completes():
+    """nf4 coded stacks: the fused apply dequantizes the exact values the
+    oracle arm stacks (eff_q = deq(q(eff))), so fused == oracle is an
+    identity even at 4 bits; vs fp32 the contract is only bounded drift,
+    asserted by benchmarks/serve_bench.py — here every request completes."""
+    fused = run_trace(_stacks_trace(quantized_stacks="nf4"))
+    oracle = run_trace(_stacks_trace(quantized_stacks="nf4",
+                                     fused_apply=False))
+    assert fused["tokens"] == oracle["tokens"]
+    assert fused["counters"] == oracle["counters"]
+    assert fused["counters"]["requests_completed"] == len(
+        QUANT_TRACE["requests"])
+    assert all(len(t) > 0 for t in fused["tokens"])
+
+
+def test_coded_stack_equals_reference_restack_after_churn(served, tmp_path):
+    """Coded twin of the incremental-stack oracle: after assign/release/
+    hot-swap churn, the persistent coded part buffers (codes AND scale
+    planes) are bit-equal to a from-scratch restack of the per-slot
+    quantized parts."""
+    bundle, base, gen_ws = served
+    reg = AdapterRegistry(str(tmp_path))
+    reg.publish("a", perturbed_state(bundle, 1), GEN)
+    reg.publish("b", perturbed_state(bundle, 2), GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=3, cache_cap=20,
+                      decode_horizon=4, quantized_stacks="int8")
+    for t, m in [("a", 3), ("b", 5), ("a", 2)]:
+        eng.submit(t, [1, 2, 3], m)
+    eng.run_until_idle()
+    reg.publish("a", perturbed_state(bundle, 5), GEN)
+    eng.submit("a", [4, 5, 6], 9)
+    eng.submit("b", [7, 8, 9], 9)
+    eng.step()
+    ref = eng.stacked_reference()
+    assert set(ref) == set(eng._stacked)
+    assert any(np.asarray(v).any()
+               for parts in ref.values() for v in parts.values())
+    for path, parts in ref.items():
+        assert set(parts) == {"codes", "scales"}
+        for part, want in parts.items():
+            np.testing.assert_array_equal(
+                np.asarray(eng._stacked[path][part]), np.asarray(want),
+                err_msg=f"{path}/{part}")
+    eng.run_until_idle()
+    for path, parts in eng.stacked_reference().items():
+        for part, want in parts.items():
+            np.testing.assert_array_equal(
+                np.asarray(eng._stacked[path][part]), np.asarray(want),
+                err_msg=f"{path}/{part}")
+    assert eng.metrics.snapshot()["adapter_full_restacks"] == 0
+
+
+def test_quantized_stacks_gauges_and_bytes_ratio(served, tmp_path):
+    """adapter_stack_bytes reports the persistent coded-buffer footprint:
+    int8 stacks hold ~4x fewer bytes than the fp32 stacks of an otherwise
+    identical engine, nf4 ~7x fewer; resident_tasks tracks distinct live
+    tasks and returns to 0 when the engine drains."""
+    bundle, base, gen_ws = served
+    sizes = {}
+    for scheme in (None, "int8", "nf4"):
+        reg = AdapterRegistry(str(tmp_path) + f"-{scheme}")
+        reg.publish("a", perturbed_state(bundle, 1), GEN)
+        eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=3,
+                          cache_cap=20, decode_horizon=4,
+                          quantized_stacks=scheme)
+        sizes[scheme] = eng.adapter_stack_bytes()
+        assert eng.metrics.snapshot()["adapter_stack_bytes"] == sizes[scheme]
+        eng.submit("a", [1, 2, 3], 9)   # outlives one step's horizon
+        eng.step()
+        assert eng.metrics.snapshot()["resident_tasks"] == 1
+        eng.run_until_idle()
+        assert eng.metrics.snapshot()["resident_tasks"] == 0
+    assert sizes["int8"] * 3.9 < sizes[None]
+    assert sizes["nf4"] * 7 < sizes[None]
+
+
+def test_mesh_engine_quantized_stacks_matches_single_device_deferred():
+    """Mesh x coded-stacks composition: int8 parts land sharded per
+    sharding.specs.coded_stacked_adapter_pspecs (slots over data), the
+    fused apply reads codes shard-locally, and tokens + counters match the
+    single-device coded engine exactly. (Multi-device CI lane.)"""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices (multi-device CI lane)")
+    from repro.launch.mesh import make_serve_mesh
+    trace = _stacks_trace(quantized_stacks="int8")
+    single = run_trace(trace)
+    sharded = run_trace(trace, mesh=make_serve_mesh("2x4"))
+    assert sharded["tokens"] == single["tokens"]
+    assert sharded["counters"] == single["counters"]
