@@ -3,18 +3,19 @@
 # and a Prometheus text-exposition renderer over serve.metrics.Metrics
 # (obs/prometheus.py). Pure python, no jax imports — the engine threads
 # these through the serving stack; docs/OBSERVABILITY.md is the spec.
-from repro.obs.events import (ADMITTED, DECODE_BLOCK, EVICT, FINISH,
-                              LIFECYCLE_ORDER, PREFILL, PREFILL_CHUNK,
-                              QUEUED, SUBMIT, TERMINAL_EVENTS, Event,
-                              EventLog)
+from repro.obs.events import (ADMITTED, CANCEL, DEADLINE_MISS, DECODE_BLOCK,
+                              EVICT, FINISH, LIFECYCLE_ORDER, PREFILL,
+                              PREFILL_CHUNK, QUEUED, REJECT, SUBMIT,
+                              TERMINAL_EVENTS, Event, EventLog)
 from repro.obs.prometheus import render_prometheus
 from repro.obs.tracer import (NULL_TRACER, TID_DECODE, TID_ENGINE,
                               TID_EXPAND, TID_PAGES, TID_PREFILL,
                               THREAD_NAMES, Tracer)
 
 __all__ = [
-    "ADMITTED", "DECODE_BLOCK", "EVICT", "Event", "EventLog", "FINISH",
-    "LIFECYCLE_ORDER", "NULL_TRACER", "PREFILL", "PREFILL_CHUNK", "QUEUED",
-    "SUBMIT", "TERMINAL_EVENTS", "THREAD_NAMES", "TID_DECODE", "TID_ENGINE",
-    "TID_EXPAND", "TID_PAGES", "TID_PREFILL", "Tracer", "render_prometheus",
+    "ADMITTED", "CANCEL", "DEADLINE_MISS", "DECODE_BLOCK", "EVICT", "Event",
+    "EventLog", "FINISH", "LIFECYCLE_ORDER", "NULL_TRACER", "PREFILL",
+    "PREFILL_CHUNK", "QUEUED", "REJECT", "SUBMIT", "TERMINAL_EVENTS",
+    "THREAD_NAMES", "TID_DECODE", "TID_ENGINE", "TID_EXPAND", "TID_PAGES",
+    "TID_PREFILL", "Tracer", "render_prometheus",
 ]

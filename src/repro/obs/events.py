@@ -4,18 +4,24 @@ Every request's life is recorded as an ordered sequence of named events with
 monotonic timestamps (``time.perf_counter``):
 
     submit -> queued -> admitted -> prefill | prefill_chunk[i]*
-           -> decode_block[j]* -> finish | evict
+           -> decode_block[j]* -> [deadline_miss] -> finish | evict | cancel
+    submit -> reject
 
 ``submit`` is the engine API boundary, ``queued`` the scheduler accepting the
-request into its FIFO, ``admitted`` the step it wins a KV slot (and, paged,
-its lifetime page reservation). Whole prompts cache in one ``prefill`` event;
-long prompts under chunked prefill record one ``prefill_chunk`` per piece
-(the last one emits the first token). Each fused decode block a request
-harvests tokens from records one ``decode_block`` event carrying the token
-count. Exactly one terminal event ends the sequence: ``finish`` (budget
-emitted) or ``evict`` (reserved for cancellation/preemption — no engine path
-emits it yet, but the ordering invariant and consumers already treat it as
-terminal so the async front end can adopt it without a format change).
+request into its admission queue, ``admitted`` the step it wins a KV slot
+(and, paged, its lifetime page reservation). Whole prompts cache in one
+``prefill`` event; long prompts under chunked prefill record one
+``prefill_chunk`` per piece (the last one emits the first token). Each fused
+decode block a request harvests tokens from records one ``decode_block``
+event carrying the token count. Exactly one terminal event ends the
+sequence: ``finish`` (budget emitted), ``evict`` (reserved for preemption —
+no engine path emits it yet), ``cancel`` (client abort, any point after
+queued), or ``reject`` (load-shedding admission refused the request — it
+never entered the scheduler, so ``submit`` is the only event before it).
+``deadline_miss`` is informational, not terminal: it marks the moment the
+request was known to have blown its deadline (stamped just before the
+terminal event that resolves it) so SLO dashboards can count misses without
+re-deriving deadlines from request metadata.
 
 From this log the engine derives the latency numbers the ROADMAP's SLO work
 needs per request — TTFT, queue wait, inter-token latency, end-to-end — and
@@ -43,16 +49,24 @@ PREFILL_CHUNK = "prefill_chunk"
 DECODE_BLOCK = "decode_block"
 FINISH = "finish"
 EVICT = "evict"
+CANCEL = "cancel"
+DEADLINE_MISS = "deadline_miss"
+REJECT = "reject"
 
 # rank of each event name in a request's life; events must be emitted in
-# non-decreasing rank (the repeatable ones share their rank)
+# non-decreasing rank (the repeatable ones share their rank).  cancel and
+# reject share the terminal rank; deadline_miss sits at the decode rank so
+# it can legally follow any amount of progress (including none — a request
+# shed while still queued jumps straight from rank 1 to rank 4) and still
+# precede the terminal event.
 LIFECYCLE_ORDER = {SUBMIT: 0, QUEUED: 1, ADMITTED: 2, PREFILL: 3,
-                   PREFILL_CHUNK: 3, DECODE_BLOCK: 4, FINISH: 5, EVICT: 5}
+                   PREFILL_CHUNK: 3, DECODE_BLOCK: 4, DEADLINE_MISS: 4,
+                   FINISH: 5, EVICT: 5, CANCEL: 5, REJECT: 5}
 
 # events that may legally repeat within one request
 REPEATABLE_EVENTS = frozenset({PREFILL_CHUNK, DECODE_BLOCK})
 
-TERMINAL_EVENTS = frozenset({FINISH, EVICT})
+TERMINAL_EVENTS = frozenset({FINISH, EVICT, CANCEL, REJECT})
 
 # events that deliver generated tokens to the request (their `tokens` datum
 # feeds the inter-token-latency derivation)
@@ -96,6 +110,13 @@ class EventLog:
             while len(self._finished) > self.max_finished:
                 self._events.pop(self._finished.pop(0), None)
         return ev
+
+    def clear(self):
+        """Drop every retained event (warmup hygiene: benchmarks replay
+        traffic to compile shapes, then clear so the measured window's
+        lifecycles — and req-id space — start clean)."""
+        self._events.clear()
+        self._finished.clear()
 
     def request_ids(self) -> list[int]:
         """Request ids with retained events, oldest first."""
@@ -174,11 +195,22 @@ class EventLog:
                          tokens — that is the latency a streaming client
                          would observe per token at block granularity)
           n_tokens       generated tokens delivered across token events
+          terminal       name of the terminal event (None while live)
+          deadline_missed  True iff a deadline_miss event was recorded
+
+        Degenerate lifecycles stay well-defined: a request that finishes
+        during prefill (``max_new_tokens == 1``) gets its TTFT from the
+        token-bearing prefill event and an empty itl_samples; a request
+        cancelled or evicted with 0 or 1 delivered tokens yields
+        ``ttft_s is None`` (0 tokens) or an empty itl list (1 token) —
+        never a division by zero — and e2e_s derives from whichever
+        terminal event ended it, cancel and reject included.
         """
         evs = self.events_for(req_id)
         t_submit = next((e.t for e in evs if e.name == SUBMIT), None)
         t_admit = next((e.t for e in evs if e.name == ADMITTED), None)
-        t_term = next((e.t for e in evs if e.name in TERMINAL_EVENTS), None)
+        term = next((e for e in evs if e.name in TERMINAL_EVENTS), None)
+        t_term = None if term is None else term.t
         t_first = None
         itl: list[float] = []
         n_tokens = 0
@@ -202,4 +234,6 @@ class EventLog:
             "e2e_s": delta(t_submit, t_term),
             "itl_samples": itl,
             "n_tokens": n_tokens,
+            "terminal": None if term is None else term.name,
+            "deadline_missed": any(e.name == DEADLINE_MISS for e in evs),
         }

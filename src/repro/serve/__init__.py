@@ -8,6 +8,7 @@
 from repro.obs import NULL_TRACER, EventLog, Tracer, render_prometheus
 from repro.serve.cache import ExpansionCache, tree_bytes
 from repro.serve.engine import ServeEngine, sequential_reference
+from repro.serve.frontend import AsyncFrontend, RejectedError, TokenStream
 from repro.serve.metrics import Metrics
 from repro.serve.paged import PagePool, RefPagePool, pages_for_tokens
 from repro.serve.registry import AdapterBundle, AdapterRegistry
@@ -16,9 +17,10 @@ from repro.serve.scheduler import (ChunkPrefill, Request, RequestState,
 from repro.serve.trace import run_trace
 
 __all__ = [
-    "AdapterBundle", "AdapterRegistry", "ChunkPrefill", "EventLog",
-    "ExpansionCache", "Metrics", "NULL_TRACER", "PagePool", "RefPagePool",
-    "Request", "RequestState", "Scheduler", "ServeEngine", "SlotPool",
-    "StepPlan", "Tracer", "pages_for_tokens", "render_prometheus",
-    "run_trace", "sequential_reference", "tree_bytes",
+    "AdapterBundle", "AdapterRegistry", "AsyncFrontend", "ChunkPrefill",
+    "EventLog", "ExpansionCache", "Metrics", "NULL_TRACER", "PagePool",
+    "RefPagePool", "RejectedError", "Request", "RequestState", "Scheduler",
+    "ServeEngine", "SlotPool", "StepPlan", "TokenStream", "Tracer",
+    "pages_for_tokens", "render_prometheus", "run_trace",
+    "sequential_reference", "tree_bytes",
 ]

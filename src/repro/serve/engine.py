@@ -69,8 +69,8 @@ from repro.core.reparam import expand_tree, flatten_with_paths, \
     unflatten_paths
 from repro.kernels.ops import kernel_expand_fn
 from repro.models import lm
-from repro.obs.events import (DECODE_BLOCK, FINISH, PREFILL, PREFILL_CHUNK,
-                              EventLog)
+from repro.obs.events import (CANCEL, DEADLINE_MISS, DECODE_BLOCK, FINISH,
+                              PREFILL, PREFILL_CHUNK, EventLog)
 from repro.obs.tracer import (NULL_TRACER, TID_DECODE, TID_ENGINE,
                               TID_EXPAND, TID_PAGES, TID_PREFILL, Tracer)
 from repro.serve.cache import ExpansionCache
@@ -78,7 +78,7 @@ from repro.serve.metrics import Metrics
 from repro.serve.paged import PagePool, pages_for_tokens
 from repro.serve.registry import AdapterRegistry
 from repro.serve.scheduler import (ChunkPrefill, PrefillGroup, Request,
-                                   Scheduler, SlotPool)
+                                   RequestState, Scheduler, SlotPool)
 from repro.sharding.rules import data_axes, sanitize_pspec, use_rules
 from repro.sharding.specs import (cache_pspecs,
                                   coded_effective_adapter_pspecs,
@@ -169,6 +169,19 @@ def _activate_slots(tokens: Array, pos: Array, remaining: Array, idx: Array,
     whole-prompt groups). Jitted with the state donated."""
     return (tokens.at[idx].set(first_tok), pos.at[idx].set(prompt_len),
             remaining.at[idx].set(rem))
+
+
+def _deactivate_slots(tokens: Array, pos: Array, remaining: Array,
+                      idx: Array):
+    """Zero the device decode state of cancelled slots. A zeroed
+    `remaining` is exactly the mask the fused block already honors for
+    requests that ran out of budget mid-block, so a cancelled slot stops
+    decoding at the very next block without any new masking logic — and a
+    later admission reinitializes the row the same way it would a finished
+    one. Jitted with the state donated."""
+    zero = jnp.zeros(idx.shape, jnp.int32)
+    return (tokens.at[idx].set(zero), pos.at[idx].set(zero),
+            remaining.at[idx].set(zero))
 
 
 class _InstrumentedJit:
@@ -432,6 +445,10 @@ class ServeEngine:
         self._tokens = jnp.zeros((n_slots,), jnp.int32)
         self._pos = jnp.zeros((n_slots,), jnp.int32)
         self._remaining = jnp.zeros((n_slots,), jnp.int32)
+        # livelock guard: consecutive steps that admitted nothing, prefilled
+        # nothing, and harvested zero tokens while work was still queued
+        # (see _step_impl; a healthy engine can never do two in a row)
+        self._no_progress_steps = 0
 
         # mesh mode: compute every buffer's canonical NamedSharding, place
         # the frozen base / KV pool / slot state accordingly, and thread
@@ -460,6 +477,14 @@ class ServeEngine:
                         **sharding_kw["activate"]),
                 "activate_slots", TID_PREFILL)
             self._chunk_steps: dict[int, Any] = {}   # num_pages -> jitted
+        if not legacy_decode:
+            # cancellation path: zeroes a slot's device counters so the next
+            # fused block masks it (legacy per-token decode masks on the
+            # host, so it needs no device-side deactivation)
+            self._deactivate = instr(
+                jax.jit(_deactivate_slots, donate_argnums=(0, 1, 2),
+                        **sharding_kw["activate"]),
+                "deactivate_slots", TID_ENGINE)
         self._slot_writer = instr(
             jax.jit(_write_slots, donate_argnums=(0,),
                     **sharding_kw["slot_writer"]),
@@ -681,7 +706,9 @@ class ServeEngine:
         the sync/restack invariants tests and benchmarks assert on."""
         for name in ("decode_blocks", "decode_steps", "adapter_slot_writes",
                      "adapter_full_restacks", "tokens_generated",
-                     "prefill_chunks", "jit_compiles", "jit_dispatches"):
+                     "prefill_chunks", "jit_compiles", "jit_dispatches",
+                     "requests_cancelled", "requests_rejected",
+                     "deadline_misses"):
             self.metrics.counter(name)
         # latency histograms derived from the lifecycle event log: declared
         # up front so snapshot() / the Prometheus exposition always carry
@@ -844,13 +871,69 @@ class ServeEngine:
     # Request API.
     # ------------------------------------------------------------------
     def submit(self, task_id: str, prompt: Sequence[int],
-               max_new_tokens: int) -> Request:
+               max_new_tokens: int, *, deadline: float | None = None,
+               priority: int = 0) -> Request:
         """Enqueue a request against a published task; returns the live
-        Request whose .generated fills as the engine steps."""
-        req = self.scheduler.submit(task_id, prompt, max_new_tokens)
+        Request whose .generated fills as the engine steps. deadline
+        (absolute perf_counter seconds, end-to-end) and priority (lower =
+        more urgent) order scheduler admission — see
+        scheduler.AdmissionQueue; the defaults keep exact FIFO."""
+        req = self.scheduler.submit(task_id, prompt, max_new_tokens,
+                                    deadline=deadline, priority=priority)
         req.t_submit = time.perf_counter()
         self.metrics.counter("requests_submitted").inc()
         return req
+
+    def cancel(self, req: Request) -> bool:
+        """Abort a request: WAITING requests leave the admission queue,
+        ACTIVE ones release their slot and every KV page IMMEDIATELY (the
+        engine is stepped from one thread, so any call lands at a block
+        boundary — the next fused block masks the slot via its zeroed
+        device counters). Tokens already in req.generated stay there; the
+        request ends in state CANCELLED with a `cancel` terminal event.
+        Returns False (no-op) if the request already reached a terminal
+        state — cancel races with normal completion benignly.
+
+        Reclaim is counter-asserted: the slot's page reservation must be
+        zero afterwards, so a cancel can never leak pages or reservations.
+        """
+        if req.state not in (RequestState.WAITING, RequestState.ACTIVE):
+            return False
+        with self.tracer.span("cancel", tid=TID_ENGINE, req=req.req_id,
+                              phase=req.state.value):
+            if req.state is RequestState.WAITING:
+                self.scheduler.cancel_waiting(req)
+            else:
+                slot = req.slot
+                self.pool.release(slot, state=RequestState.CANCELLED)
+                self._slot_adapters[slot] = None
+                self._slot_qparts[slot] = None
+                if not self.legacy_decode:
+                    idx = np.asarray([slot], np.int32)
+                    self._stack_write(self._zero_adapters, idx)
+                    self._tokens, self._pos, self._remaining = (
+                        self._deactivate(self._tokens, self._pos,
+                                         self._remaining, idx))
+                if self.pages is not None:
+                    with self.tracer.span("page_free", tid=TID_PAGES,
+                                          slots=1) as sp:
+                        sp.note(pages=len(self.pages.free_slot(slot)))
+                    assert self.pages._reserved[slot] == 0 and \
+                        not self.pages.slot_pages(slot), \
+                        f"cancel leaked pages on slot {slot}"
+                    st = self.pages.stats()
+                    self.metrics.gauge("pages_in_use").set(
+                        st["pages_in_use"])
+                    self.metrics.gauge("free_pages").set(st["free_pages"])
+                    self.metrics.gauge("kv_bytes_in_use").set(
+                        st["pages_in_use"] * self._page_bytes)
+                self.metrics.gauge("active_slots").set(
+                    len(self.pool.active_slots()))
+        req.t_finish = time.perf_counter()
+        self.events.emit(req.req_id, CANCEL, tokens=len(req.generated))
+        self.metrics.counter("requests_cancelled").inc()
+        self._observe_lifecycle(req.req_id)
+        return True
 
     def has_work(self) -> bool:
         """True while any request is queued or decoding."""
@@ -897,6 +980,10 @@ class ServeEngine:
             self._slot_qparts[slot] = None
             freed.append(slot)
             req.t_finish = time.perf_counter()
+            if req.deadline is not None and req.t_finish > req.deadline:
+                self.events.emit(req.req_id, DEADLINE_MISS,
+                                 late_s=req.t_finish - req.deadline)
+                self.metrics.counter("deadline_misses").inc()
             self.events.emit(req.req_id, FINISH,
                              tokens=len(req.generated))
             self.metrics.counter("requests_completed").inc()
@@ -931,6 +1018,36 @@ class ServeEngine:
         tok = self.metrics.counter("tokens_generated").value - tok0
         if tok:
             self.metrics.gauge("tokens_per_s").set(tok / max(dt, 1e-9))
+        # livelock guard: a step that admitted nothing, prefilled nothing,
+        # harvested zero tokens, and finished nothing changed NO scheduler
+        # state, so with work still queued the next plan is identical — the
+        # classic shape is a WAITING request whose page reservation can
+        # never be granted because something outside the scheduler holds
+        # pages. Without this check run_until_idle spins max_steps zero-
+        # token iterations before failing with an unhelpful message.
+        progress = (bool(plan.prefill_groups) or bool(plan.chunk_prefills)
+                    or bool(finished) or tok > 0)
+        if progress or not self.scheduler.has_work():
+            self._no_progress_steps = 0
+        else:
+            self._no_progress_steps += 1
+            if self._no_progress_steps >= 2:
+                head = self.scheduler.waiting.peek()
+                detail = ""
+                if head is not None and self.pages is not None:
+                    need = pages_for_tokens(head.lifetime_tokens,
+                                            self.page_size)
+                    st = self.pages.stats()
+                    detail = (f"; head req {head.req_id} needs {need} "
+                              f"pages, pool has {st['free_pages']} free / "
+                              f"{st['reserved_pages']} reserved of "
+                              f"{self.pages.capacity_pages}")
+                raise RuntimeError(
+                    f"scheduler livelock: {self._no_progress_steps} "
+                    f"consecutive zero-progress steps with "
+                    f"{len(self.scheduler.waiting)} request(s) waiting and "
+                    f"{len(self.pool.active_slots())} active slot(s)"
+                    + detail)
         if self.tracer.enabled:
             # per-step counter tracks: batch occupancy, the compile /
             # dispatch totals (so a trace shows WHEN compiles landed), and

@@ -1,0 +1,354 @@
+"""Async streaming front end with SLO-aware admission over ServeEngine.
+
+The engine below this layer is drive-it-from-a-loop: ``step()`` runs one
+scheduler iteration and returns, and requests fill their ``.generated``
+lists in place. This module turns that into a request lifecycle a service
+can expose: ``submit()`` returns a :class:`TokenStream` that yields tokens
+asynchronously as fused decode blocks complete, ``cancel()`` aborts a
+request with immediate slot + page reclaim (engine.cancel — counter-
+asserted, no leaked reservations), and every request may carry a deadline
+and priority class that scheduler admission honors (EDF within a class,
+strict across classes — scheduler.AdmissionQueue).
+
+Overload behavior is explicit, never silent queueing:
+
+  * **bounded queue** — at most ``max_queue_depth`` requests may wait for a
+    slot; submissions beyond that raise :class:`RejectedError` with reason
+    ``queue_full`` (the backpressure signal a caller can retry on);
+  * **load shedding** — a deadlined request whose *projected* queue wait
+    already exceeds its slack is rejected at submit time (reason
+    ``deadline``) instead of being admitted only to miss. The projection is
+    decode-tokens-outstanding divided by an EWMA of the engine's measured
+    token rate — deliberately simple, and optimistic before the first
+    measurement (an idle engine admits everything);
+  * requests whose deadline expires while still queued are shed by the
+    pump loop (``deadline_miss`` then ``cancel`` events) rather than
+    occupying a slot they can no longer use.
+
+Architecture: the core is sans-IO — :meth:`AsyncFrontend.pump` advances the
+engine one step and distributes newly generated tokens to live streams,
+synchronously. ``asyncio`` enters only in the thin driver (:meth:`run` /
+``async with``) and in the per-stream wakeup events, so the deterministic
+benchmarks and tests can drive ``pump()`` directly while a service runs
+the event loop. Single-threaded by design: the engine steps on the loop's
+thread, so every ``cancel()`` lands at a fused-block boundary — exactly
+the reclaim point the engine's masking makes cheap.
+
+Differential-oracle discipline: with no deadlines and one priority class
+the admission order is byte-for-byte the engine's FIFO, and uncancelled
+streams deliver exactly ``req.generated`` — token identity against the
+synchronous engine on the same trace is gated in serve_bench's
+engine-async arm.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from collections import deque
+from typing import Sequence
+
+from repro.obs.events import DEADLINE_MISS, REJECT, SUBMIT
+from repro.obs.tracer import TID_ENGINE
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Request, RequestState
+
+__all__ = ["AsyncFrontend", "RejectedError", "TokenStream"]
+
+
+class RejectedError(RuntimeError):
+    """Submission refused by admission control (the backpressure signal).
+
+    reason: ``"queue_full"`` (bounded queue at capacity) or ``"deadline"``
+    (projected queue wait exceeds the request's deadline slack).
+    req_id: the event-log identity the rejection was recorded under.
+    """
+
+    def __init__(self, reason: str, req_id: int, message: str):
+        super().__init__(message)
+        self.reason = reason
+        self.req_id = req_id
+
+
+class TokenStream:
+    """Streaming handle for one submitted request.
+
+    Async-iterate it to receive tokens as the engine's fused decode blocks
+    complete (``async for tok in stream``), or await :meth:`collect` for
+    the full list. ``cancel()`` aborts the request (idempotent; tokens
+    already delivered stay delivered). The stream ends when the request
+    reaches a terminal state — ``state``/``cancelled`` report which.
+    """
+
+    def __init__(self, frontend: "AsyncFrontend", request: Request):
+        self._frontend = frontend
+        self.request = request
+        self.req_id = request.req_id
+        self._delivered = 0                  # tokens moved into _buffer
+        self._buffer: deque[int] = deque()   # delivered, not yet consumed
+        self._closed = False
+        self._wakeup = asyncio.Event()
+
+    # -- state ---------------------------------------------------------
+    @property
+    def state(self) -> RequestState:
+        """The underlying request's lifecycle state."""
+        return self.request.state
+
+    @property
+    def cancelled(self) -> bool:
+        """True once the request was cancelled (by either side)."""
+        return self.request.state is RequestState.CANCELLED
+
+    @property
+    def finished(self) -> bool:
+        """True once the stream has ended (any terminal state)."""
+        return self._closed
+
+    # -- consumption ---------------------------------------------------
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self) -> int:
+        while True:
+            if self._buffer:
+                return self._buffer.popleft()
+            if self._closed:
+                raise StopAsyncIteration
+            self._wakeup.clear()
+            await self._wakeup.wait()
+
+    async def collect(self) -> list[int]:
+        """Consume the stream to completion; returns every token consumed
+        by THIS call (tokens taken earlier via iteration are not repeated).
+        """
+        return [tok async for tok in self]
+
+    def cancel(self) -> bool:
+        """Abort the request now (slot + pages reclaimed immediately if it
+        was active). Returns False if it already reached a terminal state.
+        """
+        return self._frontend.cancel(self)
+
+    # -- frontend-side delivery ----------------------------------------
+    def _deliver(self):
+        """Move newly generated tokens into the buffer; close on terminal
+        state. Called by the pump after every engine step."""
+        gen = self.request.generated
+        if len(gen) > self._delivered:
+            self._buffer.extend(gen[self._delivered:])
+            self._delivered = len(gen)
+            self._wakeup.set()
+        if self.request.state not in (RequestState.WAITING,
+                                      RequestState.ACTIVE):
+            self._close()
+
+    def _close(self):
+        if not self._closed:
+            self._closed = True
+            self._wakeup.set()
+
+
+class AsyncFrontend:
+    """Async request front end + SLO-aware admission over one ServeEngine.
+
+    max_queue_depth: bound on the scheduler's waiting queue; submissions
+    past it are rejected (reason ``queue_full``). Size it like any
+    backpressure buffer — big enough to ride out a burst, small enough
+    that queue wait stays inside your deadlines.
+    shed_expired: when True (default) the pump cancels queued requests
+    whose deadline has already passed instead of admitting walking dead.
+    clock: injectable monotonic-seconds source (deadlines are absolute
+    values of this clock, matching Request.deadline).
+
+    Use as an async context manager (starts/stops the pump task), or call
+    :meth:`pump` directly from synchronous drivers::
+
+        async with AsyncFrontend(engine) as fe:
+            stream = fe.submit("task", prompt, 32, deadline=..., priority=0)
+            async for tok in stream: ...
+    """
+
+    def __init__(self, engine: ServeEngine, *, max_queue_depth: int = 64,
+                 shed_expired: bool = True, clock=time.perf_counter):
+        if max_queue_depth < 1:
+            raise ValueError("max_queue_depth must be >= 1")
+        self.engine = engine
+        self.max_queue_depth = max_queue_depth
+        self.shed_expired = shed_expired
+        self._clock = clock
+        self._streams: dict[int, TokenStream] = {}
+        # EWMA of the engine's aggregate token rate (tokens/s across all
+        # slots), measured over pump steps that generated tokens; None
+        # until the first measurement (projection is then optimistic)
+        self._rate: float | None = None
+        self._rate_alpha = 0.3
+        self._task: asyncio.Task | None = None
+        self._wake: asyncio.Event | None = None
+        self._closing = False
+
+    # -- admission -----------------------------------------------------
+    def queue_depth(self) -> int:
+        """Requests currently waiting for a slot (the backpressure gauge)."""
+        return len(self.engine.scheduler.waiting)
+
+    def projected_queue_wait(self) -> float:
+        """Seconds a request submitted NOW should expect to wait before
+        decoding: decode tokens outstanding ahead of it (remaining budgets
+        of active slots + full budgets of everything queued) over the
+        measured aggregate token rate. 0.0 until the engine has produced
+        tokens under this front end (optimistic start: an idle engine
+        admits everything and the estimate corrects within one block)."""
+        if not self._rate:
+            return 0.0
+        sched = self.engine.scheduler
+        owed = 0
+        for slot in sched.pool.active_slots():
+            req = sched.pool.requests[slot]
+            owed += max(0, req.max_new_tokens - len(req.generated))
+        for req in sched.waiting:
+            owed += req.max_new_tokens
+        return owed / self._rate
+
+    def submit(self, task_id: str, prompt: Sequence[int],
+               max_new_tokens: int, *, deadline: float | None = None,
+               priority: int = 0) -> TokenStream:
+        """Admit a request and return its TokenStream, or raise
+        RejectedError (load shedding — the caller's backpressure signal).
+        Rejections are recorded in the event log (submit -> reject) under
+        an id minted from the scheduler's sequence, so SLO dashboards see
+        shed load, not silence."""
+        # deadline infeasibility is the more specific diagnosis, so it is
+        # checked first: a doomed request gets reason "deadline" even when
+        # the queue also happens to be full
+        if deadline is not None:
+            now = self._clock()
+            wait = self.projected_queue_wait()
+            if now + wait > deadline:
+                raise self._reject(
+                    task_id, prompt, max_new_tokens, "deadline",
+                    f"projected queue wait {wait:.3f}s exceeds deadline "
+                    f"slack {deadline - now:.3f}s")
+        if self.queue_depth() >= self.max_queue_depth:
+            raise self._reject(
+                task_id, prompt, max_new_tokens, "queue_full",
+                f"admission queue is full ({self.max_queue_depth} waiting)")
+        req = self.engine.submit(task_id, prompt, max_new_tokens,
+                                 deadline=deadline, priority=priority)
+        stream = TokenStream(self, req)
+        self._streams[req.req_id] = stream
+        if self._wake is not None:
+            self._wake.set()
+        return stream
+
+    def _reject(self, task_id: str, prompt: Sequence[int],
+                max_new_tokens: int, reason: str,
+                message: str) -> RejectedError:
+        eng = self.engine
+        rid = eng.scheduler.mint_id()
+        with eng.tracer.span("reject", tid=TID_ENGINE, req=rid,
+                             reason=reason):
+            eng.events.emit(rid, SUBMIT, task=task_id,
+                            prompt_len=len(prompt),
+                            max_new_tokens=max_new_tokens)
+            eng.events.emit(rid, REJECT, reason=reason)
+            eng.metrics.counter("requests_rejected").inc()
+        return RejectedError(reason, rid, message)
+
+    # -- cancellation / shedding ---------------------------------------
+    def cancel(self, stream: TokenStream) -> bool:
+        """Abort a stream's request via engine.cancel (immediate slot +
+        page reclaim when active); closes the stream. Idempotent."""
+        changed = self.engine.cancel(stream.request)
+        stream._deliver()       # flush tokens harvested before the abort
+        return changed
+
+    def _shed_expired(self):
+        """Cancel queued requests whose deadline already passed: they can
+        only waste a slot. Emits deadline_miss before the cancel so miss
+        counting catches shed requests too."""
+        now = self._clock()
+        expired = [r for r in self.engine.scheduler.waiting
+                   if r.deadline is not None and r.deadline < now]
+        for req in expired:
+            self.engine.events.emit(req.req_id, DEADLINE_MISS,
+                                    late_s=now - req.deadline)
+            self.engine.metrics.counter("deadline_misses").inc()
+            stream = self._streams.get(req.req_id)
+            if stream is not None:
+                self.cancel(stream)
+            else:
+                self.engine.cancel(req)
+
+    # -- the pump ------------------------------------------------------
+    def pump(self) -> bool:
+        """One front-end iteration: shed expired queued requests, advance
+        the engine one step if it has work, and distribute new tokens to
+        the live streams. Returns True if the engine stepped. Synchronous
+        on purpose — this is the whole core; run()/async with merely call
+        it from the event loop."""
+        if self.shed_expired:
+            self._shed_expired()
+        stepped = False
+        if self.engine.has_work():
+            t0 = self._clock()
+            tok0 = self.engine.metrics.counter("tokens_generated").value
+            self.engine.step()
+            tok = self.engine.metrics.counter("tokens_generated").value - tok0
+            dt = self._clock() - t0
+            if tok > 0 and dt > 0:
+                inst = tok / dt
+                self._rate = (inst if self._rate is None else
+                              self._rate_alpha * inst
+                              + (1 - self._rate_alpha) * self._rate)
+            stepped = True
+        for stream in list(self._streams.values()):
+            stream._deliver()
+            if stream.finished:
+                del self._streams[stream.req_id]
+        return stepped
+
+    async def drain(self):
+        """Pump until no work remains and every stream has closed (yields
+        to consumers between steps so they see tokens as blocks land)."""
+        while self.engine.has_work() or self._streams:
+            self.pump()
+            await asyncio.sleep(0)
+
+    async def run(self):
+        """Pump loop for service use: steps while there is work, parks on
+        an event when idle (submit() sets it), exits when aclose() is
+        called. Idle parking wakes on a short timeout so expired-deadline
+        shedding still runs without traffic."""
+        self._wake = asyncio.Event()
+        try:
+            while not self._closing:
+                if self.engine.has_work() or self._streams:
+                    self.pump()
+                    await asyncio.sleep(0)
+                else:
+                    self._wake.clear()
+                    try:
+                        await asyncio.wait_for(self._wake.wait(),
+                                               timeout=0.05)
+                    except asyncio.TimeoutError:
+                        pass
+        finally:
+            self._wake = None
+
+    async def __aenter__(self) -> "AsyncFrontend":
+        self._closing = False
+        self._task = asyncio.create_task(self.run())
+        return self
+
+    async def __aexit__(self, *exc):
+        await self.aclose()
+
+    async def aclose(self):
+        """Stop the pump task (requests still queued stay in the engine;
+        drive them with pump()/drain() or a new context if needed)."""
+        self._closing = True
+        if self._wake is not None:
+            self._wake.set()
+        if self._task is not None:
+            await self._task
+            self._task = None

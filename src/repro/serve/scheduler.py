@@ -22,7 +22,9 @@ differential oracle (tests/test_serve.py) leans on exactly that.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
+import math
 from collections import deque
 from enum import Enum
 from typing import Iterable
@@ -32,10 +34,33 @@ from repro.serve.paged import pages_for_tokens
 
 
 class RequestState(Enum):
-    """Request lifecycle: WAITING (queued) -> ACTIVE (slot) -> FINISHED."""
+    """Request lifecycle: WAITING (queued) -> ACTIVE (slot) -> FINISHED,
+    or the two abort terminals: CANCELLED (client abort — possible from
+    WAITING or ACTIVE) and REJECTED (load-shedding admission refused it;
+    set by the front end, never by the scheduler — a rejected request never
+    enters the admission queue)."""
     WAITING = "waiting"
     ACTIVE = "active"       # prefilled, decoding
     FINISHED = "finished"
+    CANCELLED = "cancelled"
+    REJECTED = "rejected"
+
+
+def lifetime_cache_tokens(prompt_len: int, max_new_tokens: int) -> int:
+    """Cache positions a request writes over its whole life — the single
+    definition BOTH submit-time validation and paged admission reserve
+    against, so a request that validates can always be admitted (on an
+    otherwise-empty pool).
+
+    The prompt occupies ``prompt_len`` positions and each decode iteration
+    appends the token it attends *from*; the final generated token is
+    emitted to the client but never written back (nothing ever attends to
+    it), hence the ``- 1``. Using ``prompt_len + max_new_tokens`` anywhere
+    on an admission path would over-count by one position — exactly one
+    page at ``total % page_size == 1`` boundaries — making "submit accepts
+    but reserve can never be granted" states possible.
+    """
+    return prompt_len + max_new_tokens - 1
 
 
 @dataclasses.dataclass
@@ -56,6 +81,12 @@ class Request:
     # once the whole prompt is in
     chunked: bool = False
     prefill_done: int = 0
+    # SLO metadata (async front end): priority class — LOWER is more
+    # urgent, admission is strict across classes — and an optional absolute
+    # deadline (perf_counter seconds) for end-to-end completion. Defaults
+    # reduce admission to exact FIFO.
+    priority: int = 0
+    deadline: float | None = None
     # engine-stamped wall times (perf_counter seconds)
     t_submit: float = 0.0
     t_first_token: float | None = None
@@ -74,10 +105,10 @@ class Request:
 
     @property
     def lifetime_tokens(self) -> int:
-        """Cache positions the request writes over its whole life: the
-        prompt plus one per decode iteration (the final generated token is
-        emitted but never written) — what paged admission reserves for."""
-        return self.prompt_len + self.max_new_tokens - 1
+        """Cache positions the request writes over its whole life — see
+        lifetime_cache_tokens for why the final token is not counted. Both
+        submit-time validation and paged admission use this number."""
+        return lifetime_cache_tokens(self.prompt_len, self.max_new_tokens)
 
     @property
     def done(self) -> bool:
@@ -137,6 +168,80 @@ class StepPlan:
                 and not self.chunk_prefills)
 
 
+class AdmissionQueue:
+    """SLO-aware admission ordering with exact-FIFO fallback.
+
+    Requests are served strictly by priority class (lower value first),
+    earliest-deadline-first within a class (requests without a deadline
+    sort after every deadlined peer in their class), and submit order
+    (req_id) as the final tiebreak. With all-default requests (priority 0,
+    no deadline) every key collapses to (0, inf, req_id) — byte-for-byte
+    the FIFO the engine's differential oracles were recorded against.
+
+    Head-of-line semantics carry over unchanged: ``peek()`` exposes the
+    single next-admittable request and the scheduler still refuses to
+    overtake it when its page reservation cannot be granted — ordering
+    policy changed, no-overtaking did not.
+
+    Cancellation is lazy: ``discard`` only decrements the live count (the
+    caller has already moved the request out of WAITING), and stale heap
+    entries are skipped on the next peek/pop. ``len``/``bool`` report live
+    entries only, so ``has_work`` and queue-depth gauges never count
+    corpses.
+    """
+
+    def __init__(self):
+        self._heap: list[tuple[int, float, int, Request]] = []
+        self._live = 0
+
+    @staticmethod
+    def _key(req: Request) -> tuple[int, float, int]:
+        """(priority class, EDF key, FIFO tiebreak) — heap order."""
+        deadline = math.inf if req.deadline is None else req.deadline
+        return (req.priority, deadline, req.req_id)
+
+    def push(self, req: Request):
+        """Enqueue a WAITING request."""
+        heapq.heappush(self._heap, self._key(req) + (req,))
+        self._live += 1
+
+    def _drop_stale(self):
+        while self._heap and (self._heap[0][3].state
+                              is not RequestState.WAITING):
+            heapq.heappop(self._heap)
+
+    def peek(self) -> Request | None:
+        """The next request admission must serve (None when empty)."""
+        self._drop_stale()
+        return self._heap[0][3] if self._heap else None
+
+    def pop(self) -> Request:
+        """Remove and return the next request (raises IndexError empty)."""
+        self._drop_stale()
+        req = heapq.heappop(self._heap)[3]
+        self._live -= 1
+        return req
+
+    def discard(self, req: Request):
+        """Account for a request cancelled while queued. The caller must
+        already have moved it out of WAITING; the heap entry is dropped
+        lazily on the next peek/pop."""
+        assert req.state is not RequestState.WAITING
+        self._live -= 1
+
+    def __len__(self) -> int:
+        return self._live
+
+    def __bool__(self) -> bool:
+        return self._live > 0
+
+    def __iter__(self):
+        """Live requests in admission order (snapshot; read-only uses —
+        projected-wait estimates, deadline sweeps)."""
+        return (entry[3] for entry in sorted(self._heap)
+                if entry[3].state is RequestState.WAITING)
+
+
 class SlotPool:
     """Slot bookkeeping for the pooled KV cache (arrays live in the engine)."""
 
@@ -163,19 +268,22 @@ class SlotPool:
         request.slot = slot
         request.state = RequestState.ACTIVE
 
-    def release(self, slot: int) -> Request:
-        """Free a slot, marking its request FINISHED; returns it."""
+    def release(self, slot: int,
+                state: RequestState = RequestState.FINISHED) -> Request:
+        """Free a slot, marking its request with the given terminal state
+        (FINISHED by default; CANCELLED for client aborts); returns it."""
         req = self.requests[slot]
         assert req is not None, f"slot {slot} already free"
         self.requests[slot] = None
         self.pos[slot] = 0
         req.slot = None
-        req.state = RequestState.FINISHED
+        req.state = state
         return req
 
 
 class Scheduler:
-    """FIFO admission with task/length grouping for prefill batches.
+    """SLO-aware admission (FIFO when every request is default-priority,
+    no-deadline) with task/length grouping for prefill batches.
 
     max_prefill_requests bounds how many admissions happen per engine step
     (prefill compute is O(prompt_len) per request, so unbounded admission
@@ -223,37 +331,53 @@ class Scheduler:
         self.interference_horizon = (max_decode_horizon
                                      if interference_horizon is None
                                      else max(1, interference_horizon))
-        self.waiting: deque[Request] = deque()
+        self.waiting = AdmissionQueue()
         self._ids = itertools.count()
         # optional repro.obs.EventLog: the scheduler emits the lifecycle
         # events it owns — submit (request minted), queued (entered the
-        # FIFO), admitted (won a slot + page reservation) — with the same
-        # timestamps queue-wait is later derived from. None = no logging.
+        # admission queue), admitted (won a slot + page reservation) — with
+        # the same timestamps queue-wait is later derived from. None = no
+        # logging.
         self.event_log = event_log
 
     # ------------------------------------------------------------------
+    def mint_id(self) -> int:
+        """Next request id from the scheduler's counter. The front end uses
+        this to give REJECTED requests — which never become Request objects
+        inside the scheduler — event-log identities from the same id space
+        as admitted ones."""
+        return next(self._ids)
+
     def submit(self, task_id: str, prompt: Iterable[int],
-               max_new_tokens: int) -> Request:
-        """Validate + enqueue a request (FIFO). Rejects — with errors that
-        name the offending budget — empty prompts, non-positive token
-        budgets, requests whose prompt_len + max_new_tokens exceed a
-        slot's KV capacity (admitting one would silently overflow its
-        cache row mid-decode), and, under a paged pool, requests whose
-        lifetime page needs exceed the pool itself."""
+               max_new_tokens: int, *, deadline: float | None = None,
+               priority: int = 0) -> Request:
+        """Validate + enqueue a request. Rejects — with errors that name
+        the offending budget — empty prompts, non-positive token budgets,
+        requests whose lifetime cache footprint exceeds a slot's KV
+        capacity (admitting one would silently overflow its cache row
+        mid-decode), and, under a paged pool, requests whose lifetime page
+        needs exceed the pool itself. Validation and paged reservation
+        share lifetime_cache_tokens, so anything accepted here can be
+        admitted by plan_step on an empty pool — no accept-then-starve
+        states.
+
+        deadline/priority order the admission queue (see AdmissionQueue);
+        the defaults reduce to FIFO."""
         prompt = tuple(int(t) for t in prompt)
-        total = len(prompt) + max_new_tokens
         if not prompt:
             raise ValueError("empty prompt")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        if total > self.pool.cache_cap:
+        lifetime = lifetime_cache_tokens(len(prompt), max_new_tokens)
+        if lifetime > self.pool.cache_cap:
             raise ValueError(
                 f"prompt_len ({len(prompt)}) + max_new_tokens "
-                f"({max_new_tokens}) = {total} exceeds the per-slot KV "
-                f"capacity cache_cap={self.pool.cache_cap}; the request "
-                "can never be served without overflowing its cache row")
+                f"({max_new_tokens}) needs {lifetime} KV positions, more "
+                f"than the per-slot capacity cache_cap="
+                f"{self.pool.cache_cap}; the request can never be served "
+                "without overflowing its cache row")
         if self.page_pool is not None:
-            need = pages_for_tokens(total - 1, self.page_pool.page_size)
+            need = pages_for_tokens(lifetime, self.page_pool.page_size)
             if (need > self.page_pool.max_pages_per_slot
                     or need > self.page_pool.capacity_pages):
                 raise ValueError(
@@ -262,15 +386,29 @@ class Scheduler:
                     f"{self.page_pool.max_pages_per_slot}, capacity="
                     f"{self.page_pool.capacity_pages})")
         req = Request(req_id=next(self._ids), task_id=task_id,
-                      prompt=prompt, max_new_tokens=max_new_tokens)
+                      prompt=prompt, max_new_tokens=max_new_tokens,
+                      deadline=deadline, priority=priority)
         if self.event_log is not None:
             self.event_log.emit(req.req_id, SUBMIT, task=task_id,
                                 prompt_len=len(prompt),
-                                max_new_tokens=max_new_tokens)
-        self.waiting.append(req)
+                                max_new_tokens=max_new_tokens,
+                                priority=priority,
+                                **({} if deadline is None
+                                   else {"deadline": deadline}))
+        self.waiting.push(req)
         if self.event_log is not None:
             self.event_log.emit(req.req_id, QUEUED, depth=len(self.waiting))
         return req
+
+    def cancel_waiting(self, req: Request):
+        """Cancel a request still in the admission queue: it transitions
+        WAITING -> CANCELLED without ever holding a slot or pages. Active
+        requests are cancelled by the engine (device state to reclaim)."""
+        if req.state is not RequestState.WAITING:
+            raise ValueError(
+                f"req {req.req_id} is {req.state.value}, not waiting")
+        req.state = RequestState.CANCELLED
+        self.waiting.discard(req)
 
     def has_work(self) -> bool:
         """True while anything is queued or decoding."""
@@ -278,13 +416,14 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     def plan_step(self) -> StepPlan:
-        """Admit FIFO-eligible waiting requests into free slots, grouped by
+        """Admit eligible waiting requests — in admission-queue order:
+        priority class, then EDF, then FIFO — into free slots, grouped by
         (task_id, prompt_len) so each group is one prefill batch; then list
         every active slot for the mixed decode batch and plan the fused
         decode horizon for this step.
 
         Paged admission: each candidate must additionally fit a lifetime
-        page reservation into the free-page budget; the FIFO head blocks
+        page reservation into the free-page budget; the queue head blocks
         admission when it does not (no overtaking — the same ordering the
         slot pool enforces). Long prompts (> prefill_chunk) are admitted
         like any other request but enter the cache via chunk_prefills —
@@ -302,13 +441,13 @@ class Scheduler:
         while (self.waiting and free
                and len(admitted) + len(chunked_admits)
                < self.max_prefill_requests):
-            req = self.waiting[0]
+            req = self.waiting.peek()
             if self.page_pool is not None:
                 need = pages_for_tokens(req.lifetime_tokens,
                                         self.page_pool.page_size)
                 if not self.page_pool.can_reserve(need):
-                    break               # head-of-line: keep FIFO order
-            self.waiting.popleft()
+                    break         # head-of-line: keep admission order
+            self.waiting.pop()
             slot = free.popleft()
             self.pool.assign(slot, req)
             if self.page_pool is not None:

@@ -1,0 +1,189 @@
+"""Async streaming front end: token-identity of streamed output vs the
+sequential reference, mid-stream cancellation with full slot/page reclaim,
+bounded-queue backpressure + deadline load shedding, expired-in-queue
+shedding under an injected clock, and priority/EDF admission ordering
+observed end-to-end through a 1-slot engine."""
+import asyncio
+import time
+
+import jax
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core.generator import GeneratorConfig, init_generator
+from repro.serve import (AdapterRegistry, AsyncFrontend, RejectedError,
+                         ServeEngine, sequential_reference)
+from repro.train.steps import build_bundle
+
+GEN = GeneratorConfig(k=5, d=600, width=32, seed=0)
+
+
+@pytest.fixture(scope="module")
+def served():
+    arch = get_arch("yi_6b")
+    bundle = build_bundle(arch, "mcnc", smoke=True, generator=GEN,
+                          adapter_rank=4)
+    base = bundle.init_base(jax.random.PRNGKey(0))
+    gen_ws = init_generator(GEN)
+    return bundle, base, gen_ws
+
+
+@pytest.fixture(scope="module")
+def published(served, tmp_path_factory):
+    bundle, _, _ = served
+    reg = AdapterRegistry(str(tmp_path_factory.mktemp("reg")))
+    states = {t: bundle.synthetic_trainable(i, 0.3)
+              for i, t in enumerate("ab")}
+    for t, s in states.items():
+        reg.publish(t, s, GEN)
+    return reg, states
+
+
+def test_streaming_tokens_identical_to_sequential_reference(served,
+                                                            published):
+    """Concurrent async consumers see exactly the tokens the synchronous
+    sequential reference produces, in order, per stream."""
+    bundle, base, gen_ws = served
+    reg, states = published
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=2, cache_cap=24)
+    traffic = [("a", [1, 2, 3], 4), ("b", [4, 5, 6, 7], 5),
+               ("a", [8, 9], 3)]
+
+    async def main():
+        fe = AsyncFrontend(eng, max_queue_depth=4)
+        streams = [fe.submit(t, p, m) for t, p, m in traffic]
+        outs = [[] for _ in streams]
+
+        async def consume(i):
+            async for tok in streams[i]:
+                outs[i].append(tok)
+
+        consumers = [asyncio.create_task(consume(i))
+                     for i in range(len(streams))]
+        await fe.drain()
+        await asyncio.gather(*consumers)
+        return outs
+
+    outs = asyncio.run(main())
+    want = sequential_reference(bundle, base, gen_ws, states, traffic,
+                                cache_cap=24)
+    assert outs == want
+
+
+def test_cancel_mid_stream_prefix_identity_and_reclaim(served, published):
+    """stream.cancel() from inside the consumer stops delivery at the next
+    block boundary: what arrived is a strict prefix of the uncancelled
+    run, the co-resident stream is untouched, and the allocator balances
+    (no leaked pages or reservations)."""
+    bundle, base, gen_ws = served
+    reg, states = published
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=2, cache_cap=40)
+
+    async def main():
+        fe = AsyncFrontend(eng)
+        s1 = fe.submit("a", [1, 2, 3], 16)
+        s2 = fe.submit("b", [4, 5, 6], 4)
+        got1 = []
+
+        async def consume1():
+            async for tok in s1:
+                got1.append(tok)
+                if len(got1) >= 2:
+                    s1.cancel()
+
+        t1 = asyncio.create_task(consume1())
+        t2 = asyncio.create_task(s2.collect())
+        await fe.drain()
+        await t1
+        return got1, await t2, s1
+
+    got1, got2, s1 = asyncio.run(main())
+    want = sequential_reference(
+        bundle, base, gen_ws, states,
+        [("a", [1, 2, 3], 16), ("b", [4, 5, 6], 4)], cache_cap=40)
+    assert s1.cancelled
+    assert got1 == want[0][:len(got1)] and len(got1) < 16
+    assert got2 == want[1]
+    st = eng.pages.stats()
+    assert st["pages_in_use"] == 0 and st["reserved_pages"] == 0
+    assert st["allocations"] == st["frees"], st
+    eng.pages.check_invariants()
+
+
+def test_backpressure_rejects_and_reason_precedence(served, published):
+    """A full bounded queue rejects with reason queue_full; an infeasible
+    deadline rejects with reason deadline even when the queue is ALSO
+    full (the more specific diagnosis wins); accepted work still
+    completes; rejects are counted."""
+    bundle, base, gen_ws = served
+    reg, _ = published
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=1, cache_cap=24)
+
+    async def main():
+        fe = AsyncFrontend(eng, max_queue_depth=1)
+        s1 = fe.submit("a", [1, 2, 3], 6)
+        fe.pump()                          # s1 admitted to the one slot
+        s2 = fe.submit("a", [1, 2, 3], 6)  # fills the queue
+        with pytest.raises(RejectedError) as exc:
+            fe.submit("a", [1, 2], 2)
+        assert exc.value.reason == "queue_full"
+        with pytest.raises(RejectedError) as exc:
+            fe.submit("a", [1, 2], 2, deadline=time.perf_counter() - 5)
+        assert exc.value.reason == "deadline"
+        await fe.drain()
+        return s1, s2
+
+    s1, s2 = asyncio.run(main())
+    assert len(s1.request.generated) == 6
+    assert len(s2.request.generated) == 6
+    assert eng.metrics.snapshot()["requests_rejected"] == 2
+
+
+def test_queued_request_shed_when_deadline_expires(served, published):
+    """A request admitted to the queue with a then-feasible deadline is
+    shed (deadline_miss + cancel) by the pump once the deadline passes
+    while it is still waiting — it never occupies a slot."""
+    bundle, base, gen_ws = served
+    reg, _ = published
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=1, cache_cap=24)
+    now = {"t": 0.0}
+
+    async def main():
+        fe = AsyncFrontend(eng, clock=lambda: now["t"])
+        s1 = fe.submit("a", [1, 2, 3], 6)
+        fe.pump()                          # s1 takes the only slot
+        s2 = fe.submit("a", [1, 2, 3], 4, deadline=5.0)   # feasible now
+        now["t"] = 10.0                    # ... until the clock moves on
+        await fe.drain()
+        return s1, s2
+
+    s1, s2 = asyncio.run(main())
+    assert len(s1.request.generated) == 6
+    assert s2.request.generated == []
+    summ = eng.events.summary(s2.req_id)
+    assert summ["terminal"] == "cancel" and summ["deadline_missed"]
+    assert eng.metrics.snapshot()["deadline_misses"] == 1
+
+
+def test_priority_strict_and_edf_within_class_end_to_end(served, published):
+    """Through a 1-slot engine, admission order is observable as first
+    token time: earliest deadline first within the default class, and the
+    whole default class ahead of the lower-priority request."""
+    bundle, base, gen_ws = served
+    reg, _ = published
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=1, cache_cap=24)
+
+    async def main():
+        fe = AsyncFrontend(eng, max_queue_depth=8)
+        filler = fe.submit("a", [1, 2], 2)
+        fe.pump()                          # pin the slot so the rest queue
+        now = time.perf_counter()
+        lo = fe.submit("a", [1, 2], 2, priority=1)
+        late = fe.submit("a", [1, 2], 2, deadline=now + 100)
+        early = fe.submit("a", [1, 2], 2, deadline=now + 50)
+        await fe.drain()
+        del filler
+        return [s.request.t_first_token for s in (lo, late, early)]
+
+    t_lo, t_late, t_early = asyncio.run(main())
+    assert t_early < t_late < t_lo

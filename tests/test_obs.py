@@ -14,10 +14,10 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.obs import (ADMITTED, DECODE_BLOCK, FINISH, LIFECYCLE_ORDER,
-                       NULL_TRACER, PREFILL, PREFILL_CHUNK, QUEUED, SUBMIT,
-                       THREAD_NAMES, EVICT, EventLog, Tracer,
-                       render_prometheus)
+from repro.obs import (ADMITTED, CANCEL, DEADLINE_MISS, DECODE_BLOCK,
+                       FINISH, LIFECYCLE_ORDER, NULL_TRACER, PREFILL,
+                       PREFILL_CHUNK, QUEUED, REJECT, SUBMIT, THREAD_NAMES,
+                       EVICT, EventLog, Tracer, render_prometheus)
 from repro.serve.metrics import DEFAULT_BUCKETS, Histogram, Metrics
 
 HERE = os.path.dirname(os.path.abspath(__file__))
@@ -171,6 +171,83 @@ def test_summary_underivable_fields_are_none():
     s = log.summary(0)
     assert s["queue_wait_s"] is None and s["ttft_s"] is None
     assert s["e2e_s"] is None and s["itl_samples"] == []
+    assert s["terminal"] is None and s["deadline_missed"] is False
+
+
+def test_cancel_reject_deadline_lifecycles_validate():
+    """The front-end terminal paths are legal lifecycles: cancel after any
+    progress, deadline_miss jumping straight from QUEUED (rank 1 -> 4)
+    before a shed's cancel, and reject directly after submit."""
+    log = EventLog(clock=ticker())
+    emit_life(log, 0, terminal=CANCEL)       # active cancel, mid-decode
+    log.emit(1, SUBMIT)                      # shed while still queued
+    log.emit(1, QUEUED)
+    log.emit(1, DEADLINE_MISS, late_s=0.5)
+    log.emit(1, CANCEL)
+    log.emit(2, SUBMIT)                      # load-shedding admission
+    log.emit(2, REJECT, reason="queue_full")
+    assert log.validate_all(require_terminal=True) == []
+    assert log.summary(1)["terminal"] == CANCEL
+    assert log.summary(1)["deadline_missed"] is True
+    assert log.summary(2)["terminal"] == REJECT
+
+
+def test_deadline_miss_is_not_terminal_and_cannot_repeat_terminal():
+    log = EventLog(clock=ticker())
+    log.emit(0, SUBMIT)
+    log.emit(0, QUEUED)
+    log.emit(0, DEADLINE_MISS)
+    assert any("no terminal" in v
+               for v in log.validate_all(require_terminal=True))
+    log.emit(0, CANCEL)
+    log.emit(0, CANCEL)                      # double terminal: invalid
+    bad = log.validate(0)
+    assert any("terminal" in v for v in bad)
+
+
+def test_summary_single_token_request_finishing_at_prefill():
+    """max_new_tokens == 1: the request finishes during prefill. TTFT
+    still derives from the token-bearing prefill event; the ITL list is
+    empty (no second delivery), never a division by zero."""
+    log = EventLog(clock=ticker())
+    log.emit(0, SUBMIT)
+    log.emit(0, QUEUED)
+    log.emit(0, ADMITTED)
+    log.emit(0, PREFILL, tokens=1)
+    log.emit(0, FINISH)
+    s = log.summary(0)
+    assert s["ttft_s"] == pytest.approx(3.0)
+    assert s["itl_samples"] == [] and s["n_tokens"] == 1
+    assert s["e2e_s"] == pytest.approx(4.0)
+    assert s["terminal"] == FINISH
+
+
+def test_summary_evicted_mid_chunk_zero_tokens():
+    """A request evicted before any token-bearing event: TTFT is None,
+    ITL empty, but e2e still derives from the terminal event."""
+    log = EventLog(clock=ticker())
+    log.emit(0, SUBMIT)
+    log.emit(0, QUEUED)
+    log.emit(0, ADMITTED)
+    log.emit(0, PREFILL_CHUNK, tokens=0, start=0)   # mid-prompt, no tokens
+    log.emit(0, EVICT)
+    s = log.summary(0)
+    assert s["ttft_s"] is None and s["itl_samples"] == []
+    assert s["n_tokens"] == 0
+    assert s["e2e_s"] == pytest.approx(4.0)
+    assert s["terminal"] == EVICT
+
+
+def test_event_log_clear_resets_everything():
+    log = EventLog(clock=ticker())
+    emit_life(log, 0)
+    emit_life(log, 1, terminal=CANCEL)
+    assert len(log) > 0
+    log.clear()
+    assert len(log) == 0 and log.request_ids() == []
+    # reusing a cleared req id starts a fresh, valid lifecycle
+    emit_life(log, 0)
+    assert log.validate_all(require_terminal=True) == []
 
 
 # ---------------------------------------------------------------------------

@@ -7,18 +7,22 @@ import json
 import os
 import subprocess
 import sys
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.configs.registry import get_arch
 from repro.core.generator import GeneratorConfig, init_generator
 from repro.serve import (AdapterRegistry, ExpansionCache, ServeEngine,
                          run_trace, sequential_reference)
 from repro.serve.metrics import Histogram, Metrics
-from repro.serve.scheduler import Scheduler, SlotPool
+from repro.serve.scheduler import (Request, RequestState, Scheduler,
+                                   SlotPool)
 from repro.train.steps import build_bundle
 
 GEN = GeneratorConfig(k=5, d=600, width=32, seed=0)
@@ -197,7 +201,7 @@ def test_scheduler_groups_by_task_and_length():
 def test_scheduler_rejects_oversized_and_empty():
     sched = Scheduler(SlotPool(n_slots=1, cache_cap=8))
     with pytest.raises(ValueError):
-        sched.submit("t", [1] * 6, 4)            # 10 > cap 8
+        sched.submit("t", [1] * 6, 4)            # lifetime 9 > cap 8
     with pytest.raises(ValueError):
         sched.submit("t", [], 4)
     with pytest.raises(ValueError):
@@ -205,14 +209,17 @@ def test_scheduler_rejects_oversized_and_empty():
 
 
 def test_submit_capacity_validation_boundary_and_message():
-    """Regression: prompt_len + max_new_tokens must be validated against
-    cache_cap at submit — exactly at the boundary, with an error that
-    names both budgets (a silently admitted oversized request would
-    overflow its cache row mid-decode)."""
+    """Regression: the request's LIFETIME cache footprint (prompt_len +
+    max_new_tokens - 1 — the final token is emitted, never written back)
+    is validated against cache_cap at submit — exactly at the boundary,
+    with an error that names both budgets. Validating the off-by-one
+    `prompt_len + max_new_tokens` instead would reject requests the cache
+    can actually serve."""
     sched = Scheduler(SlotPool(n_slots=2, cache_cap=16))
-    sched.submit("t", [1] * 8, 8)                # total 16 == cap: fine
+    sched.submit("t", [1] * 8, 8)                # lifetime 15 < cap: fine
+    sched.submit("t", [1] * 9, 8)                # lifetime 16 == cap: fine
     with pytest.raises(ValueError) as ei:
-        sched.submit("t", [1] * 9, 8)            # total 17 > cap 16
+        sched.submit("t", [1] * 10, 8)           # lifetime 17 > cap 16
     msg = str(ei.value)
     assert "prompt_len" in msg and "max_new_tokens" in msg
     assert "cache_cap=16" in msg
@@ -223,9 +230,71 @@ def test_submit_capacity_validation_boundary_and_message():
     pages = PagePool(n_pages=3, page_size=8, n_slots=2,
                      max_pages_per_slot=8)
     psched = Scheduler(pool, page_pool=pages)
-    psched.submit("t", [1] * 8, 8)               # 2 pages: fits
+    psched.submit("t", [1] * 8, 8)               # lifetime 15: 2 pages fit
     with pytest.raises(ValueError, match="KV pages"):
-        psched.submit("t", [1] * 16, 16)         # 4 pages > capacity 2
+        psched.submit("t", [1] * 16, 16)         # lifetime 31: 4 pages > 3
+
+
+def test_lifetime_page_accounting_at_page_size_boundaries():
+    """Submit validation and plan_step's reservation share ONE lifetime
+    definition (scheduler.lifetime_cache_tokens), checked at the two
+    boundaries where a total-based count and a lifetime-based count
+    disagree: total % page_size == 1 is exactly where counting the
+    never-written final token would demand one page more than decode ever
+    touches, turning "submit accepted it" into "reserve can never be
+    granted"."""
+    from repro.serve import PagePool
+    from repro.serve.scheduler import lifetime_cache_tokens
+
+    def fresh():
+        pool = SlotPool(n_slots=1, cache_cap=64)
+        # n_pages counts the null page: 3 physical -> 2 allocatable
+        pages = PagePool(n_pages=3, page_size=8, n_slots=1,
+                         max_pages_per_slot=2)
+        return Scheduler(pool, page_pool=pages), pages
+
+    # total 17 (% page_size == 1): lifetime 16 -> exactly the pool's 2
+    # pages. Submit accepts AND the very next plan admits it.
+    sched, pages = fresh()
+    assert lifetime_cache_tokens(9, 8) == 16
+    req = sched.submit("t", [1] * 9, 8)
+    sched.plan_step()
+    assert req.slot is not None and pages._reserved[req.slot] == 2
+    # total 16 (% page_size == 0): lifetime 15 -> 2 pages, same story
+    sched, pages = fresh()
+    req = sched.submit("t", [1] * 8, 8)
+    sched.plan_step()
+    assert req.slot is not None and pages._reserved[req.slot] == 2
+    # one past the boundary: lifetime 17 -> 3 pages can never be granted,
+    # rejected at submit (never enters the queue to starve)
+    sched, _ = fresh()
+    with pytest.raises(ValueError, match="KV pages"):
+        sched.submit("t", [1] * 10, 8)
+    assert len(sched.waiting) == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(prompt_len=st.integers(1, 40), max_new=st.integers(1, 40),
+       page_size=st.sampled_from([1, 2, 4, 8]),
+       alloc_pages=st.integers(1, 8))
+def test_submit_accept_implies_admittable_on_empty_pool(prompt_len, max_new,
+                                                        page_size,
+                                                        alloc_pages):
+    """Property: any request submit() accepts can be admitted by the next
+    plan_step on an otherwise-empty pool — the page reservation cannot
+    fail. (This is the invariant a split lifetime definition broke.)"""
+    from repro.serve import PagePool
+    pool = SlotPool(n_slots=1, cache_cap=page_size * alloc_pages)
+    pages = PagePool(n_pages=alloc_pages + 1, page_size=page_size, n_slots=1,
+                     max_pages_per_slot=alloc_pages)
+    sched = Scheduler(pool, page_pool=pages)
+    try:
+        req = sched.submit("t", [1] * prompt_len, max_new)
+    except ValueError:
+        return                       # rejected at submit: always safe
+    sched.plan_step()
+    assert req.slot is not None      # accepted -> admittable, no starvation
+    pages.check_invariants()
 
 
 def test_scheduler_admission_bound():
@@ -399,6 +468,105 @@ def test_scheduler_interference_clamps_horizon_when_queue_waits():
     sched2.submit("t", [1, 2], 20)
     sched2.submit("t", [1, 2], 20)
     assert sched2.plan_step().decode_horizon == 8     # default: no extra clamp
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_plan_horizon_invariants(seed):
+    """_plan_horizon invariants over randomized slot states: 0 exactly when
+    no non-prefilling slot owes tokens; otherwise a power of two, at most
+    max_decode_horizon, within 2x of the clamped soonest finish (the
+    round-up overshoot bound), with the interference clamp applied whenever
+    anything is queued or mid-chunked-prefill."""
+    import random as _random
+    rng = _random.Random(seed)
+    n_slots = rng.randint(1, 6)
+    max_dh = rng.choice([1, 2, 4, 8, 16])
+    inter = rng.randint(1, max_dh)
+    pool = SlotPool(n_slots=n_slots, cache_cap=128)
+    sched = Scheduler(pool, max_decode_horizon=max_dh,
+                      interference_horizon=inter)
+    owed, prefilling = [], False
+    for slot in range(n_slots):
+        roll = rng.random()
+        if roll < 0.3:
+            continue                            # slot stays free
+        max_new = rng.randint(1, 30)
+        req = Request(req_id=1000 + slot, task_id="t", prompt=(1, 2, 3),
+                      max_new_tokens=max_new)
+        pool.assign(slot, req)
+        if roll < 0.45:
+            req.chunked = True                  # mid-chunked-prefill: owes
+            req.prefill_done = rng.randint(0, 2)   # nothing yet, clamps K
+            prefilling = True
+            continue
+        done = rng.randint(0, max_new)
+        req.generated = [0] * done
+        pending = max_new - done - (1 if done == 0 else 0)
+        if pending > 0:
+            owed.append(pending)
+    n_wait = rng.randint(0, 2)
+    for _ in range(n_wait):
+        sched.submit("t", [1, 2], 4)
+
+    k = sched._plan_horizon()
+    if not owed:
+        assert k == 0                           # 0 only when no slot owes
+        return
+    assert k & (k - 1) == 0                     # power of two
+    assert 1 <= k <= max_dh
+    pre = min(min(owed), max_dh)
+    if n_wait or prefilling:
+        pre = min(pre, inter)                   # interference clamp
+        if inter == 1:
+            assert k == 1                       # clamp of 1 stays exactly 1
+    assert pre <= k < 2 * pre                   # round-up overshoot < 2x
+
+
+def test_admission_queue_priority_strict_and_edf_within_class():
+    """Admission order: strict across priority classes (lower first), EDF
+    within a class with no-deadline requests after every deadlined peer,
+    submit order as the final tiebreak."""
+    pool = SlotPool(n_slots=1, cache_cap=32)
+    sched = Scheduler(pool)
+    lo = sched.submit("t", [1, 2], 2, priority=1)
+    late = sched.submit("t", [1, 2], 2, deadline=100.0)
+    early = sched.submit("t", [1, 2], 2, deadline=50.0)
+    nodl = sched.submit("t", [1, 2], 2)
+    lo_early = sched.submit("t", [1, 2], 2, priority=1, deadline=10.0)
+    order = []
+    while sched.waiting:
+        sched.plan_step()                       # 1 slot: admits exactly one
+        req = pool.requests[0]
+        order.append(req)
+        sched.finish(req)
+    assert order == [early, late, nodl, lo_early, lo]
+
+
+def test_admission_queue_defaults_reduce_to_fifo():
+    pool = SlotPool(n_slots=1, cache_cap=32)
+    sched = Scheduler(pool)
+    reqs = [sched.submit("t", [1, 2], 2) for _ in range(4)]
+    order = []
+    while sched.waiting:
+        sched.plan_step()
+        order.append(pool.requests[0])
+        sched.finish(pool.requests[0])
+    assert order == reqs
+
+
+def test_cancel_waiting_request_never_admitted():
+    pool = SlotPool(n_slots=1, cache_cap=32)
+    sched = Scheduler(pool)
+    a = sched.submit("t", [1, 2], 2)
+    b = sched.submit("t", [1, 2], 2)
+    sched.cancel_waiting(a)
+    assert a.state is RequestState.CANCELLED
+    assert len(sched.waiting) == 1              # corpse not counted
+    sched.plan_step()
+    assert b.slot is not None and a.slot is None
+    with pytest.raises(ValueError):
+        sched.cancel_waiting(b)                 # active, not waiting
 
 
 def test_engine_mid_horizon_finish_matches_sequential(served, tmp_path):
@@ -1143,3 +1311,94 @@ def test_mesh_engine_quantized_stacks_matches_single_device_deferred():
     sharded = run_trace(trace, mesh=make_serve_mesh("2x4"))
     assert sharded["tokens"] == single["tokens"]
     assert sharded["counters"] == single["counters"]
+
+
+# ---------------------------------------------------------------------------
+# Engine: request lifecycle — cancel, livelock guard, deadline accounting.
+# ---------------------------------------------------------------------------
+
+def test_engine_cancel_mid_decode_reclaims_and_preserves_prefix(served,
+                                                                tmp_path):
+    """cancel() on an ACTIVE request stops it at the next block boundary:
+    the tokens already streamed are a prefix of the uncancelled run, the
+    slot and every page (allocated AND reserved) come back, the allocator
+    counters balance, and the other requests are untouched — still
+    token-identical to the sequential reference."""
+    bundle, base, gen_ws = served
+    reg = AdapterRegistry(str(tmp_path))
+    states = {t: perturbed_state(bundle, i) for i, t in enumerate("ab")}
+    for t, s in states.items():
+        reg.publish(t, s, GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=2, cache_cap=24)
+    traffic = [("a", [1, 2, 3], 8), ("b", [4, 5, 6, 7], 5), ("a", [8, 9], 3)]
+    reqs = [eng.submit(t, p, m) for t, p, m in traffic]
+    eng.step()                              # admits the first two
+    assert reqs[0].state is RequestState.ACTIVE
+    assert eng.cancel(reqs[0])
+    assert reqs[0].state is RequestState.CANCELLED
+    n0 = len(reqs[0].generated)
+    eng.run_until_idle()
+    assert len(reqs[0].generated) == n0, "cancelled request kept generating"
+    want = sequential_reference(bundle, base, gen_ws, states, traffic,
+                                cache_cap=24)
+    assert reqs[0].generated == want[0][:n0]
+    assert reqs[1].generated == want[1]
+    assert reqs[2].generated == want[2]
+    st = eng.pages.stats()
+    assert st["pages_in_use"] == 0 and st["reserved_pages"] == 0
+    assert st["allocations"] == st["frees"], st
+    eng.pages.check_invariants()
+    assert eng.metrics.snapshot()["requests_cancelled"] == 1
+    assert eng.events.summary(reqs[0].req_id)["terminal"] == "cancel"
+
+
+def test_engine_cancel_waiting_request_frees_queue_spot(served, tmp_path):
+    """Cancelling a still-WAITING request removes it before admission: it
+    never generates, and the surviving request matches the reference."""
+    bundle, base, gen_ws = served
+    reg = AdapterRegistry(str(tmp_path))
+    states = {t: perturbed_state(bundle, i) for i, t in enumerate("ab")}
+    for t, s in states.items():
+        reg.publish(t, s, GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=1, cache_cap=24)
+    ra = eng.submit("a", [1, 2, 3], 4)
+    rb = eng.submit("b", [1, 2, 3], 4)
+    eng.step()
+    assert rb.state is RequestState.WAITING
+    assert eng.cancel(rb)
+    eng.run_until_idle()
+    assert rb.generated == [] and rb.state is RequestState.CANCELLED
+    want = sequential_reference(bundle, base, gen_ws, states,
+                                [("a", [1, 2, 3], 4)], cache_cap=24)
+    assert ra.generated == want[0]
+
+
+def test_engine_livelock_guard_raises_instead_of_spinning(served, tmp_path):
+    """If has_work() is true but no step can make progress (here: leaked
+    page reservations starve every admission), run_until_idle raises a
+    RuntimeError naming the livelock instead of spinning forever."""
+    bundle, base, gen_ws = served
+    reg = AdapterRegistry(str(tmp_path))
+    reg.publish("a", perturbed_state(bundle, 0), GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=2, cache_cap=24,
+                      page_size=8)
+    for slot in range(2):                   # leak: pool can never admit
+        eng.pages.reserve(slot, eng.pages.max_pages_per_slot)
+    eng.submit("a", [1, 2, 3], 8)
+    with pytest.raises(RuntimeError, match="livelock"):
+        eng.run_until_idle()
+
+
+def test_engine_deadline_miss_recorded_not_fatal(served, tmp_path):
+    """A request past its deadline still runs to completion; the miss is
+    recorded as a deadline_miss event (summary flag) and counter — SLO
+    accounting, not enforcement, at the engine layer."""
+    bundle, base, gen_ws = served
+    reg = AdapterRegistry(str(tmp_path))
+    reg.publish("a", perturbed_state(bundle, 0), GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=2, cache_cap=24)
+    r = eng.submit("a", [1, 2, 3], 4, deadline=time.perf_counter() - 1.0)
+    eng.run_until_idle()
+    s = eng.events.summary(r.req_id)
+    assert s["deadline_missed"] and s["terminal"] == "finish"
+    assert eng.metrics.snapshot()["deadline_misses"] == 1
