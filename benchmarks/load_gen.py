@@ -51,25 +51,51 @@ def generate(seed: int, *, n_requests: int, rate_rps: float,
              tasks: list[str], vocab: int,
              prompt_len: tuple[int, int] = (4, 24),
              max_new: tuple[int, int] = (2, 12),
-             tail_shape: float = 1.5) -> list[Arrival]:
+             tail_shape: float = 1.5,
+             shared_prefixes: int = 0, prefix_len: int = 0,
+             zipf_a: float = 1.1) -> list[Arrival]:
     """The full schedule for one run. rate_rps sets the Poisson arrival
     rate (offered load); prompt_len / max_new bound the Pareto length
     draws; tail_shape is the Pareto index (lower = heavier tail; 1.5 keeps
-    a finite mean with a pronounced tail)."""
+    a finite mean with a pronounced tail).
+
+    shared_prefixes > 0 models system/task-prompt reuse (the traffic shape
+    prefix caching exists for): each task gets that many fixed
+    ``prefix_len``-token system prompts, and every request prepends one
+    chosen Zipf(zipf_a)-distributed by popularity rank — a few prompts
+    dominate, a long tail stays cold — ahead of its fresh Pareto-length
+    tail. shared_prefixes=0 (the default) is byte-identical to the
+    schedules this generator always produced: the prefix draws only
+    consume rng state when the feature is on."""
     if rate_rps <= 0:
         raise ValueError("rate_rps must be > 0")
     if not tasks:
         raise ValueError("need at least one task id")
+    if shared_prefixes and prefix_len < 1:
+        raise ValueError("shared_prefixes needs prefix_len >= 1")
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate_rps, size=n_requests)
     times = np.cumsum(gaps)
     plens = _bounded_pareto(rng, n_requests, *prompt_len, tail_shape)
     budgets = _bounded_pareto(rng, n_requests, *max_new, tail_shape)
+    pools, picks = {}, None
+    if shared_prefixes:
+        # per-task system-prompt pools, then one popularity-rank pick per
+        # request: p(rank) ~ 1 / (rank + 1)^a, the discrete Zipf shape
+        for t in tasks:
+            pools[t] = [tuple(int(x) for x in
+                              rng.integers(0, vocab, prefix_len))
+                        for _ in range(shared_prefixes)]
+        w = 1.0 / np.arange(1, shared_prefixes + 1) ** zipf_a
+        picks = rng.choice(shared_prefixes, size=n_requests, p=w / w.sum())
     out = []
     for i in range(n_requests):
+        task = tasks[i % len(tasks)]
         prompt = tuple(int(t) for t in
                        rng.integers(0, vocab, int(plens[i])))
-        out.append(Arrival(t=float(times[i]), task_id=tasks[i % len(tasks)],
+        if shared_prefixes:
+            prompt = pools[task][int(picks[i])] + prompt
+        out.append(Arrival(t=float(times[i]), task_id=task,
                            prompt=prompt,
                            max_new_tokens=int(budgets[i])))
     return out

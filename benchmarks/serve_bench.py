@@ -67,6 +67,14 @@ Mixed-task traffic (>= 4 task adapters) through the serving arms:
                   reference (cancelled ones prefix-identical), the 2x
                   overload actually sheds (rejected > 0), and the arrival
                   schedule is deterministic for its seed;
+  engine-prefix - copy-on-write prefix sharing (prefix_cache=True) on a
+                  load_gen schedule with Zipf-distributed shared system
+                  prompts, vs the identical no-cache configuration. Both
+                  run chunked prefill so prefill work is countable. HARD
+                  GATES: token identity vs the no-cache engine and the
+                  sequential reference (every run), >= 2x fewer prefill
+                  chunk steps (every run — host-side deterministic), and
+                  a strict TTFT p50 drop on the smoke single-device lane;
   engine-mesh   - (--mesh DxM only) the same fused path sharded over a
                   (data, model) device mesh (CPU-simulated host devices are
                   requested automatically before jax initializes). This arm
@@ -165,7 +173,8 @@ def make_traffic(n_requests, tasks, vocab, prompt_lens, max_news, seed=0):
 def run_engine(bundle, base, gen_ws, registry, traffic, *, n_slots,
                cache_cap, byte_budget, horizon=8, legacy=False, mesh=None,
                dense_cache=None, tracer=None, event_log=None,
-               quantized_stacks=None):
+               quantized_stacks=None, prefill_chunk=None, n_pages=None,
+               prefix_cache=False, debug_invariants=None):
     # the engine adopts a null-tracer cache into its own trace, so the
     # traced arm's evictions land on the same timeline without plumbing
     cache = ExpansionCache(byte_budget)
@@ -174,7 +183,10 @@ def run_engine(bundle, base, gen_ws, registry, traffic, *, n_slots,
                          decode_horizon=horizon, legacy_decode=legacy,
                          dense_cache=dense_cache, tracer=tracer,
                          event_log=event_log, metrics=Metrics(), mesh=mesh,
-                         quantized_stacks=quantized_stacks)
+                         quantized_stacks=quantized_stacks,
+                         prefill_chunk=prefill_chunk, n_pages=n_pages,
+                         prefix_cache=prefix_cache,
+                         debug_invariants=debug_invariants)
     # warmup: run the FULL traffic once untimed so every (prompt_len,
     # prefill-group-size) shape AND every decode-block length is compiled
     # before the measured window. Expansions stay cached (the cached arm
@@ -653,6 +665,83 @@ def main():
             f.write("\n")
         print(f"# wrote {args.latency_out}")
 
+    # engine-prefix arm: the load_gen schedule with Zipf-distributed shared
+    # system prompts (shared_prefixes fixed prompts per task; a few
+    # dominate, a long tail stays cold) replayed through the prefix-sharing
+    # paged engine and the SAME configuration with the cache off. Both run
+    # chunked prefill so prefill work is countable in chunk steps; the
+    # prefix engine forks the cached pages at admission and resumes at the
+    # first uncached token. HARD GATES: token identity vs the no-cache
+    # engine AND the sequential reference (every run), >= 2x fewer prefill
+    # chunk steps (every run — chunk counts are host-side deterministic,
+    # noise-free), and a strict TTFT p50 drop (smoke single-device lane,
+    # the same scoping as the other timing floors).
+    px_prefix_len = 32          # 2 full pages of 16 — fully cacheable
+    px_shared = 2               # system prompts per task, Zipf-picked
+    px_chunk = 8
+    px_sched = load_gen.generate(args.async_seed, n_requests=args.requests,
+                                 rate_rps=1.0, tasks=tasks,
+                                 vocab=bundle.model_cfg.vocab,
+                                 shared_prefixes=px_shared,
+                                 prefix_len=px_prefix_len)
+    px_traffic = [(a.task_id, list(a.prompt), a.max_new_tokens)
+                  for a in px_sched]
+    px_cap = round_serve_cache_cap(
+        max(len(p) + m for _, p, m in px_traffic) + 1, args.mesh)
+    # a roomy pool (vs the capacity-parity default) keeps the arm measuring
+    # steady-state sharing, not LRU churn — eviction under pressure is
+    # tests/test_prefix.py's job
+    # smoke (= the CI lane) arms allocator self-checks on BOTH sides of
+    # the pair: check_invariants() after every mutation, so a CoW /
+    # refcount bug fails at the mutation site instead of as a token diff.
+    # Scoped to this pair, not the env-wide switch: the paged-vs-dense
+    # throughput floor times the cached arm's allocator hot path, and
+    # arming checks on only the paged side of THAT ratio would poison it.
+    # Here both sides pay the same tax and the TTFT gate has ~5x margin.
+    px_kw = dict(n_slots=args.n_slots, cache_cap=px_cap, byte_budget=None,
+                 horizon=args.horizon, prefill_chunk=px_chunk, n_pages=129,
+                 debug_invariants=True if args.smoke else None)
+    pon_tok, pon_dt, pon_eng, pon_out = run_engine(
+        bundle, base, gen_ws, registry, px_traffic, prefix_cache=True,
+        **px_kw)
+    poff_tok, poff_dt, poff_eng, poff_out = run_engine(
+        bundle, base, gen_ws, registry, px_traffic, **px_kw)
+    px_ref = sequential_reference(bundle, base, gen_ws, states, px_traffic,
+                                  cache_cap=px_cap)
+    if pon_out != px_ref or poff_out != px_ref:
+        raise SystemExit("engine-prefix tokens diverged from the no-cache "
+                         "engine / sequential reference on the shared-"
+                         "prefix workload")
+    pon_eng.pages.check_invariants()
+    snap_on, snap_off = (pon_eng.metrics.snapshot(),
+                         poff_eng.metrics.snapshot())
+    chunks_on, chunks_off = (snap_on["prefill_chunks"],
+                             snap_off["prefill_chunks"])
+    px_idx = pon_eng.prefix.stats()
+    px_pool = pon_eng.pages.stats()
+    ttft_on = snap_on["ttft_s"]["p50"]
+    ttft_off = snap_off["ttft_s"]["p50"]
+    print(f"# engine-prefix: {px_idx['hits']} hits / {px_idx['misses']} "
+          f"misses ({px_idx['hit_tokens']} prompt tokens served from "
+          f"cache), {px_pool['forks']} page forks, "
+          f"{px_pool['cow_copies']} CoW copies, "
+          f"{px_idx['retained_pages']} pages retained; prefill chunk steps "
+          f"{chunks_on} vs {chunks_off} no-cache "
+          f"({chunks_off / max(chunks_on, 1):.2f}x; floor 2.00x), "
+          f"ttft p50 {ttft_on * 1e3:.1f} ms vs {ttft_off * 1e3:.1f} ms")
+    if px_idx["hits"] == 0 or px_pool["forks"] == 0:
+        raise SystemExit("engine-prefix never hit its own cache — the "
+                         "shared-prefix workload is not exercising sharing")
+    if chunks_off < 2 * chunks_on:
+        raise SystemExit(
+            f"engine-prefix prefill collapse is only "
+            f"{chunks_off / max(chunks_on, 1):.2f}x ({chunks_on} chunk "
+            f"steps vs {chunks_off} no-cache) — below the 2.00x floor")
+    if args.mesh is None and args.smoke and not ttft_on < ttft_off:
+        raise SystemExit(
+            f"engine-prefix ttft p50 {ttft_on * 1e3:.2f} ms did not drop "
+            f"below the no-cache arm's {ttft_off * 1e3:.2f} ms")
+
     mesh_row = None
     if args.mesh:
         from repro.launch.mesh import make_serve_mesh
@@ -722,7 +811,12 @@ def main():
             ("engine-dense", dense_tok, dense_dt),
             ("engine-q8", q8_tok, q8_dt),
             ("engine-quantized-resident", nf4_tok, nf4_dt),
-            ("engine-traced", trc_tok, trc_dt)]
+            ("engine-traced", trc_tok, trc_dt),
+            # the prefix pair replays the shared-prefix schedule, not the
+            # common traffic above — comparable to each other, not to the
+            # other rows
+            ("engine-prefix", pon_tok, pon_dt),
+            ("engine-prefix-off", poff_tok, poff_dt)]
     if mesh_row:
         rows.append(mesh_row)
     print(f"{'arm':<27}{'gen tokens':>11}{'seconds':>9}{'tok/s':>9}")
@@ -850,7 +944,9 @@ def main():
                                       ("engine-dense", dense_eng),
                                       ("engine-q8", q8_eng),
                                       ("engine-quantized-resident", nf4_eng),
-                                      ("engine-traced", trc_eng)]},
+                                      ("engine-traced", trc_eng),
+                                      ("engine-prefix", pon_eng),
+                                      ("engine-prefix-off", poff_eng)]},
         # event-log-derived request latency summaries for the production
         # (cached) arm, surfaced at top level so the trajectory is greppable
         "latency": {h: snap[h] for h in ("ttft_s", "itl_s", "queue_wait_s",
@@ -893,6 +989,26 @@ def main():
         "trace": {"events": len(tracer.events),
                   "lifecycle_events": len(event_log),
                   "saved": args.trace_out},
+        # engine-prefix arm: prefix sharing on the Zipf shared-system-
+        # prompt workload. The chunk-step collapse and TTFT drop are the
+        # in-run HARD GATES (already enforced above); recorded here so the
+        # sharing trajectory is trackable across PRs. Index/pool counters
+        # are cumulative over warmup + every measured replay.
+        "prefix": {
+            "requests": args.requests,
+            "shared_prefixes_per_task": px_shared,
+            "prefix_len": px_prefix_len,
+            "prefill_chunk": px_chunk,
+            "schedule_fingerprint": load_gen.fingerprint(px_sched),
+            "prefill_chunks_on": chunks_on,
+            "prefill_chunks_off": chunks_off,
+            "chunk_reduction": round(chunks_off / max(chunks_on, 1), 3),
+            "ttft_p50_on_s": round(ttft_on, 6),
+            "ttft_p50_off_s": round(ttft_off, 6),
+            "index": px_idx,
+            "pool_forks": px_pool["forks"],
+            "pool_cow_copies": px_pool["cow_copies"],
+        },
         # engine-async arm: SLO-aware front end under open-loop load.
         # Per-level TTFT/ITL percentiles and goodput; the identity/leak
         # gates already ran in-process (hard SystemExit on violation)

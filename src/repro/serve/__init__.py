@@ -11,6 +11,7 @@ from repro.serve.engine import ServeEngine, sequential_reference
 from repro.serve.frontend import AsyncFrontend, RejectedError, TokenStream
 from repro.serve.metrics import Metrics
 from repro.serve.paged import PagePool, RefPagePool, pages_for_tokens
+from repro.serve.prefix import PrefixIndex
 from repro.serve.registry import AdapterBundle, AdapterRegistry
 from repro.serve.scheduler import (ChunkPrefill, Request, RequestState,
                                    Scheduler, SlotPool, StepPlan)
@@ -19,7 +20,8 @@ from repro.serve.trace import run_trace
 __all__ = [
     "AdapterBundle", "AdapterRegistry", "AsyncFrontend", "ChunkPrefill",
     "EventLog", "ExpansionCache", "Metrics", "NULL_TRACER", "PagePool",
-    "RefPagePool", "RejectedError", "Request", "RequestState", "Scheduler",
+    "PrefixIndex", "RefPagePool", "RejectedError", "Request", "RequestState",
+    "Scheduler",
     "ServeEngine", "SlotPool", "StepPlan", "TokenStream", "Tracer",
     "pages_for_tokens", "render_prometheus", "run_trace",
     "sequential_reference", "tree_bytes",

@@ -53,6 +53,7 @@ the two token-identical on the same request trace.
 from __future__ import annotations
 
 import contextlib
+import os
 import time
 from typing import Any, Sequence
 
@@ -76,6 +77,7 @@ from repro.obs.tracer import (NULL_TRACER, TID_DECODE, TID_ENGINE,
 from repro.serve.cache import ExpansionCache
 from repro.serve.metrics import Metrics
 from repro.serve.paged import PagePool, pages_for_tokens
+from repro.serve.prefix import PrefixIndex
 from repro.serve.registry import AdapterRegistry
 from repro.serve.scheduler import (ChunkPrefill, PrefillGroup, Request,
                                    RequestState, Scheduler, SlotPool)
@@ -113,6 +115,14 @@ def _write_slots(stacked: PyTree, eff: PyTree, idx: Array) -> PyTree:
     return jax.tree.map(
         lambda st, e: st.at[:, idx].set(e[:, None].astype(st.dtype)),
         stacked, eff)
+
+
+def _copy_kv_page(kv: PyTree, src: Array, dst: Array) -> PyTree:
+    """Copy-on-write device copy: duplicate one physical page (axis 1 of
+    every (L, n_pages, Hkv, page, hd) leaf) from src to dst. Jitted with
+    the pool donated — a CoW fork costs one page-sized device copy, never
+    a pool copy."""
+    return jax.tree.map(lambda v: v.at[:, dst].set(v[:, src]), kv)
 
 
 def _scatter_prefill(kv: PyTree, group_cache: PyTree, tokens: Array,
@@ -245,7 +255,21 @@ class ServeEngine:
     capacity parity with the dense pool; shrink it to cap memory.
     prefill_chunk (paged only) caches prompts longer than the threshold in
     chunk-sized pieces interleaved with decode blocks, so one long prompt
-    cannot stall active decodes. dense_cache=True keeps the PR-2 dense
+    cannot stall active decodes.
+    prefix_cache (paged only): radix-tree prefix sharing over the page
+    pool (serve/prefix.py). Admission looks up the longest cached
+    (task, prompt-prefix), forks the covered FULL pages into the new
+    slot's table refcounted (PagePool.fork_prefix), and prefill resumes
+    at the first uncached token via the chunked-prefill path; a write
+    landing in a shared page triggers a copy-on-write device page copy
+    first. prefix_cache_pages caps retained pages (LRU eviction of
+    refcount-zero nodes; allocation pressure also reclaims on demand).
+    Token streams are identical with the cache on or off —
+    tests/test_serve.py holds the differential.
+    debug_invariants runs PagePool.check_invariants() after every
+    allocator mutation (None = env REPRO_DEBUG_INVARIANTS; the test
+    suite arms it globally so CoW bugs fail at the mutation site).
+    dense_cache=True keeps the PR-2 dense
     pooled cache — the differential/benchmark arm the paged engine is held
     token-identical against (and the only layout for hybrid/rwkv state or
     legacy_decode).
@@ -291,6 +315,9 @@ class ServeEngine:
                  page_size: int = 16,
                  n_pages: int | None = None,
                  prefill_chunk: int | None = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_pages: int | None = None,
+                 debug_invariants: bool | None = None,
                  metrics: Metrics | None = None,
                  tracer: Tracer | None = None,
                  event_log: EventLog | None = None,
@@ -326,6 +353,16 @@ class ServeEngine:
         if dense_cache and prefill_chunk is not None:
             raise ValueError("chunked prefill lands prompt pieces in KV "
                              "pages; it needs the paged cache")
+        if dense_cache and prefix_cache:
+            raise ValueError("prefix sharing forks physical KV pages; it "
+                             "needs the paged cache")
+        # debug_invariants=None resolves from the environment so the whole
+        # test suite / bench smoke arms can arm allocator self-checks
+        # without threading a flag through every construction site.
+        if debug_invariants is None:
+            debug_invariants = os.environ.get(
+                "REPRO_DEBUG_INVARIANTS", "0") not in ("", "0", "false")
+        self.debug_invariants = debug_invariants
         self.dense_cache = dense_cache
         self.bundle = bundle
         self.cfg = bundle.model_cfg
@@ -398,14 +435,28 @@ class ServeEngine:
                             dp *= mesh.shape[a]
                     n_pages = -(-n_pages // dp) * dp
             self.pages = PagePool(n_pages, page_size, n_slots, max_pps,
-                                  tracer=self.tracer)
+                                  tracer=self.tracer,
+                                  debug=debug_invariants)
             self.max_pages_per_slot = max_pps
+        # prefix_cache: radix index over the page pool (serve/prefix.py) —
+        # admission forks the longest cached (task, prompt-prefix) into the
+        # new slot's table and prefill resumes at the first uncached token.
+        # Allocation pressure reclaims cold refcount-zero prefixes via the
+        # pool's reclaim hook; a republished adapter invalidates its task's
+        # scopes (cached KV depends on the weights that produced it).
+        self.prefix: PrefixIndex | None = None
+        if prefix_cache:
+            self.prefix = PrefixIndex(self.pages,
+                                      max_pages=prefix_cache_pages)
+            self.pages.reclaim = self.prefix.evict
+            registry.subscribe(self.prefix.invalidate_task)
         self.scheduler = Scheduler(
             self.pool, max_prefill_requests=max_prefill_requests,
             max_prefill_group=max_prefill_group,
             max_decode_horizon=1 if legacy_decode else decode_horizon,
             interference_horizon=interference_horizon,
             page_pool=self.pages, prefill_chunk=prefill_chunk,
+            prefix_lookup=self._prefix_probe if self.prefix else None,
             event_log=self.events)
         registry.subscribe(self.cache.invalidate_task)
 
@@ -477,6 +528,11 @@ class ServeEngine:
                         **sharding_kw["activate"]),
                 "activate_slots", TID_PREFILL)
             self._chunk_steps: dict[int, Any] = {}   # num_pages -> jitted
+            # CoW fork copy: one page duplicated inside the donated pool
+            self._page_copy = instr(
+                jax.jit(_copy_kv_page, donate_argnums=(0,),
+                        **sharding_kw["page_copy"]),
+                "page_copy", TID_PAGES)
         if not legacy_decode:
             # cancellation path: zeroes a slot's device counters so the next
             # fused block masks it (legacy per-token decode masks on the
@@ -589,7 +645,7 @@ class ServeEngine:
         explicit sharding kwargs for the hot-path jits. Single-device mode
         returns empty kwargs and touches nothing."""
         empty = {"scatter": {}, "slot_writer": {}, "expand": {},
-                 "activate": {}, "chunk": {}, "quant": {}}
+                 "activate": {}, "chunk": {}, "quant": {}, "page_copy": {}}
         if self.mesh is None:
             self._repl_sh = None
             return empty
@@ -684,6 +740,9 @@ class ServeEngine:
             # replicated counters replicated
             "activate": {"out_shardings": (vec, vec, vec)},
             "chunk": {"out_shardings": (vec, self._kv_sh)},
+            # CoW page copy mutates the donated pool in place: canonical
+            # pool sharding in and out, scalar page ids replicated
+            "page_copy": {"out_shardings": self._kv_sh},
         }
 
     def _place_eff(self, eff: dict[str, Array]) -> dict[str, Array]:
@@ -727,6 +786,14 @@ class ServeEngine:
         if self.pages is not None:
             for name in ("pages_in_use", "free_pages", "peak_pages_in_use",
                          "kv_bytes_in_use"):
+                self.metrics.gauge(name)
+        if self.prefix is not None:
+            # prefix-cache health: hit/miss/covered-token totals plus
+            # retained/evicted bytes (gauges mirroring PrefixIndex.stats so
+            # the Prometheus exposition shows cache effectiveness live)
+            for name in ("prefix_hits", "prefix_misses", "prefix_hit_tokens",
+                         "prefix_cached_pages", "prefix_cached_bytes",
+                         "prefix_evicted_bytes"):
                 self.metrics.gauge(name)
 
     def reset_metrics(self) -> Metrics:
@@ -866,6 +933,36 @@ class ServeEngine:
             time.perf_counter() - t0)
         self.metrics.counter("expansions").inc()
         return (task_id, bundle_hash), eff
+
+    # ------------------------------------------------------------------
+    # Prefix cache (CoW page sharing).
+    # ------------------------------------------------------------------
+    def _prefix_probe(self, req: Request) -> tuple[list[int], int]:
+        """Scheduler admission hook: longest cached prefix of the request's
+        prompt under its task's LIVE bundle hash. Scoping by (task_id,
+        bundle_hash) means a republished adapter can never serve prefixes
+        its old weights produced — the new hash starts a cold scope."""
+        scope = (req.task_id, self.registry.current_hash(req.task_id))
+        return self.prefix.lookup(scope, tuple(req.prompt))
+
+    def _prefix_insert(self, req: Request):
+        """Index a freshly prefilled request's FULL prompt pages so later
+        admissions can fork them. Only pages strictly below prompt_len are
+        offered (decode writes start AT prompt_len, so the page holding it
+        is still mutable and stays private to the slot). Pages already on
+        the indexed path are skipped by the index — their duplicates stay
+        slot-owned and die with the slot."""
+        if self.prefix is None:
+            return
+        n_full = req.prompt_len // self.page_size
+        if n_full == 0:
+            return
+        sa = self._slot_adapters[req.slot]
+        if sa is None:                      # cancelled mid-group
+            return
+        pids = self.pages.slot_pages(req.slot)[:n_full]
+        self.prefix.insert(sa[0], tuple(req.prompt[:n_full * self.page_size]),
+                           pids)
 
     # ------------------------------------------------------------------
     # Request API.
@@ -1009,6 +1106,17 @@ class ServeEngine:
                 st["peak_pages_in_use"])
             self.metrics.gauge("kv_bytes_in_use").set(
                 st["pages_in_use"] * self._page_bytes)
+        if self.prefix is not None:
+            pst = self.prefix.stats()
+            self.metrics.gauge("prefix_hits").set(pst["hits"])
+            self.metrics.gauge("prefix_misses").set(pst["misses"])
+            self.metrics.gauge("prefix_hit_tokens").set(pst["hit_tokens"])
+            self.metrics.gauge("prefix_cached_pages").set(
+                pst["retained_pages"])
+            self.metrics.gauge("prefix_cached_bytes").set(
+                pst["retained_pages"] * self._page_bytes)
+            self.metrics.gauge("prefix_evicted_bytes").set(
+                pst["evictions"] * self._page_bytes)
         self.metrics.gauge("active_slots").set(len(self.pool.active_slots()))
         self.metrics.gauge("adapter_stack_bytes").set(
             self._adapter_stack_nbytes)
@@ -1223,6 +1331,9 @@ class ServeEngine:
             self._slot_adapters[req.slot] = (key, eff)
             if self._coded_stacks:
                 self._slot_qparts[req.slot] = stack_eff
+        if self.prefix is not None:
+            for req in group.requests:
+                self._prefix_insert(req)
         self.metrics.counter("prefill_batches").inc()
         self.metrics.counter("prefill_tokens").inc(int(prompts.size))
         self.metrics.counter("tokens_generated").inc(len(group.requests))
@@ -1271,6 +1382,19 @@ class ServeEngine:
         key, eff = self._slot_adapters[chunk.slot]
         params = self._prefill_params(key, eff)
         sidx = np.asarray([chunk.slot], np.int32)
+        # copy-on-write: if this chunk's first write position lands in a
+        # page the slot shares (forked prefix), the allocator hands us a
+        # fresh physical page and the device copy duplicates the shared
+        # content before the chunk overwrites the divergent tail. Must run
+        # BEFORE the table row is snapshotted below — the row must carry
+        # the private copy, not the shared original.
+        cw = self.pages.cow_write(chunk.slot, chunk.start)
+        if cw is not None:
+            src, dst = cw
+            with self.tracer.span("page_copy", tid=TID_PAGES,
+                                  src=src, dst=dst):
+                self.kv = self._page_copy(self.kv, np.int32(src),
+                                          np.int32(dst))
         with self.tracer.span("page_alloc", tid=TID_PAGES) as sp:
             a0 = self.pages.allocations
             self.pages.ensure(chunk.slot, chunk.start + chunk.length)
@@ -1301,6 +1425,7 @@ class ServeEngine:
                          start=chunk.start, length=chunk.length)
         self._observe_first_token(req)
         self.metrics.counter("tokens_generated").inc()
+        self._prefix_insert(req)
         if req.done:
             finished.append(req)
 

@@ -1,5 +1,5 @@
 """Block-paged KV memory control plane: fixed-size page pool, per-slot page
-tables, and a free-list allocator.
+tables, a free-list allocator, and refcounted copy-on-write prefix sharing.
 
 The device arrays (the page pool itself and the device-resident page table)
 live in the engine; this module is the pure-python allocator that decides
@@ -19,18 +19,44 @@ Layout contract (models/lm.py::init_paged_cache):
 
 Allocation discipline (the engine drives it):
 
-  * admission RESERVES a request's worst-case lifetime pages (the scheduler
-    admits only while reservations fit the pool), so decode can never
-    deadlock mid-flight needing a page that does not exist;
+  * admission RESERVES a request's worst-case lifetime FRESH pages (the
+    scheduler admits only while reservations fit the pool), so decode can
+    never deadlock mid-flight needing a page that does not exist;
   * pages are ALLOCATED lazily against the reservation — bulk at prefill
     scatter / per chunk during chunked prefill, and alloc-on-write ahead of
     each fused decode block (`ensure` covers exactly the positions the
     block will touch);
-  * `free_slot` returns every page on finish. Bytes in use therefore track
-    tokens actually cached, not n_slots x cache_cap worst case — the whole
-    point of paging the pool.
+  * `free_slot` dereferences every page on finish; pages return to the
+    free list only at refcount zero. Bytes in use therefore track tokens
+    actually cached, not n_slots x cache_cap worst case.
+
+Prefix sharing (serve/prefix.py drives it):
+
+  * every physical page carries a refcount: one reference per slot-table
+    occurrence plus one if the prefix index retains it (`retain`). The
+    refcount state machine is: free (0) -> owned (1, `ensure`) -> shared
+    (>1, `fork_prefix`/`retain`) -> back down via `cow_write`/`release`/
+    `free_slot` -> free again only at exactly 0;
+  * `fork_prefix` maps already-live pages (a cached prompt prefix) into a
+    fresh slot's table, bumping refcounts — no device copy, no free-list
+    traffic. Forked pages are read-shared;
+  * a shared page must be COPIED before the first divergent write:
+    `cow_write(slot, pos)` returns a (src, dst) physical pair when the
+    page backing `pos` has refcount > 1 — the engine copies the device
+    page, the allocator swaps the table entry to the fresh dst and drops
+    the shared reference. Sole-owner pages write in place (returns None);
+  * reservations count FRESH pages only (a forked page is charged to
+    whoever first allocated it — shared pages are charged once): a hit on
+    F fully-shared pages reserves `lifetime_pages - F`, which prepays the
+    one potential CoW copy when the prefix ends mid-page;
+  * admission must stay deadlock-free with the index holding pages, so
+    `can_reserve` budgets against free + reclaimable pages (cached pages
+    nobody maps, refcount exactly 1) and `ensure`/`cow_write` call the
+    `reclaim` hook (the index's LRU eviction) when the free list runs dry.
 """
 from __future__ import annotations
+
+from collections import Counter
 
 import numpy as np
 
@@ -45,7 +71,8 @@ def pages_for_tokens(n_tokens: int, page_size: int) -> int:
 
 
 class PagePool:
-    """Free-list page allocator with per-slot page tables + reservations.
+    """Free-list page allocator with per-slot page tables, reservations,
+    and refcounted copy-on-write sharing.
 
     n_pages counts physical pages INCLUDING the null page, matching the
     device pool's leading dim; capacity (allocatable pages) is n_pages - 1.
@@ -53,10 +80,15 @@ class PagePool:
     which keeps the working set dense and makes allocation order
     deterministic — the sharded and single-device engines replay identical
     traces into identical page assignments.
+
+    With debug=True every mutating op re-runs check_invariants() before
+    returning, so a CoW bug fails at the mutation site instead of N ops
+    later (the engine's `debug_invariants` flag threads through to here).
     """
 
     def __init__(self, n_pages: int, page_size: int, n_slots: int,
-                 max_pages_per_slot: int, tracer=NULL_TRACER):
+                 max_pages_per_slot: int, tracer=NULL_TRACER,
+                 debug: bool = False):
         if n_pages < 2:
             raise ValueError("need at least one allocatable page + null")
         if page_size < 1 or max_pages_per_slot < 1:
@@ -69,16 +101,29 @@ class PagePool:
         self._free: list[int] = list(range(n_pages - 1, NULL_PAGE, -1))
         self.table = np.full((n_slots, max_pages_per_slot), NULL_PAGE,
                              np.int32)
-        self._n_alloc = [0] * n_slots       # logical pages allocated per slot
-        self._reserved = [0] * n_slots      # lifetime reservation per slot
+        self._n_alloc = [0] * n_slots       # logical pages mapped per slot
+        self._reserved = [0] * n_slots      # FRESH-page reservation per slot
+        # per-slot logical indices still backed by a forked (read-shared)
+        # page — cleared entry-by-entry as cow_write replaces them
+        self._forked: list[set[int]] = [set() for _ in range(n_slots)]
+        # physical refcounts: slot-table occurrences + 1 if prefix-cached
+        self.refcount = [0] * n_pages
+        self._cached: set[int] = set()      # pages the prefix index retains
+        # optional pressure-relief hook: callable(n_pages) -> pages freed;
+        # the prefix index wires its LRU eviction here so an allocation
+        # against a dry free list reclaims cold cached prefixes first
+        self.reclaim = None
         self.peak_pages_in_use = 0
-        self.allocations = 0                # pages handed out, cumulative
-        self.frees = 0                      # pages returned, cumulative
+        self.allocations = 0                # fresh pages handed out
+        self.frees = 0                      # pages returned to the free list
+        self.forks = 0                      # shared mappings created
+        self.cow_copies = 0                 # divergent writes that copied
         # optional repro.obs tracer: the pool samples its occupancy onto a
         # Perfetto counter track whenever it actually changes (the engine
         # wraps the alloc/free CALL SITES in spans; the counter series here
         # is what makes page pressure readable as a graph over time)
         self.tracer = tracer
+        self.debug = debug
 
     # ------------------------------------------------------------------
     @property
@@ -93,74 +138,234 @@ class PagePool:
 
     @property
     def pages_in_use(self) -> int:
-        """Pages currently backing some slot."""
+        """Physical pages off the free list (slot-mapped or prefix-cached);
+        a page shared by many slots counts once — charged once."""
         return self.capacity_pages - len(self._free)
 
     @property
     def reserved_pages(self) -> int:
-        """Worst-case pages promised to live slots (>= pages_in_use)."""
+        """Worst-case FRESH pages promised to live slots."""
         return sum(self._reserved)
+
+    @property
+    def outstanding_pages(self) -> int:
+        """Fresh pages live slots may still demand (reservations minus
+        fresh pages already allocated) — what admission budgets against."""
+        return sum(self._reserved[s] - self._fresh_used(s)
+                   for s in range(self.n_slots))
+
+    @property
+    def cached_pages(self) -> int:
+        """Pages the prefix index currently retains."""
+        return len(self._cached)
+
+    @property
+    def reclaimable_pages(self) -> int:
+        """Cached pages no slot maps (refcount exactly 1) — what the
+        index's LRU eviction could free under pressure."""
+        return sum(1 for p in self._cached if self.refcount[p] == 1)
+
+    def _fresh_used(self, slot: int) -> int:
+        return self._n_alloc[slot] - len(self._forked[slot])
 
     def slot_pages(self, slot: int) -> list[int]:
         """The slot's physical pages in logical order."""
         return [int(p) for p in self.table[slot, : self._n_alloc[slot]]]
 
+    def _maybe_check(self):
+        if self.debug:
+            self.check_invariants()
+
     # ------------------------------------------------------------------
-    def can_reserve(self, n_pages: int) -> bool:
-        """True if a lifetime reservation of n_pages fits beside every
-        outstanding reservation (admission control)."""
+    def can_reserve(self, n_pages: int, n_forked: int = 0) -> bool:
+        """True if a lifetime reservation of n_pages fresh pages fits
+        beside every outstanding reservation (admission control). n_forked
+        is how many reclaimable cached pages the admission would pin by
+        forking — pinned pages stop being evictable, so they are deducted
+        from the reclaimable budget up front (conservatively: a page
+        already pinned by another slot is deducted anyway)."""
+        headroom = self.free_pages + max(
+            0, self.reclaimable_pages - n_forked)
         return (n_pages <= self.max_pages_per_slot
-                and self.reserved_pages + n_pages <= self.capacity_pages)
+                and self.outstanding_pages + n_pages <= headroom)
 
     def reserve(self, slot: int, n_pages: int):
-        """Promise the slot up to n_pages over its lifetime. The scheduler
-        reserves at admission; `ensure` allocates against it lazily."""
+        """Promise the slot up to n_pages FRESH pages over its lifetime.
+        The scheduler reserves at admission; `ensure` (and the one
+        prepaid CoW copy) allocate against it lazily."""
         if self._reserved[slot] or self._n_alloc[slot]:
             raise RuntimeError(f"slot {slot} already holds pages")
         if not self.can_reserve(n_pages):
             raise RuntimeError(
                 f"reservation of {n_pages} pages does not fit "
-                f"({self.reserved_pages}/{self.capacity_pages} reserved)")
+                f"({self.outstanding_pages} outstanding, {self.free_pages} "
+                f"free + {self.reclaimable_pages} reclaimable)")
         self._reserved[slot] = n_pages
+        self._maybe_check()
+
+    def _take_page(self) -> int:
+        """Pop a fresh page, reclaiming cold cached prefixes if the free
+        list is dry; refcount starts at 1 (the caller's reference)."""
+        if not self._free and self.reclaim is not None:
+            self.reclaim(1)
+        if not self._free:
+            raise RuntimeError("page pool exhausted (free list empty and "
+                               "nothing reclaimable)")
+        pid = self._free.pop()
+        self.refcount[pid] = 1
+        self.allocations += 1
+        return pid
 
     def ensure(self, slot: int, n_tokens: int) -> list[int]:
         """Allocate pages so the slot covers positions [0, n_tokens);
         returns the NEWLY allocated physical ids (empty if already
-        covered). Never exceeds the slot's reservation — the engine sizes
-        reservations at admission exactly so this cannot fail mid-flight."""
+        covered). Never exceeds the slot's fresh-page reservation — the
+        engine sizes reservations at admission exactly so this cannot
+        fail mid-flight. Forked (shared) pages already mapped count
+        toward coverage but not against the reservation."""
         need = pages_for_tokens(n_tokens, self.page_size)
-        if need > self._reserved[slot]:
+        if need - len(self._forked[slot]) > self._reserved[slot]:
             raise RuntimeError(
-                f"slot {slot} needs {need} pages > reservation "
-                f"{self._reserved[slot]}")
+                f"slot {slot} needs {need - len(self._forked[slot])} fresh "
+                f"pages > reservation {self._reserved[slot]}")
         new: list[int] = []
         while self._n_alloc[slot] < need:
-            pid = self._free.pop()
+            pid = self._take_page()
             self.table[slot, self._n_alloc[slot]] = pid
             self._n_alloc[slot] += 1
             new.append(pid)
-        self.allocations += len(new)
         self.peak_pages_in_use = max(self.peak_pages_in_use,
                                      self.pages_in_use)
         if new and self.tracer.enabled:
             self.tracer.counter("kv_pages", in_use=self.pages_in_use,
                                 free=self.free_pages)
+        self._maybe_check()
         return new
 
+    # ------------------------------------------------------------------
+    def fork_prefix(self, slot: int, page_ids: list[int]):
+        """Map already-live pages (a cached prompt prefix, logical pages
+        0..len-1) into an empty slot's table as read-shared references.
+        Bumps each page's refcount; no free-list traffic, no device copy.
+        The slot must reserve() first (fresh budget) and fork before any
+        ensure() — the prefix occupies the row's leading logical pages."""
+        page_ids = [int(p) for p in page_ids]
+        if self._n_alloc[slot]:
+            raise RuntimeError(
+                f"slot {slot} already maps pages; fork_prefix must precede "
+                "ensure()")
+        if len(page_ids) > self.max_pages_per_slot:
+            raise RuntimeError("prefix longer than a slot's table row")
+        for pid in page_ids:
+            if pid == NULL_PAGE or not (0 < pid < self.n_pages):
+                raise RuntimeError(f"cannot fork page {pid}")
+            if self.refcount[pid] < 1:
+                raise RuntimeError(f"cannot fork dead page {pid}")
+        for pid in page_ids:
+            self.table[slot, self._n_alloc[slot]] = pid
+            self._forked[slot].add(self._n_alloc[slot])
+            self._n_alloc[slot] += 1
+            self.refcount[pid] += 1
+        self.forks += len(page_ids)
+        self._maybe_check()
+
+    def cow_write(self, slot: int, pos: int) -> tuple[int, int] | None:
+        """Called before the slot first writes position `pos`. If the
+        backing page is shared (refcount > 1) allocate a fresh dst page,
+        swap the table entry, drop the shared reference, and return
+        (src, dst) so the engine copies the device page BEFORE the write
+        lands. Sole-owner pages (refcount 1) write in place — returns
+        None, as does a position beyond the slot's mapped pages (ensure
+        will allocate it fresh)."""
+        logical = pos // self.page_size
+        if logical >= self._n_alloc[slot]:
+            return None
+        pid = int(self.table[slot, logical])
+        if self.refcount[pid] <= 1:
+            # sole owner (any co-owners have since released): write in
+            # place. A forked mark STAYS — the page was inherited from the
+            # peers, never charged against this slot's fresh reservation,
+            # and stripping the mark would spend budget the slot was
+            # promised (the property tests caught exactly that).
+            return None
+        if (logical in self._forked[slot]
+                and self._fresh_used(slot) + 1 > self._reserved[slot]):
+            raise RuntimeError(
+                f"slot {slot} CoW copy exceeds fresh reservation "
+                f"{self._reserved[slot]}")
+        dst = self._take_page()
+        self.refcount[pid] -= 1
+        self.table[slot, logical] = dst
+        self._forked[slot].discard(logical)
+        self.cow_copies += 1
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use)
+        if self.tracer.enabled:
+            self.tracer.counter("kv_pages", in_use=self.pages_in_use,
+                                free=self.free_pages)
+        self._maybe_check()
+        return pid, dst
+
+    def retain(self, page_ids: list[int]):
+        """The prefix index takes one reference on each page (they must be
+        live and not already retained) so they outlive the slot that
+        produced them."""
+        page_ids = [int(p) for p in page_ids]
+        for pid in page_ids:
+            if pid == NULL_PAGE or self.refcount[pid] < 1:
+                raise RuntimeError(f"cannot retain dead page {pid}")
+            if pid in self._cached:
+                raise RuntimeError(f"page {pid} already retained")
+        for pid in page_ids:
+            self._cached.add(pid)
+            self.refcount[pid] += 1
+        self._maybe_check()
+
+    def release(self, page_ids: list[int]) -> int:
+        """The prefix index drops its reference on each retained page
+        (eviction / invalidation); pages reaching refcount zero return to
+        the free list. Returns how many actually freed — a page still
+        mapped by a live slot survives (eviction never invalidates a
+        mapped slot)."""
+        n_freed = 0
+        for pid in page_ids:
+            pid = int(pid)
+            if pid not in self._cached:
+                raise RuntimeError(f"page {pid} is not retained")
+            self._cached.discard(pid)
+            self.refcount[pid] -= 1
+            if self.refcount[pid] == 0:
+                self._free.append(pid)
+                n_freed += 1
+        self.frees += n_freed
+        if n_freed and self.tracer.enabled:
+            self.tracer.counter("kv_pages", in_use=self.pages_in_use,
+                                free=self.free_pages)
+        self._maybe_check()
+        return n_freed
+
     def free_slot(self, slot: int) -> list[int]:
-        """Return every page the slot holds (free-on-finish) and clear its
-        reservation; the table row resets to the null page. Returns the
-        freed physical ids (most-recent-first, matching the LIFO list)."""
+        """Drop the slot's reference on every page it maps (free-on-finish)
+        and clear its reservation; the table row resets to the null page.
+        Returns the physical ids that actually hit refcount zero and went
+        back to the free list (most-recent-first, matching the LIFO list) —
+        shared pages survive under their remaining references."""
         n = self._n_alloc[slot]
-        freed = [int(p) for p in self.table[slot, :n][::-1]]
-        self._free.extend(freed)
+        freed: list[int] = []
+        for pid in (int(p) for p in self.table[slot, :n][::-1]):
+            self.refcount[pid] -= 1
+            if self.refcount[pid] == 0:
+                self._free.append(pid)
+                freed.append(pid)
         self.table[slot, :] = NULL_PAGE
         self._n_alloc[slot] = 0
+        self._forked[slot] = set()
         self._reserved[slot] = 0
         self.frees += len(freed)
         if freed and self.tracer.enabled:
             self.tracer.counter("kv_pages", in_use=self.pages_in_use,
                                 free=self.free_pages)
+        self._maybe_check()
         return freed
 
     def stats(self) -> dict:
@@ -169,64 +374,202 @@ class PagePool:
                 "free_pages": self.free_pages,
                 "reserved_pages": self.reserved_pages,
                 "peak_pages_in_use": self.peak_pages_in_use,
-                "allocations": self.allocations, "frees": self.frees}
+                "allocations": self.allocations, "frees": self.frees,
+                "forks": self.forks, "cow_copies": self.cow_copies,
+                "cached_pages": self.cached_pages,
+                "reclaimable_pages": self.reclaimable_pages}
 
     def check_invariants(self):
-        """Structural self-check (tests call this after every op): free +
-        in-use conservation, no page in two owners, no null-page handout,
-        table rows null beyond their allocation count."""
-        owned = [int(p) for s in range(self.n_slots)
-                 for p in self.table[s, : self._n_alloc[s]]]
+        """Structural self-check (tests call this after every op; the
+        engine's debug_invariants flag runs it after every mutation):
+        free + live conservation, refcounts exactly equal to references
+        (table occurrences + cached), refcount zero iff free, no page
+        mapped twice by one slot, no null-page handout, table rows null
+        beyond their mapped count, fresh allocations within reservation."""
+        rows = [[int(p) for p in self.table[s, : self._n_alloc[s]]]
+                for s in range(self.n_slots)]
+        owned = [p for row in rows for p in row]
+        free_set = set(self._free)
         assert NULL_PAGE not in owned, "null page was handed out"
-        assert NULL_PAGE not in self._free, "null page on the free list"
-        assert len(set(owned)) == len(owned), "page owned twice"
-        assert len(set(self._free)) == len(self._free), "free-list dup"
-        assert not (set(owned) & set(self._free)), "page both owned and free"
-        assert len(owned) + len(self._free) == self.capacity_pages, \
+        assert NULL_PAGE not in free_set, "null page on the free list"
+        assert NULL_PAGE not in self._cached, "null page prefix-cached"
+        assert len(free_set) == len(self._free), "free-list dup"
+        live = set(owned) | self._cached
+        assert not (live & free_set), "page both live and free"
+        assert len(live) + len(self._free) == self.capacity_pages, \
             "page conservation violated"
-        for s in range(self.n_slots):
+        counts = Counter(owned)
+        for p in range(1, self.n_pages):
+            expect = counts.get(p, 0) + (1 if p in self._cached else 0)
+            assert self.refcount[p] == expect, \
+                (f"page {p} refcount {self.refcount[p]} != "
+                 f"{expect} references")
+            assert (p in free_set) == (expect == 0), \
+                f"page {p} free-list membership disagrees with refcount"
+        for s, row in enumerate(rows):
+            assert len(set(row)) == len(row), f"slot {s} maps a page twice"
             assert (self.table[s, self._n_alloc[s]:] == NULL_PAGE).all(), \
                 f"slot {s} table row dirty beyond allocation"
-            assert self._n_alloc[s] <= self._reserved[s], \
-                f"slot {s} allocated past its reservation"
+            assert all(i < self._n_alloc[s] for i in self._forked[s]), \
+                f"slot {s} forked mark beyond mapped pages"
+            assert 0 <= self._fresh_used(s) <= self._reserved[s], \
+                f"slot {s} allocated past its fresh reservation"
 
 
 class RefPagePool:
-    """Executable spec of PagePool semantics for property testing — sets
-    and dicts only, no free-list mechanics. tests/test_paged.py replays
-    random op sequences through both and asserts they agree (mirroring the
-    ExpansionCache / _RefModel pattern in tests/test_serve_cache.py)."""
+    """Executable spec of PagePool semantics for property testing — dicts
+    and sets only, no free-list or numpy-table mechanics.
+    tests/test_paged.py replays random op sequences through both and
+    asserts they agree (mirroring the ExpansionCache / _RefModel pattern
+    in tests/test_serve_cache.py).
+
+    Abstract page ids come from a monotonically increasing counter and are
+    never reused — the spec has no free list, free pages are implicit as
+    `capacity - live pages`. Observable agreement is therefore on counts
+    and decisions (pages in use, refcount multisets, can_reserve verdicts,
+    how many pages each op allocated/freed, whether a CoW copied), never
+    on physical ids.
+    """
 
     def __init__(self, n_pages: int, page_size: int):
         self.capacity = n_pages - 1
         self.page_size = page_size
-        self.owned: dict[int, int] = {}     # slot -> pages allocated
-        self.reserved: dict[int, int] = {}  # slot -> lifetime reservation
+        self.pages: dict[int, int] = {}      # live abstract pid -> refcount
+        self.tables: dict[int, list[int]] = {}   # slot -> pids, logical order
+        self.forked: dict[int, set[int]] = {}    # slot -> forked logicals
+        self.reserved: dict[int, int] = {}   # slot -> fresh-page reservation
+        self.cached: set[int] = set()        # pids the prefix index retains
+        self._next = 1
 
-    def can_reserve(self, n_pages: int, max_pages_per_slot: int) -> bool:
-        """Admission predicate: fits beside outstanding reservations."""
-        return (n_pages <= max_pages_per_slot
-                and sum(self.reserved.values()) + n_pages <= self.capacity)
-
-    def reserve(self, slot: int, n_pages: int):
-        """Record the slot's lifetime promise."""
-        self.reserved[slot] = n_pages
-
-    def ensure(self, slot: int, n_tokens: int) -> int:
-        """Grow the slot's allocation to cover n_tokens; returns how many
-        new pages that took."""
-        need = pages_for_tokens(n_tokens, self.page_size)
-        new = max(0, need - self.owned.get(slot, 0))
-        self.owned[slot] = max(need, self.owned.get(slot, 0))
-        return new
-
-    def free_slot(self, slot: int) -> int:
-        """Drop the slot; returns how many pages that released."""
-        n = self.owned.pop(slot, 0)
-        self.reserved.pop(slot, None)
-        return n
-
+    # -- derived occupancy ------------------------------------------------
     @property
     def pages_in_use(self) -> int:
-        """Total pages across live slots."""
-        return sum(self.owned.values())
+        """Live (referenced) pages; shared pages count once."""
+        return len(self.pages)
+
+    @property
+    def free_pages(self) -> int:
+        """Implicit free pages (no free-list in the spec)."""
+        return self.capacity - len(self.pages)
+
+    @property
+    def reclaimable_pages(self) -> int:
+        """Cached pages nobody maps (refcount exactly 1)."""
+        return sum(1 for p in self.cached if self.pages[p] == 1)
+
+    def _fresh_used(self, slot: int) -> int:
+        return (len(self.tables.get(slot, ()))
+                - len(self.forked.get(slot, ())))
+
+    @property
+    def outstanding_pages(self) -> int:
+        """Fresh pages live slots may still demand."""
+        return sum(n - self._fresh_used(s) for s, n in self.reserved.items())
+
+    # -- ops ---------------------------------------------------------------
+    def can_reserve(self, n_pages: int, max_pages_per_slot: int,
+                    n_forked: int = 0) -> bool:
+        """Admission predicate: fresh demand fits beside outstanding
+        reservations given free + still-reclaimable pages."""
+        headroom = self.free_pages + max(
+            0, self.reclaimable_pages - n_forked)
+        return (n_pages <= max_pages_per_slot
+                and self.outstanding_pages + n_pages <= headroom)
+
+    def reserve(self, slot: int, n_pages: int):
+        """Record the slot's fresh-page lifetime promise."""
+        self.reserved[slot] = n_pages
+        self.tables.setdefault(slot, [])
+        self.forked.setdefault(slot, set())
+
+    def _alloc(self) -> int:
+        if self.free_pages < 1:
+            raise RuntimeError("page pool exhausted")
+        pid, self._next = self._next, self._next + 1
+        self.pages[pid] = 1
+        return pid
+
+    def ensure(self, slot: int, n_tokens: int) -> int:
+        """Grow the slot's mapping to cover n_tokens; returns how many new
+        pages that took."""
+        need = pages_for_tokens(n_tokens, self.page_size)
+        row = self.tables.setdefault(slot, [])
+        fresh_need = need - len(self.forked.get(slot, ()))
+        if fresh_need > self.reserved.get(slot, 0):
+            raise RuntimeError("ensure exceeds fresh reservation")
+        new = 0
+        while len(row) < need:
+            row.append(self._alloc())
+            new += 1
+        return new
+
+    def fork_prefix(self, slot: int, page_ids: list[int]):
+        """Map live pages into an empty slot as read-shared references."""
+        row = self.tables.setdefault(slot, [])
+        if row:
+            raise RuntimeError("fork_prefix must precede ensure")
+        marks = self.forked.setdefault(slot, set())
+        for pid in page_ids:
+            if self.pages.get(pid, 0) < 1:
+                raise RuntimeError(f"cannot fork dead page {pid}")
+        for pid in page_ids:
+            marks.add(len(row))
+            row.append(pid)
+            self.pages[pid] += 1
+
+    def cow_write(self, slot: int, pos: int) -> bool:
+        """Spec of the copy-before-divergent-write decision; returns True
+        iff a copy happened."""
+        row = self.tables.get(slot, [])
+        logical = pos // self.page_size
+        if logical >= len(row):
+            return False
+        pid = row[logical]
+        marks = self.forked.setdefault(slot, set())
+        if self.pages[pid] <= 1:
+            return False       # sole owner: in place, inherited mark stays
+        if (logical in marks
+                and self._fresh_used(slot) + 1 > self.reserved.get(slot, 0)):
+            raise RuntimeError("CoW copy exceeds fresh reservation")
+        dst = self._alloc()
+        self.pages[pid] -= 1
+        row[logical] = dst
+        marks.discard(logical)
+        return True
+
+    def retain(self, page_ids: list[int]):
+        """Prefix index takes a reference on live pages."""
+        for pid in page_ids:
+            if self.pages.get(pid, 0) < 1:
+                raise RuntimeError(f"cannot retain dead page {pid}")
+            if pid in self.cached:
+                raise RuntimeError(f"page {pid} already retained")
+        for pid in page_ids:
+            self.cached.add(pid)
+            self.pages[pid] += 1
+
+    def release(self, page_ids: list[int]) -> int:
+        """Prefix index drops references; returns pages actually freed."""
+        n_freed = 0
+        for pid in page_ids:
+            if pid not in self.cached:
+                raise RuntimeError(f"page {pid} is not retained")
+            self.cached.discard(pid)
+            self.pages[pid] -= 1
+            if self.pages[pid] == 0:
+                del self.pages[pid]
+                n_freed += 1
+        return n_freed
+
+    def free_slot(self, slot: int) -> int:
+        """Drop the slot's references; returns pages that hit refcount
+        zero (shared pages survive)."""
+        n_freed = 0
+        for pid in self.tables.pop(slot, []):
+            self.pages[pid] -= 1
+            if self.pages[pid] == 0:
+                del self.pages[pid]
+                n_freed += 1
+        self.forked.pop(slot, None)
+        self.reserved.pop(slot, None)
+        return n_freed

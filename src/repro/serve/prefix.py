@@ -1,0 +1,221 @@
+"""Radix-tree prefix index over the paged KV pool: longest-cached-prefix
+lookup, page retention, and LRU eviction of refcount-zero nodes.
+
+MCNC serving traffic is many requests against few tasks, and requests of
+one task overwhelmingly share system/task prompt *prefixes*. This module
+remembers which physical pages already hold a given (task, token-prefix)'s
+KV so admission can map them into a new slot's page table (`PagePool.
+fork_prefix`) instead of recomputing and re-storing them — the vLLM /
+SGLang prefix-cache design at page granularity.
+
+Structure: one radix tree per index scope (the engine scopes by
+``(task_id, bundle_hash)`` so a hot-swapped adapter can never serve stale
+prefixes — KV depends on the adapter weights that produced it). Each edge
+is exactly ``page_size`` tokens and each node owns ONE physical page,
+retained in the pool (`PagePool.retain`) so it outlives the slot that
+prefilled it. Only full pages are indexed: a page is immutable once every
+position in it is a cached prompt position strictly below the producing
+request's ``prompt_len`` (decode writes start AT prompt_len, so the page
+containing it is never offered to the index).
+
+Eviction is LRU over *evictable* leaves only: a node is evictable when it
+has no children and its page's refcount is exactly 1 — the index's own
+reference, i.e. the node's slot-refcount is zero. A page mapped by any
+live slot has refcount > 1 and is skipped, so eviction can never
+invalidate a mapped slot; it merely drops the index's reference and the
+page dies later when its last slot frees. `PagePool.reclaim` is wired to
+`evict`, so allocation pressure reclaims cold prefixes on demand.
+
+No jax imports — pure host-side control plane, property-tested against a
+brute-force dict reference in tests/test_prefix.py.
+"""
+from __future__ import annotations
+
+from typing import Hashable
+
+from repro.serve.paged import PagePool
+
+
+class PrefixNode:
+    """One radix node: an exactly-page_size token edge from its parent and
+    the physical page holding that edge's KV. last_used is a logical LRU
+    clock stamp (unique per touch, so eviction order is deterministic)."""
+    __slots__ = ("key", "pid", "children", "parent", "last_used")
+
+    def __init__(self, key: tuple[int, ...], pid: int | None,
+                 parent: "PrefixNode | None", last_used: int):
+        self.key = key
+        self.pid = pid
+        self.children: dict[tuple[int, ...], PrefixNode] = {}
+        self.parent = parent
+        self.last_used = last_used
+
+
+class PrefixIndex:
+    """Longest-prefix page cache over a PagePool.
+
+    max_pages: optional cap on retained pages; inserts beyond it evict LRU
+    immediately (None = bounded only by pool pressure via the reclaim
+    hook). The index never blocks a fresh allocation: everything it holds
+    that no slot maps is reclaimable on demand.
+    """
+
+    def __init__(self, pool: PagePool, max_pages: int | None = None):
+        self.pool = pool
+        self.page_size = pool.page_size
+        self.max_pages = max_pages
+        self._roots: dict[Hashable, PrefixNode] = {}
+        self._clock = 0
+        self.retained_pages = 0
+        self.hits = 0            # lookups that matched >= 1 page
+        self.misses = 0
+        self.hit_tokens = 0      # prompt tokens covered across hits
+        self.evictions = 0       # nodes (= pages) evicted by LRU
+        self.invalidated_pages = 0
+
+    def _touch(self, node: PrefixNode):
+        self._clock += 1
+        node.last_used = self._clock
+
+    # ------------------------------------------------------------------
+    def lookup(self, scope: Hashable,
+               tokens: tuple[int, ...]) -> tuple[list[int], int]:
+        """Longest cached prefix of ``tokens`` under ``scope``: returns
+        (physical page ids in logical order, tokens covered). Only whole
+        pages match, so the covered length is always a multiple of
+        page_size. Touches the matched path for LRU. The caller must
+        fork_prefix the returned pages before any other allocator call
+        can trigger eviction."""
+        root = self._roots.get(scope)
+        pids: list[int] = []
+        if root is None:
+            self.misses += 1
+            return pids, 0
+        node = root
+        n_full = len(tokens) // self.page_size
+        for i in range(n_full):
+            chunk = tuple(tokens[i * self.page_size:
+                                 (i + 1) * self.page_size])
+            child = node.children.get(chunk)
+            if child is None:
+                break
+            node = child
+            self._touch(node)
+            pids.append(node.pid)
+        matched = len(pids) * self.page_size
+        if pids:
+            self.hits += 1
+            self.hit_tokens += matched
+        else:
+            self.misses += 1
+        return pids, matched
+
+    def insert(self, scope: Hashable, tokens: tuple[int, ...],
+               page_ids: list[int]) -> int:
+        """Index ``tokens``' full pages under ``scope``, page i backed by
+        page_ids[i]. Pages along an already-indexed path are skipped (the
+        existing node's page is authoritative; the duplicate stays owned
+        by its slot and dies with it). Newly indexed pages are retained in
+        the pool. Returns how many pages this call retained."""
+        n_full = min(len(tokens) // self.page_size, len(page_ids))
+        if n_full == 0:
+            return 0
+        root = self._roots.get(scope)
+        if root is None:
+            self._clock += 1
+            root = self._roots[scope] = PrefixNode((), None, None,
+                                                   self._clock)
+        node, retained = root, 0
+        for i in range(n_full):
+            chunk = tuple(tokens[i * self.page_size:
+                                 (i + 1) * self.page_size])
+            child = node.children.get(chunk)
+            if child is None:
+                pid = int(page_ids[i])
+                self.pool.retain([pid])
+                self.retained_pages += 1
+                retained += 1
+                self._clock += 1
+                child = PrefixNode(chunk, pid, node, self._clock)
+                node.children[chunk] = child
+            else:
+                self._touch(child)
+            node = child
+        if self.max_pages is not None and self.retained_pages > self.max_pages:
+            self.evict(self.retained_pages - self.max_pages)
+        return retained
+
+    # ------------------------------------------------------------------
+    def _evictable_leaves(self) -> list[PrefixNode]:
+        out = []
+        stack = list(self._roots.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if (node.pid is not None and not node.children
+                    and self.pool.refcount[node.pid] == 1):
+                out.append(node)
+        return out
+
+    def evict(self, n_pages: int) -> int:
+        """Evict up to n_pages LRU *refcount-zero* nodes (leaves whose page
+        no slot maps — slot-refcount zero; the pool sees refcount exactly
+        1, the index's own reference). Evicting a leaf may expose its
+        parent as the next candidate. Pages mapped by live slots are never
+        touched, so eviction cannot invalidate a mapped slot. Returns
+        pages actually freed."""
+        freed = 0
+        candidates = sorted(self._evictable_leaves(),
+                            key=lambda n: n.last_used)
+        while candidates and freed < n_pages:
+            node = candidates.pop(0)
+            freed += self.pool.release([node.pid])
+            self.retained_pages -= 1
+            self.evictions += 1
+            parent = node.parent
+            del parent.children[node.key]
+            node.parent = None
+            if (parent.pid is not None and not parent.children
+                    and self.pool.refcount[parent.pid] == 1):
+                # keep LRU order: the parent is strictly older than its
+                # child on any touched path, but re-sort to stay exact
+                candidates.append(parent)
+                candidates.sort(key=lambda n: n.last_used)
+        return freed
+
+    def invalidate(self, scope: Hashable) -> int:
+        """Drop a whole scope (adapter republished: its cached KV is stale
+        for new admissions). Releases every node's page; pages still
+        mapped by live slots survive under the slots' references. Returns
+        pages released from the index."""
+        root = self._roots.pop(scope, None)
+        if root is None:
+            return 0
+        released = 0
+        stack = list(root.children.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            self.pool.release([node.pid])
+            self.retained_pages -= 1
+            released += 1
+        self.invalidated_pages += released
+        return released
+
+    def invalidate_task(self, task_id: str) -> int:
+        """Invalidate every scope of one task (the engine subscribes this
+        to registry republish events; scopes are (task_id, bundle_hash))."""
+        released = 0
+        for scope in [s for s in self._roots
+                      if isinstance(s, tuple) and s and s[0] == task_id]:
+            released += self.invalidate(scope)
+        return released
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Hit/miss/eviction counters + retention snapshot."""
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_tokens": self.hit_tokens,
+                "evictions": self.evictions,
+                "invalidated_pages": self.invalidated_pages,
+                "retained_pages": self.retained_pages}

@@ -81,6 +81,11 @@ class Request:
     # once the whole prompt is in
     chunked: bool = False
     prefill_done: int = 0
+    # prompt tokens covered by a cached prefix at admission (paged engine
+    # with a prefix index): their pages were forked into the slot's table
+    # and prefill resumes at the first uncached token — prefill_done starts
+    # here, so the chunk machinery above skips them without special cases
+    prefix_len: int = 0
     # SLO metadata (async front end): priority class — LOWER is more
     # urgent, admission is strict across classes — and an optional absolute
     # deadline (perf_counter seconds) for end-to-end completion. Defaults
@@ -306,7 +311,7 @@ class Scheduler:
                  interference_horizon: int | None = None,
                  max_prefill_group: int | None = None,
                  page_pool=None, prefill_chunk: int | None = None,
-                 event_log=None):
+                 prefix_lookup=None, event_log=None):
         if max_decode_horizon < 1:
             raise ValueError("max_decode_horizon must be >= 1")
         if max_prefill_group is not None and max_prefill_group < 1:
@@ -325,6 +330,15 @@ class Scheduler:
         self.prefill_chunk = prefill_chunk
         if prefill_chunk is not None and page_pool is None:
             raise ValueError("chunked prefill needs a page_pool")
+        # optional prefix-cache probe (paged engine): callable(Request) ->
+        # (physical page ids, tokens covered) for the longest cached prefix
+        # of the request's prompt. Admission forks the covered pages into
+        # the new slot and reserves only the FRESH pages the request can
+        # still demand — shared pages are charged once, to whoever first
+        # allocated them.
+        self.prefix_lookup = prefix_lookup
+        if prefix_lookup is not None and page_pool is None:
+            raise ValueError("prefix sharing needs a page_pool")
         self.max_prefill_requests = max_prefill_requests
         self.max_prefill_group = max_prefill_group
         self.max_decode_horizon = max_decode_horizon
@@ -442,22 +456,48 @@ class Scheduler:
                and len(admitted) + len(chunked_admits)
                < self.max_prefill_requests):
             req = self.waiting.peek()
+            need = shared_len = 0
+            shared_pids: list[int] = []
             if self.page_pool is not None:
-                need = pages_for_tokens(req.lifetime_tokens,
-                                        self.page_pool.page_size)
-                if not self.page_pool.can_reserve(need):
+                ps = self.page_pool.page_size
+                if self.prefix_lookup is not None:
+                    # longest cached prefix, capped at prompt_len - 1: at
+                    # least one prompt token must run through prefill to
+                    # produce the first-token logits. The cap can land
+                    # mid-page — that page is still forked and CoW-copied
+                    # at the resume write.
+                    pids, matched = self.prefix_lookup(req)
+                    shared_len = min(matched, req.prompt_len - 1)
+                    shared_pids = pids[:pages_for_tokens(shared_len, ps)]
+                # fresh pages only: fully-shared pages are charged to
+                # whoever first allocated them; the partially-shared page
+                # (shared_len mid-page) stays in the lifetime count, which
+                # prepays its CoW copy at the first divergent write
+                need = (pages_for_tokens(req.lifetime_tokens, ps)
+                        - shared_len // ps)
+                if not self.page_pool.can_reserve(
+                        need, n_forked=len(shared_pids)):
                     break         # head-of-line: keep admission order
             self.waiting.pop()
             slot = free.popleft()
             self.pool.assign(slot, req)
             if self.page_pool is not None:
                 self.page_pool.reserve(slot, need)
+                if shared_pids:
+                    self.page_pool.fork_prefix(slot, shared_pids)
             if self.event_log is not None:
                 self.event_log.emit(
-                    req.req_id, ADMITTED, slot=slot,
-                    reserved_pages=(need if self.page_pool is not None
-                                    else 0))
-            if (self.prefill_chunk is not None
+                    req.req_id, ADMITTED, slot=slot, reserved_pages=need,
+                    **({"cached_tokens": shared_len} if shared_len else {}))
+            if shared_len:
+                # prefill resumes exactly at the first uncached token via
+                # the chunk machinery: prefill_done starts at the cached
+                # length and the remainder enters the cache chunk by chunk
+                req.prefix_len = shared_len
+                req.prefill_done = shared_len
+                req.chunked = True
+                chunked_admits.append(req)
+            elif (self.prefill_chunk is not None
                     and req.prompt_len > self.prefill_chunk):
                 req.chunked = True
                 chunked_admits.append(req)
@@ -493,8 +533,12 @@ class Scheduler:
             req = self.pool.requests[slot]
             if not req.prefilling:
                 continue
-            length = min(self.prefill_chunk,
-                         req.prompt_len - req.prefill_done)
+            # prefix-hit requests resume mid-prompt even on engines with
+            # whole-prompt prefill (prefill_chunk=None): their remainder
+            # rides one chunk
+            remaining = req.prompt_len - req.prefill_done
+            length = (remaining if self.prefill_chunk is None
+                      else min(self.prefill_chunk, remaining))
             chunks.append(ChunkPrefill(
                 request=req, slot=slot, start=req.prefill_done,
                 length=length,

@@ -93,10 +93,19 @@ def run_trace(trace: dict, *, mesh=None, registry_root: str | None = None
             tempfile.TemporaryDirectory(prefix="serve_trace_"))
         registry = AdapterRegistry(root)
         publish_tasks(trace, bundle, registry)
+        # differential runs always arm the allocator self-checks: a CoW /
+        # refcount bug should fail AT the mutation, not as a downstream
+        # token mismatch (traces can still opt out explicitly)
+        engine_kw = dict(trace.get("engine", {}))
+        engine_kw.setdefault("debug_invariants", True)
         engine = ServeEngine(bundle, base, gen_ws, registry, mesh=mesh,
-                             **trace.get("engine", {}))
+                             **engine_kw)
         reqs = [engine.submit(t, p, m) for t, p, m in trace["requests"]]
         engine.run_until_idle()
+        if engine.pages is not None:
+            # drained: every slot freed its pages, so the only live pages
+            # are prefix-index retentions and the books must balance
+            engine.pages.check_invariants()
     snap = engine.metrics.snapshot()
     return {
         "tokens": [list(r.generated) for r in reqs],
@@ -105,6 +114,9 @@ def run_trace(trace: dict, *, mesh=None, registry_root: str | None = None
         # paged engines also report allocator stats (None on dense arms):
         # the paged mesh oracle holds these equal across layouts too
         "pages": engine.pages.stats() if engine.pages is not None else None,
+        # prefix-cache arms additionally report index hit/retention stats
+        "prefix": (engine.prefix.stats()
+                   if engine.prefix is not None else None),
     }
 
 

@@ -5,6 +5,12 @@ import sys
 # placeholder devices (assignment MULTI-POD DRY-RUN step 0 note).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Arm the paged-allocator self-checks in every engine the suite builds:
+# PagePool.check_invariants() runs after EVERY allocator mutation, so a
+# refcount/CoW bug fails at the mutation site instead of as a downstream
+# token mismatch (engine.debug_invariants resolves from this env var).
+os.environ.setdefault("REPRO_DEBUG_INVARIANTS", "1")
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # ---------------------------------------------------------------------------

@@ -1,15 +1,18 @@
 """Property-based tests for the paged-KV free-list allocator.
 
-Random (reserve / ensure / free) op sequences — derived from an integer
-seed so they run identically under real `hypothesis` and the deterministic
-shim in conftest.py — replay through PagePool and the executable spec
-(serve.paged.RefPagePool) side by side. After every op the pool's
-structural invariants must hold (page conservation, single ownership, no
-null-page handout, no double free) and the two models must agree on
-occupancy, per-slot page counts, and admission decisions — the same
-reference-model pattern tests/test_serve_cache.py uses for the LRU cache.
+Random (reserve / fork_prefix / ensure / cow_write / retain / release /
+free) op sequences — derived from an integer seed so they run identically
+under real `hypothesis` and the deterministic shim in conftest.py — replay
+through PagePool and the executable spec (serve.paged.RefPagePool) side by
+side. After every op the pool's structural invariants must hold (page
+conservation, refcounts exactly equal to references, no null-page handout,
+no double free, pages reclaimed only at refcount zero) and the two models
+must agree on occupancy, refcount multisets, admission decisions, CoW
+copy decisions, and raised errors — the same reference-model pattern
+tests/test_serve_cache.py uses for the LRU cache.
 """
 import random
+from collections import Counter
 
 import pytest
 from hypothesis import given, settings
@@ -83,28 +86,164 @@ def test_peak_tracks_high_water_mark():
 
 
 # ---------------------------------------------------------------------------
+# CoW / refcount unit tests (deterministic).
+# ---------------------------------------------------------------------------
+
+def test_fork_bumps_refcounts_and_free_survives_sharing():
+    pool = PagePool(n_pages=9, page_size=4, n_slots=3, max_pages_per_slot=4,
+                    debug=True)
+    pool.reserve(0, 3)
+    owned = pool.ensure(0, 12)
+    pool.reserve(1, 1)                   # 3 lifetime pages, 2 forked
+    pool.fork_prefix(1, owned[:2])
+    assert pool.slot_pages(1) == owned[:2]
+    assert [pool.refcount[p] for p in owned] == [2, 2, 1]
+    assert pool.pages_in_use == 3        # shared pages charged once
+    # first free drops references only; pages stay live under slot 1
+    assert pool.free_slot(0) == [owned[2]]
+    assert [pool.refcount[p] for p in owned[:2]] == [1, 1]
+    assert sorted(pool.free_slot(1)) == sorted(owned[:2])
+    assert pool.pages_in_use == 0
+    pool.check_invariants()
+
+
+def test_cow_write_copies_shared_page_and_leaves_sole_owner_in_place():
+    pool = PagePool(n_pages=9, page_size=4, n_slots=3, max_pages_per_slot=4,
+                    debug=True)
+    pool.reserve(0, 2)
+    owned = pool.ensure(0, 8)
+    pool.reserve(1, 1)                   # fresh budget prepays the CoW copy
+    pool.fork_prefix(1, owned)
+    # divergent write into shared page 1: allocator swaps in a fresh dst
+    src, dst = pool.cow_write(1, 6)
+    assert src == owned[1] and dst not in owned
+    assert pool.refcount[src] == 1 and pool.refcount[dst] == 1
+    assert pool.slot_pages(1) == [owned[0], dst]
+    # the copied page is now sole-owned: the next write is in place
+    assert pool.cow_write(1, 6) is None
+    # writes beyond the mapped pages are ensure's job, not CoW's
+    assert pool.cow_write(1, 50) is None
+    assert pool.stats()["cow_copies"] == 1
+    pool.check_invariants()
+
+
+def test_cow_on_sole_owner_after_peer_free_writes_in_place():
+    pool = PagePool(n_pages=9, page_size=4, n_slots=2, max_pages_per_slot=4,
+                    debug=True)
+    pool.reserve(0, 1)
+    owned = pool.ensure(0, 4)
+    pool.reserve(1, 1)
+    pool.fork_prefix(1, owned)
+    pool.free_slot(0)                    # slot 1 becomes the sole owner
+    assert pool.cow_write(1, 2) is None  # no copy: write in place
+    # the inherited page was never charged against slot 1's reservation,
+    # so its promised fresh page is still available
+    assert len(pool.ensure(1, 8)) == 1
+    pool.check_invariants()
+
+
+def test_retain_release_lifecycle_and_double_free_guards():
+    pool = PagePool(n_pages=9, page_size=4, n_slots=2, max_pages_per_slot=4,
+                    debug=True)
+    pool.reserve(0, 2)
+    owned = pool.ensure(0, 8)
+    pool.retain(owned)
+    with pytest.raises(RuntimeError):
+        pool.retain([owned[0]])          # double-retain
+    assert pool.free_slot(0) == []       # index still holds both pages
+    assert pool.pages_in_use == 2 and pool.reclaimable_pages == 2
+    assert pool.release([owned[0]]) == 1
+    with pytest.raises(RuntimeError):
+        pool.release([owned[0]])         # double-release / double-free
+    assert pool.release([owned[1]]) == 1
+    assert pool.pages_in_use == 0 and pool.free_pages == 8
+    with pytest.raises(RuntimeError):
+        pool.retain([owned[0]])          # dead page
+    pool.check_invariants()
+
+
+def test_can_reserve_budgets_reclaimable_and_reclaim_hook_fires():
+    pool = PagePool(n_pages=5, page_size=4, n_slots=2, max_pages_per_slot=4,
+                    debug=True)
+    pool.reserve(0, 4)
+    owned = pool.ensure(0, 16)
+    pool.retain(owned[:2])
+    pool.free_slot(0)
+    # 2 free + 2 cached-but-unmapped: a 4-page reservation only fits if
+    # the reclaimable pages count toward the budget
+    assert pool.free_pages == 2 and pool.reclaimable_pages == 2
+    assert pool.can_reserve(4)
+    # ... unless admission itself would pin them by forking
+    assert not pool.can_reserve(4, n_forked=2)
+    assert pool.can_reserve(2, n_forked=2)
+    calls = []
+
+    def reclaim(n):
+        calls.append(n)
+        return pool.release([owned[0]])
+
+    pool.reclaim = reclaim
+    pool.reserve(1, 3)
+    assert len(pool.ensure(1, 12)) == 3  # 3rd page reclaimed on demand
+    assert calls == [1]
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
 # Randomized differential replay vs the executable spec.
 # ---------------------------------------------------------------------------
 
 N_PAGES, PAGE_SIZE, N_SLOTS, MAX_PPS = 17, 4, 4, 8
 
+OPS = ("admit", "admit", "admit_fork", "admit_fork", "grow", "grow",
+       "cow", "cow", "retain", "release", "finish")
+
 
 def _ops_from_seed(seed: int, n_ops: int):
     rng = random.Random(seed)
-    ops = []
-    for _ in range(n_ops):
-        kind = rng.choice(("admit", "admit", "grow", "grow", "finish"))
-        slot = rng.randrange(N_SLOTS)
-        tokens = rng.randint(1, MAX_PPS * PAGE_SIZE)
-        ops.append((kind, slot, tokens))
-    return ops
+    return [(rng.choice(OPS), rng.randrange(N_SLOTS),
+             rng.randint(1, MAX_PPS * PAGE_SIZE), rng.random())
+            for _ in range(n_ops)]
+
+
+def _agree(pool_fn, spec_fn):
+    """Run the same op on both models; they must agree on whether it
+    raises, and the pair of results is returned on success."""
+    try:
+        a = pool_fn()
+    except RuntimeError:
+        with pytest.raises(RuntimeError):
+            spec_fn()
+        return None
+    return a, spec_fn()
+
+
+def _check_agreement(pool, spec):
+    pool.check_invariants()
+    assert pool.pages_in_use == spec.pages_in_use
+    assert pool.free_pages == spec.free_pages
+    assert pool.reclaimable_pages == spec.reclaimable_pages
+    assert pool.outstanding_pages == spec.outstanding_pages
+    # refcount MULTISETS agree (ids differ: the spec never reuses pids)
+    live = Counter(pool.refcount[p] for p in range(1, N_PAGES)
+                   if pool.refcount[p] > 0)
+    assert live == Counter(spec.pages.values())
+    for s in range(N_SLOTS):
+        assert len(pool.slot_pages(s)) == len(spec.tables.get(s, []))
 
 
 def _replay(seed: int):
-    pool = PagePool(N_PAGES, PAGE_SIZE, N_SLOTS, MAX_PPS)
+    pool = PagePool(N_PAGES, PAGE_SIZE, N_SLOTS, MAX_PPS, debug=True)
     spec = RefPagePool(N_PAGES, PAGE_SIZE)
-    live: dict[int, int] = {}          # slot -> reserved lifetime tokens
-    for kind, slot, tokens in _ops_from_seed(seed, n_ops=80):
+    pair = {}                    # pool pid -> spec pid (live pages only)
+    live: dict[int, int] = {}    # slot -> lifetime pages (forked + fresh)
+
+    def sync_rows(slot):
+        prow, srow = pool.slot_pages(slot), spec.tables.get(slot, [])
+        for pp, sp in zip(prow, srow):
+            pair[pp] = sp
+
+    for kind, slot, tokens, frac in _ops_from_seed(seed, n_ops=120):
         if kind == "admit" and slot not in live:
             need = pages_for_tokens(tokens, PAGE_SIZE)
             ok = pool.can_reserve(need)
@@ -112,21 +251,61 @@ def _replay(seed: int):
             if ok:
                 pool.reserve(slot, need)
                 spec.reserve(slot, need)
-                live[slot] = tokens
+                live[slot] = need
+        elif kind == "admit_fork" and slot not in live:
+            # fork a random aligned prefix of some live donor row (or the
+            # cached set), reserving only the fresh remainder — mirroring
+            # scheduler admission over the prefix index
+            donors = [s for s in live if pool.slot_pages(s)]
+            if not donors:
+                continue
+            donor = donors[int(frac * len(donors))]
+            drow = pool.slot_pages(donor)
+            k = max(1, int(frac * len(drow)))
+            total = max(pages_for_tokens(tokens, PAGE_SIZE), k)
+            need = total - k
+            ok = pool.can_reserve(need, n_forked=k)
+            assert ok == spec.can_reserve(need, MAX_PPS, n_forked=k)
+            if ok and total <= MAX_PPS:
+                pool.reserve(slot, need)
+                spec.reserve(slot, need)
+                pool.fork_prefix(slot, drow[:k])
+                spec.fork_prefix(slot,
+                                 [pair[p] for p in drow[:k]])
+                live[slot] = total
         elif kind == "grow" and slot in live:
-            grow_to = min(tokens, live[slot])      # within the reservation
-            new = pool.ensure(slot, grow_to)
-            assert len(new) == spec.ensure(slot, grow_to)
-            assert NULL_PAGE not in new
+            grow_to = min(tokens, live[slot] * PAGE_SIZE)
+            got = _agree(lambda: pool.ensure(slot, grow_to),
+                         lambda: spec.ensure(slot, grow_to))
+            if got is not None:
+                new, n_new = got
+                assert len(new) == n_new and NULL_PAGE not in new
+                sync_rows(slot)
+        elif kind == "cow" and slot in live and pool.slot_pages(slot):
+            pos = int(frac * len(pool.slot_pages(slot)) * PAGE_SIZE)
+            got = _agree(lambda: pool.cow_write(slot, pos),
+                         lambda: spec.cow_write(slot, pos))
+            if got is not None:
+                res, copied = got
+                assert (res is not None) == copied
+                sync_rows(slot)
+        elif kind == "retain" and slot in live:
+            row = [p for p in pool.slot_pages(slot)
+                   if p not in pool._cached]
+            if not row:
+                continue
+            pid = row[int(frac * len(row))]
+            pool.retain([pid])
+            spec.retain([pair[pid]])
+        elif kind == "release" and pool._cached:
+            pid = sorted(pool._cached)[int(frac * len(pool._cached))]
+            assert pool.release([pid]) == spec.release([pair[pid]])
         elif kind == "finish" and slot in live:
             freed = pool.free_slot(slot)
             assert len(freed) == spec.free_slot(slot)
             del live[slot]
-        pool.check_invariants()
-        assert pool.pages_in_use == spec.pages_in_use
-        for s in range(N_SLOTS):
-            assert len(pool.slot_pages(s)) == spec.owned.get(s, 0)
-    return pool
+        _check_agreement(pool, spec)
+    return pool, spec, live
 
 
 @given(seed=st.integers(0, 10_000))
@@ -137,16 +316,24 @@ def test_pool_matches_reference_model(seed):
 
 @given(seed=st.integers(0, 10_000))
 @settings(max_examples=10, deadline=None)
-def test_pool_conservation_and_distinct_ownership(seed):
-    """Fragmentation/conservation invariants under churn: after any op
-    sequence, owned + free == capacity, every owned page has exactly one
-    owner, and draining every slot restores the full free list."""
-    pool = _replay(seed)
-    owned = [p for s in range(N_SLOTS) for p in pool.slot_pages(s)]
-    assert len(owned) == len(set(owned))
-    assert len(owned) + pool.free_pages == pool.capacity_pages
+def test_pool_conservation_and_refcount_balance(seed):
+    """Refcount-balance invariants under churn: after any op sequence,
+    live + free == capacity, every live page's refcount equals its
+    reference count (asserted per-op by check_invariants), no page was
+    ever freed with refcount > 0, and draining every slot AND the cached
+    set restores the full free list — nothing leaks, nothing double-frees.
+    """
+    pool, spec, _ = _replay(seed)
+    live = {p for s in range(N_SLOTS) for p in pool.slot_pages(s)}
+    live |= pool._cached
+    assert len(live) + pool.free_pages == pool.capacity_pages
     for s in range(N_SLOTS):
-        pool.free_slot(s)
+        assert len(pool.free_slot(s)) == spec.free_slot(s)
+    # with every slot drained each cached page holds exactly the index's
+    # reference, so releasing the whole set frees the whole set
+    n_cached = len(pool._cached)
+    assert pool.release(sorted(pool._cached)) == n_cached
+    assert spec.release(sorted(spec.cached)) == n_cached
     assert pool.pages_in_use == 0
     assert pool.free_pages == pool.capacity_pages
     assert sorted(set(range(1, N_PAGES))) == sorted(pool._free)

@@ -1,0 +1,253 @@
+"""Property tests for the radix prefix index (serve/prefix.py).
+
+The index is pure host-side control plane over a PagePool, so everything
+here runs deviceless. Three families of guarantees:
+
+  * longest-prefix-match correctness: random insert/lookup sequences are
+    mirrored into a brute-force dict reference ({(scope, token-path) ->
+    pid recorded at insert}), and every lookup's (pids, matched) must
+    equal the reference's longest matching path — the same
+    reference-model pattern tests/test_paged.py uses for the allocator;
+  * insert/evict refcount invariants: every insert retains exactly the
+    NEW nodes' pages, every eviction releases exactly one refcount-zero
+    node (pool refcount 1 — the index's own reference), and the pool's
+    check_invariants() holds after every op (debug=True pools re-check
+    after every mutation);
+  * eviction under pressure never invalidates a mapped slot: pages a
+    live slot forked stay mapped and live no matter how hard the LRU is
+    squeezed — only the index's reference is droppable.
+
+All pools here run with debug=True, so every mutating op self-checks.
+"""
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.paged import PagePool, pages_for_tokens
+from repro.serve.prefix import PrefixIndex
+
+PS = 4                                   # page_size for every test
+
+
+def make(n_pages=129, max_pages=None, n_slots=4, max_pps=32):
+    pool = PagePool(n_pages, PS, n_slots, max_pps, debug=True)
+    idx = PrefixIndex(pool, max_pages=max_pages)
+    pool.reclaim = idx.evict
+    return pool, idx
+
+
+def produce(pool, idx, scope, tokens, slot=0):
+    """Prefill simulation: allocate the tokens' pages in a slot, index the
+    FULL pages, free the slot (retained pages survive the free). Returns
+    the pids the index now serves for this prefix."""
+    pool.reserve(slot, pages_for_tokens(max(len(tokens), 1), PS))
+    pool.ensure(slot, len(tokens))
+    n_full = len(tokens) // PS
+    idx.insert(scope, tuple(tokens), pool.slot_pages(slot)[:n_full])
+    pool.free_slot(slot)
+    return idx.lookup(scope, tuple(tokens))[0]
+
+
+# ---------------------------------------------------------------------------
+# Longest-prefix-match vs a brute-force dict reference.
+# ---------------------------------------------------------------------------
+
+def _lpm_replay(seed: int):
+    rng = random.Random(seed)
+    pool, idx = make()
+    # reference: (scope, token path up to page i+1) -> pid of page i,
+    # recorded when the node is first created (duplicates skipped, exactly
+    # the index's contract)
+    ref: dict[tuple, int] = {}
+    scopes = ("a", "b")
+    for _ in range(40):
+        scope = rng.choice(scopes)
+        # tiny alphabet + shared stems force deep prefix collisions
+        tokens = tuple(rng.randrange(3) for _ in
+                       range(rng.randint(0, 4 * PS + PS - 1)))
+        if rng.random() < 0.6:
+            slot = rng.randrange(pool.n_slots)
+            pool.reserve(slot, pages_for_tokens(max(len(tokens), 1), PS))
+            pool.ensure(slot, len(tokens))
+            row = pool.slot_pages(slot)
+            n_full = len(tokens) // PS
+            idx.insert(scope, tokens, row[:n_full])
+            for i in range(n_full):
+                ref.setdefault((scope, tokens[: (i + 1) * PS]), row[i])
+            pool.free_slot(slot)
+        # brute-force longest match: extend page by page until the
+        # reference has no entry for the path
+        expect_pids = []
+        for i in range(len(tokens) // PS):
+            pid = ref.get((scope, tokens[: (i + 1) * PS]))
+            if pid is None:
+                break
+            expect_pids.append(pid)
+        pids, matched = idx.lookup(scope, tokens)
+        assert pids == expect_pids
+        assert matched == len(expect_pids) * PS
+        pool.check_invariants()
+    # retention bookkeeping: the index holds exactly the reference's nodes
+    assert idx.retained_pages == len(ref) == pool.cached_pages
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_longest_prefix_match_vs_bruteforce(seed):
+    _lpm_replay(seed)
+
+
+def test_lookup_only_matches_whole_pages_and_scopes_isolate():
+    pool, idx = make()
+    toks = tuple(range(10, 10 + 2 * PS))
+    produce(pool, idx, ("t1", "h"), toks)
+    pids, matched = idx.lookup(("t1", "h"), toks + (99,))
+    assert matched == 2 * PS and len(pids) == 2
+    # a partial-page query matches only its full pages
+    assert idx.lookup(("t1", "h"), toks[: PS + 1])[1] == PS
+    assert idx.lookup(("t1", "h"), toks[: PS - 1]) == ([], 0)
+    # another scope (other task, or same task republished) sees nothing
+    assert idx.lookup(("t1", "other"), toks) == ([], 0)
+    assert idx.lookup(("t2", "h"), toks) == ([], 0)
+    st_ = idx.stats()
+    assert st_["hits"] == 3 and st_["misses"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Insert / evict refcount invariants.
+# ---------------------------------------------------------------------------
+
+def test_insert_retains_only_new_nodes_and_duplicates_die_with_slot():
+    pool, idx = make()
+    toks = tuple(range(2 * PS))
+    produce(pool, idx, "s", toks)
+    assert idx.retained_pages == 2
+    in_use0 = pool.pages_in_use
+    # a second producer of the SAME prefix: its pages duplicate existing
+    # nodes, so insert retains nothing and they free with the slot
+    pool.reserve(1, 2)
+    pool.ensure(1, len(toks))
+    idx.insert("s", toks, pool.slot_pages(1))
+    assert idx.retained_pages == 2
+    assert len(pool.free_slot(1)) == 2
+    assert pool.pages_in_use == in_use0
+    pool.check_invariants()
+
+
+def test_evict_lru_order_and_refcount_balance():
+    pool, idx = make()
+    a, b = tuple(range(PS)), tuple(range(100, 100 + PS))
+    produce(pool, idx, "s", a)
+    produce(pool, idx, "s", b, slot=1)
+    idx.lookup("s", a)                  # a is now most-recently used
+    in_use = pool.pages_in_use
+    assert idx.evict(1) == 1            # LRU: b's page goes first
+    assert idx.lookup("s", b) == ([], 0)
+    assert idx.lookup("s", a)[1] == PS
+    assert pool.pages_in_use == in_use - 1
+    assert idx.evict(5) == 1            # drain: only a's page remains
+    assert idx.retained_pages == 0 and pool.pages_in_use == 0
+    assert idx.stats()["evictions"] == 2
+    pool.check_invariants()
+
+
+def test_evict_leaves_before_parents():
+    pool, idx = make()
+    long = tuple(range(3 * PS))
+    produce(pool, idx, "s", long)
+    assert idx.retained_pages == 3
+    # evicting one page must take the DEEPEST (leaf) node: the shorter
+    # prefixes stay matchable
+    assert idx.evict(1) == 1
+    assert idx.lookup("s", long)[1] == 2 * PS
+    assert idx.evict(1) == 1
+    assert idx.lookup("s", long)[1] == PS
+    pool.check_invariants()
+
+
+def test_max_pages_cap_evicts_on_insert():
+    pool, idx = make(max_pages=2)
+    produce(pool, idx, "s", tuple(range(2 * PS)))
+    assert idx.retained_pages == 2
+    produce(pool, idx, "s", tuple(range(100, 100 + 2 * PS)), slot=1)
+    assert idx.retained_pages == 2      # cap held: LRU evicted to fit
+    assert idx.stats()["evictions"] == 2
+    pool.check_invariants()
+
+
+def test_invalidate_task_drops_all_its_scopes():
+    pool, idx = make()
+    toks = tuple(range(2 * PS))
+    produce(pool, idx, ("t1", "h1"), toks)
+    produce(pool, idx, ("t1", "h2"), toks, slot=1)
+    produce(pool, idx, ("t2", "h1"), toks, slot=2)
+    assert idx.invalidate_task("t1") == 4
+    assert idx.lookup(("t1", "h1"), toks) == ([], 0)
+    assert idx.lookup(("t1", "h2"), toks) == ([], 0)
+    assert idx.lookup(("t2", "h1"), toks)[1] == 2 * PS
+    assert idx.retained_pages == 2 and pool.pages_in_use == 2
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Eviction under pressure never invalidates a mapped slot.
+# ---------------------------------------------------------------------------
+
+def test_eviction_skips_pages_mapped_by_live_slots():
+    pool, idx = make()
+    toks = tuple(range(2 * PS))
+    pids = produce(pool, idx, "s", toks)
+    # a live slot forks the cached prefix (scheduler admission path)
+    pool.reserve(1, 1)
+    pool.fork_prefix(1, pids)
+    mapped = pool.slot_pages(1)
+    # squeeze as hard as possible: nothing is evictable while mapped
+    assert idx.evict(10) == 0
+    assert pool.slot_pages(1) == mapped
+    assert all(pool.refcount[p] == 2 for p in mapped)
+    # once the slot frees, the pages become reclaimable again
+    pool.free_slot(1)
+    assert idx.evict(10) == 2
+    assert pool.pages_in_use == 0
+    pool.check_invariants()
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_pressure_reclaim_never_touches_mapped_pages(seed):
+    """Small pool, reclaim hook wired: random produce/fork churn drives
+    allocation through the LRU under real pressure. No op may ever raise
+    pool-exhausted while admission said yes, and forked rows stay intact
+    across every reclaim."""
+    rng = random.Random(seed)
+    pool, idx = make(n_pages=9, max_pps=8)   # 8 allocatable pages
+    forked: dict[int, list[int]] = {}
+    for step in range(30):
+        slot = rng.randrange(1, pool.n_slots)
+        if slot in forked:
+            row = pool.slot_pages(slot)
+            assert row[: len(forked[slot])] == forked[slot], \
+                "reclaim invalidated a mapped slot"
+            pool.free_slot(slot)
+            del forked[slot]
+            continue
+        tokens = tuple(rng.randrange(2) for _ in range(rng.randint(1, 8)))
+        pids, matched = idx.lookup("s", tokens)
+        shared = pids[: pages_for_tokens(min(matched, len(tokens)), PS)]
+        need = pages_for_tokens(len(tokens), PS) - len(shared)
+        if not pool.can_reserve(need, n_forked=len(shared)):
+            continue
+        pool.reserve(slot, need)
+        if shared:
+            pool.fork_prefix(slot, shared)
+        pool.ensure(slot, len(tokens))       # may trigger reclaim
+        n_full = len(tokens) // PS
+        idx.insert("s", tokens, pool.slot_pages(slot)[:n_full])
+        forked[slot] = list(shared)
+    for slot in list(forked):
+        row = pool.slot_pages(slot)
+        assert row[: len(forked[slot])] == forked[slot]
+        pool.free_slot(slot)
+    pool.check_invariants()

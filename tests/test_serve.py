@@ -1402,3 +1402,185 @@ def test_engine_deadline_miss_recorded_not_fatal(served, tmp_path):
     s = eng.events.summary(r.req_id)
     assert s["deadline_missed"] and s["terminal"] == "finish"
     assert eng.metrics.snapshot()["deadline_misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write prefix sharing: the prefix-cache engine must be
+# indistinguishable — token-for-token — from the prefix-cache-off paged
+# engine AND the dense engine on the same shared-prefix trace, while doing
+# strictly less prefill work. The allocator must stay refcount-balanced
+# through fork / CoW / eviction churn (debug_invariants re-checks after
+# every mutation; run_trace re-checks at drain).
+# ---------------------------------------------------------------------------
+
+SYS_PROMPT = list(range(40, 56))         # 16 tokens = 2 full pages of 8
+
+# n_slots=2 serializes admissions so later requests see the prefixes the
+# first wave produced; the tails diverge immediately after SYS_PROMPT.
+# The last request's prompt is EXACTLY the shared prefix: matched(16) is
+# capped at prompt_len-1=15, which lands mid-page and forces the CoW copy
+# at the resume write.
+PREFIX_TRACE = {
+    "gen": {"k": 5, "d": 600, "width": 32, "seed": 0},
+    "adapter_rank": 4,
+    "tasks": {"t0": 0, "t1": 1},
+    "engine": {"n_slots": 2, "cache_cap": 32, "decode_horizon": 8,
+               "page_size": 8, "n_pages": 17, "prefix_cache": True},
+    "requests": [
+        ["t0", SYS_PROMPT + [1, 2, 3, 4], 4],      # seeds the index
+        ["t1", SYS_PROMPT + [1, 2, 3, 4], 4],      # other task: own scope
+        ["t0", SYS_PROMPT + [5, 6], 5],            # hit: diverges at tok 16
+        ["t0", SYS_PROMPT + [7, 8, 9], 3],         # hit: another divergence
+        ["t0", SYS_PROMPT, 4],                     # strict prefix: CoW
+        ["t1", SYS_PROMPT + [9, 9], 4],            # hit in t1's scope
+    ],
+}
+
+PREFIX_OFF_ENGINE = {k: v for k, v in PREFIX_TRACE["engine"].items()
+                     if k != "prefix_cache"}
+
+
+def test_prefix_cache_differential_token_identical():
+    """The single-device shared-prefix oracle: one trace through the
+    prefix-cache-on, prefix-cache-off, and dense engines. Tokens must be
+    identical everywhere; the arms must agree on the work-independent
+    counters; and the on-arm must show real sharing — hits, forks, a CoW
+    copy, fewer fresh page allocations — with the allocator refcount-
+    balanced at drain (run_trace checks invariants; only index retentions
+    may remain live)."""
+    on = run_trace(PREFIX_TRACE)
+    off = run_trace(dict(PREFIX_TRACE, engine=PREFIX_OFF_ENGINE))
+    dense = run_trace(dict(
+        PREFIX_TRACE,
+        engine={k: v for k, v in PREFIX_OFF_ENGINE.items()
+                if k not in ("page_size", "n_pages")} | {
+                    "dense_cache": True}))
+    assert on["tokens"] == off["tokens"] == dense["tokens"]
+    # scheduling differs (covered tokens skip prefill; the remainder rides
+    # a chunk), so compare the counters that must NOT depend on it
+    for k in ("requests_completed", "tokens_generated", "expansions",
+              "adapter_full_restacks"):
+        assert on["counters"][k] == off["counters"][k] == \
+            dense["counters"][k], k
+    # the trace exercises what it claims to: cross-request sharing inside
+    # each task scope, never across scopes, plus one mid-page CoW
+    assert on["prefix"]["hits"] >= 3
+    assert on["prefix"]["hit_tokens"] >= 3 * 16
+    assert on["pages"]["forks"] >= 6
+    assert on["pages"]["cow_copies"] >= 1
+    assert off["prefix"] is None and off["pages"]["forks"] == 0
+    # covered tokens were never re-prefilled (prompt tokens only enter via
+    # prefill_batches' whole prompts or chunk pieces)
+    assert on["pages"]["allocations"] < off["pages"]["allocations"]
+    # drained: only the index's retentions remain live, books balanced
+    assert on["pages"]["pages_in_use"] == on["prefix"]["retained_pages"]
+    assert on["pages"]["reserved_pages"] == 0
+
+
+def test_prefix_fork_then_diverge_and_cow(served, tmp_path):
+    """Direct-drive fork-then-diverge: two requests fork the SAME cached
+    prefix concurrently (shared pages reach refcount 3 = index + 2 slots)
+    and diverge on the first post-prefix token; a third request whose
+    prompt is a strict prefix of the cached sequence forces the CoW copy.
+    Tokens must match a prefix-cache-off engine replaying the same
+    traffic, and the books must balance after every phase."""
+    bundle, base, gen_ws = served
+    states = {"t": perturbed_state(bundle, 0)}
+    # max_new 12 on the forking pair: a chunk-completed slot joins the
+    # SAME step's decode block, so a 4-token life would finish inside one
+    # step() and leave no window to observe the shared refcounts mid-flight
+    traffic = [("t", SYS_PROMPT + [1, 2, 3, 4], 4),
+               ("t", SYS_PROMPT + [5, 6], 12),
+               ("t", SYS_PROMPT + [7, 8], 12),
+               ("t", SYS_PROMPT, 3)]
+
+    def build(prefix_cache):
+        reg = AdapterRegistry(str(tmp_path / f"p{prefix_cache}"))
+        reg.publish("t", states["t"], GEN)
+        return ServeEngine(bundle, base, gen_ws, reg, n_slots=3,
+                           cache_cap=32, page_size=8, n_pages=25,
+                           decode_horizon=8, prefix_cache=prefix_cache,
+                           debug_invariants=True)
+
+    eng = build(True)
+    # phase 1: warm the index with the seed request
+    r0 = eng.submit(*traffic[0])
+    eng.run_until_idle()
+    shared = eng.prefix.lookup(
+        ("t", eng.registry.current_hash("t")), tuple(SYS_PROMPT))[0]
+    assert len(shared) == 2
+    assert all(eng.pages.refcount[p] == 1 for p in shared)
+    # phase 2: two requests fork the same prefix CONCURRENTLY
+    r1 = eng.submit(*traffic[1])
+    r2 = eng.submit(*traffic[2])
+    eng.step()                         # both admitted in one wave
+    assert all(eng.pages.refcount[p] == 3 for p in shared), \
+        "index + two slots must co-own the forked pages"
+    assert eng.pages.slot_pages(r1.slot)[:2] == shared
+    assert eng.pages.slot_pages(r2.slot)[:2] == shared
+    eng.run_until_idle()
+    assert all(eng.pages.refcount[p] == 1 for p in shared)
+    assert eng.pages.stats()["cow_copies"] == 0     # aligned: no copy yet
+    # phase 3: strict-prefix request — matched 16 caps to 15, mid-page, so
+    # the resume write must copy the shared page before diverging
+    r3 = eng.submit(*traffic[3])
+    eng.run_until_idle()
+    assert eng.pages.stats()["cow_copies"] == 1
+    assert eng.pages.stats()["forks"] >= 6
+    eng.pages.check_invariants()
+
+    ref = build(False)
+    want = [ref.submit(*t) for t in traffic]
+    ref.run_until_idle()
+    assert ref.pages.stats()["forks"] == 0
+    for got, exp in zip((r0, r1, r2, r3), want):
+        assert got.generated == exp.generated
+    # divergence really happened: same prefix, different streams
+    assert r1.generated != r2.generated or traffic[1][1] != traffic[2][1]
+
+
+def test_prefix_cache_invalidated_on_republish(served, tmp_path):
+    """Hot-swapping a task's bundle must drop its cached prefixes: KV
+    depends on the adapter weights that produced it, so a stale-scope hit
+    would serve old-weight KV under new-weight decode. After republish the
+    old scope is gone, the first request misses, and its tokens match a
+    cold engine on the new weights."""
+    bundle, base, gen_ws = served
+    reg = AdapterRegistry(str(tmp_path))
+    reg.publish("t", perturbed_state(bundle, 0), GEN)
+    eng = ServeEngine(bundle, base, gen_ws, reg, n_slots=2, cache_cap=32,
+                      page_size=8, prefix_cache=True, debug_invariants=True)
+    eng.submit("t", SYS_PROMPT + [1, 2], 3)
+    eng.run_until_idle()
+    assert eng.prefix.retained_pages == 2
+    reg.publish("t", perturbed_state(bundle, 1), GEN)    # hot swap
+    assert eng.prefix.retained_pages == 0
+    assert eng.prefix.stats()["invalidated_pages"] == 2
+    assert eng.pages.pages_in_use == 0                   # fully reclaimed
+    r = eng.submit("t", SYS_PROMPT + [1, 2], 3)
+    eng.run_until_idle()
+    assert eng.prefix.stats()["hits"] == 0               # cold new scope
+    want = sequential_reference(bundle, base, gen_ws,
+                                {"t": perturbed_state(bundle, 1)},
+                                [("t", SYS_PROMPT + [1, 2], 3)],
+                                cache_cap=32)
+    assert r.generated == want[0]
+    eng.pages.check_invariants()
+
+
+@pytest.mark.slow            # compiles the mesh engine in a subprocess
+def test_sharded_prefix_cache_oracle():
+    """Mesh arm of the shared-prefix oracle: the (2, 4) mesh prefix-cache
+    engine is token-identical to the single-device prefix-cache engine on
+    the shared-prefix trace, with IDENTICAL allocator and index stats
+    (fork/CoW/hit decisions are host-side and deterministic, so sharding
+    must not perturb them), and both match the prefix-off tokens."""
+    single = run_trace(PREFIX_TRACE)
+    sharded = _run_trace_subprocess(PREFIX_TRACE, mesh="2x4")
+    assert sharded["n_devices"] == 8
+    assert sharded["tokens"] == single["tokens"]
+    assert sharded["counters"] == single["counters"]
+    assert sharded["pages"] == single["pages"]
+    assert sharded["prefix"] == single["prefix"]
+    off = run_trace(dict(PREFIX_TRACE, engine=PREFIX_OFF_ENGINE))
+    assert sharded["tokens"] == off["tokens"]
