@@ -101,6 +101,44 @@ def generate(seed: int, *, n_requests: int, rate_rps: float,
     return out
 
 
+#: fault sites a rate-based chaos plan draws over by default — the
+#: exception-raising sites of repro/serve/faults.py (decode.latency is a
+#: stall, not a failure, so plans leave it to explicit schedules)
+DEFAULT_FAULT_SITES = ("registry.transient", "expand", "page_alloc",
+                       "decode.nan")
+
+
+def _u01(seed: int, site: str, key) -> float:
+    """sha256(seed|site|key) -> uniform [0, 1). The SAME formula as
+    repro.serve.faults.fault_u01, duplicated so this module keeps its
+    no-repro-imports property (CI runs it without PYTHONPATH=src); the
+    plan below is consumed as an EXPLICIT FaultPlane schedule, so only
+    determinism matters, not hash compatibility."""
+    h = hashlib.sha256(f"{seed}|{site}|{key}".encode()).digest()
+    return int.from_bytes(h[:8], "big") / float(1 << 64)
+
+
+def fault_plan(fault_seed: int, n_requests: int, fault_rate: float,
+               sites: tuple[str, ...] = DEFAULT_FAULT_SITES
+               ) -> list[tuple[str, int]]:
+    """Deterministic fault schedule for a run: (site, request INDEX) pairs,
+    suitable as FaultPlane(schedule=...) once indices are mapped to the
+    req_ids the engine mints (in-order submission makes them equal up to
+    the id base).
+
+    Keyed by request index — NOT arrival time, and consuming NO numpy rng
+    state — so the plan is independent of rate_rps and of whether faults
+    are on at all: generate() yields byte-identical schedules either way
+    (--selfcheck pins both properties). Each request draws once per site;
+    expected faults per request = fault_rate * len(sites)."""
+    if fault_rate <= 0.0:
+        return []
+    return [(site, i)
+            for i in range(n_requests)
+            for site in sites
+            if _u01(fault_seed, site, i) < fault_rate]
+
+
 def fingerprint(arrivals: list[Arrival]) -> str:
     """Deterministic hash of a schedule (canonical JSON -> sha256). CI
     compares fingerprints across regenerations to pin determinism."""
@@ -140,6 +178,11 @@ def main(argv=None) -> int:
     ap.add_argument("--tasks", type=int, default=3,
                     help="distinct task ids to round-robin")
     ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the chaos fault plan (see fault_plan)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="per-(request, site) fault probability; 0 = no "
+                         "plan (the default, byte-identical schedules)")
     ap.add_argument("--selfcheck", action="store_true",
                     help="regenerate and compare fingerprints (exit 1 on "
                          "mismatch)")
@@ -155,15 +198,33 @@ def main(argv=None) -> int:
 
     arrivals = gen()
     fp = fingerprint(arrivals)
+    plan = fault_plan(args.fault_seed, args.requests, args.fault_rate)
     print(f"seed={args.seed} fingerprint={fp}")
     print(json.dumps(summarize(arrivals), indent=2))
+    if args.fault_rate > 0:
+        print(f"fault plan: {len(plan)} injection(s) at rate "
+              f"{args.fault_rate} (seed {args.fault_seed})")
     if args.selfcheck:
         again = gen()
         if again != arrivals or fingerprint(again) != fp:
             print("SELFCHECK FAILED: same seed produced a different "
                   "schedule", file=sys.stderr)
             return 1
-        print("selfcheck OK: schedule is deterministic for the seed")
+        # rate-independence of the fault plan: keyed by request index,
+        # consuming no rng state — the plan must not vary with offered
+        # load, and a non-zero rate must not perturb the schedule itself
+        rate = args.fault_rate if args.fault_rate > 0 else 0.25
+        if fault_plan(args.fault_seed, args.requests, rate) != \
+                fault_plan(args.fault_seed, args.requests, rate):
+            print("SELFCHECK FAILED: fault plan is not deterministic",
+                  file=sys.stderr)
+            return 1
+        if fingerprint(gen()) != fp:
+            print("SELFCHECK FAILED: fault plan perturbed the schedule",
+                  file=sys.stderr)
+            return 1
+        print("selfcheck OK: schedule is deterministic for the seed "
+              "(fault plan rate-independent)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump([dataclasses.asdict(a) for a in arrivals], f)

@@ -75,6 +75,24 @@ Mixed-task traffic (>= 4 task adapters) through the serving arms:
                   sequential reference (every run), >= 2x fewer prefill
                   chunk steps (every run — host-side deterministic), and
                   a strict TTFT p50 drop on the smoke single-device lane;
+  engine-chaos  - the cached arm's exact configuration replayed under a
+                  seeded deterministic fault schedule (load_gen.fault_plan
+                  over the per-request sites: injected KV-page exhaustion
+                  and injected non-finite logits). HARD GATES: surviving
+                  requests stay token-identical to the sequential
+                  reference, failed requests deliver only a prefix and end
+                  FAILED — and every failure is accounted to a fault
+                  domain: the hit request itself, or (page_alloc only) a
+                  prefill groupmate, since group prefill fails as a unit —
+                  the page allocator balances after drain (failure
+                  reclaim leaks nothing), the lifecycle event log is
+                  terminal-complete, and the ARMED-BUT-SILENT replay (same
+                  engine, no scheduled key in range) is zero-cost: token-
+                  identical with exactly the no-plane cached arm's jit
+                  dispatch count. Goodput (surviving tokens/s) must hold
+                  >= 0.5x the fault-free throughput on the smoke
+                  single-device lane — the tripwire for retry storms and
+                  failure-path livelock;
   engine-mesh   - (--mesh DxM only) the same fused path sharded over a
                   (data, model) device mesh (CPU-simulated host devices are
                   requested automatically before jax initializes). This arm
@@ -136,8 +154,8 @@ from repro.configs.registry import get_arch
 from repro.core.generator import GeneratorConfig, init_generator
 from repro.obs import EventLog, Tracer
 from repro.serve import (AdapterRegistry, AsyncFrontend, ExpansionCache,
-                         Metrics, RejectedError, RequestState, ServeEngine,
-                         sequential_reference)
+                         FaultPlane, Metrics, RejectedError, RequestState,
+                         ServeEngine, sequential_reference)
 from repro.train.steps import build_bundle
 
 HERE = os.path.dirname(os.path.abspath(__file__))
@@ -462,6 +480,218 @@ def check_async_level(level_name, engine, streams, results, cancelled_idx,
                 f"non-terminal state {s.state}")
 
 
+#: chaos-arm fault sites: the per-request hot-path sites, which fire
+#: regardless of cache warmth. The task-keyed sites (registry.*, expand)
+#: only trigger on cold loads/expansions — a warm bench replay never
+#: reaches them, so their coverage lives in tests/test_faults.py.
+CHAOS_SITES = ("page_alloc", "decode.nan")
+
+
+def run_chaos(bundle, base, gen_ws, registry, traffic, ref_out, *,
+              n_slots, cache_cap, horizon, fault_seed, fault_rate,
+              tracer=None):
+    """The engine-chaos arm: four replays of the common traffic through
+    ONE engine built with a seeded FaultPlane.
+
+    The schedule (load_gen.fault_plan, request-index keyed) is mapped onto
+    the req ids of the THIRD AND FOURTH replays, so:
+
+      pass 1 (ids 0..n-1)   compiles every fault-free shape and warms the
+                            expansion cache, exactly like run_engine;
+      pass 2 (ids n..2n-1)  is ARMED BUT SILENT — the plane is live on
+                            every hot-path check yet no key is in range.
+                            Its tokens and jit dispatch count are the
+                            zero-cost evidence (the caller compares
+                            dispatches against the no-plane cached arm);
+      pass 3 (ids 2n..3n-1) is the chaos WARMUP: the same injected faults
+                            fire and compile the failure path (adapter
+                            slot zeroing, quarantine scrub) off the clock;
+      pass 4 (ids 3n..4n-1) is the measured chaos replay — it must be
+                            compile-free, so goodput reflects steady-state
+                            failure handling, not one-time jit cost.
+
+    Hard gates on pass 4 run here (containment, allocator balance,
+    lifecycle, failed-set determinism vs pass 3, zero compiles); the
+    dispatch-equality and goodput-floor gates run in the caller where the
+    cached arm's numbers live. Returns
+    (report_row, chaos_block, silent_snapshot, engine)."""
+    n = len(traffic)
+    plan = load_gen.fault_plan(fault_seed, n, fault_rate, sites=CHAOS_SITES)
+    hit = {idx for _, idx in plan}
+    if not hit or len(hit) >= n:
+        raise SystemExit(
+            f"engine-chaos fault plan is degenerate ({len(hit)} of {n} "
+            f"requests hit at rate {fault_rate}, seed {fault_seed}) — the "
+            "arm needs at least one failure AND one survivor")
+    plane = FaultPlane(schedule=[(site, idx + rep * n)
+                                 for site, idx in plan for rep in (2, 3)])
+    event_log = EventLog()
+    # the tracer is the traced arm's, so the failure/retry spans land in
+    # --trace-out (same sharing as the async arm's cancel/reject spans —
+    # CI's check_trace requires the 'failed' and 'retry' spans)
+    engine = ServeEngine(bundle, base, gen_ws, registry, n_slots=n_slots,
+                         cache_cap=cache_cap,
+                         expansion_cache=ExpansionCache(None),
+                         decode_horizon=horizon, faults=plane,
+                         tracer=tracer, event_log=event_log,
+                         metrics=Metrics())
+    for t, p, m in traffic:                       # pass 1: compile + warm
+        engine.submit(t, p, m)
+    engine.run_until_idle()
+
+    engine.reset_metrics()                        # pass 2: armed-but-silent
+    t0 = time.perf_counter()
+    reqs = [engine.submit(t, p, m) for t, p, m in traffic]
+    engine.run_until_idle()
+    silent_dt = time.perf_counter() - t0
+    if [list(r.generated) for r in reqs] != ref_out:
+        raise SystemExit("engine-chaos armed-but-silent replay diverged "
+                         "from the sequential reference — the fault plane "
+                         "is not inert with no scheduled key in range")
+    silent_snap = engine.metrics.snapshot()
+
+    warm_reqs = [engine.submit(t, p, m)           # pass 3: chaos warmup
+                 for t, p, m in traffic]
+    engine.run_until_idle()
+    warm_failed = [i for i, r in enumerate(warm_reqs)
+                   if r.state is RequestState.FAILED]
+
+    engine.reset_metrics()                        # pass 4: measured chaos
+    event_log.clear()
+    t0 = time.perf_counter()
+    reqs = [engine.submit(t, p, m) for t, p, m in traffic]
+    engine.run_until_idle()
+    chaos_dt = time.perf_counter() - t0
+
+    failed = [i for i, r in enumerate(reqs)
+              if r.state is RequestState.FAILED]
+    if not failed:
+        raise SystemExit("engine-chaos injected faults but no request "
+                         "ended FAILED — containment never engaged")
+    if failed != warm_failed:
+        raise SystemExit(
+            f"engine-chaos failed sets diverged between identical chaos "
+            f"replays (warmup {warm_failed} vs measured {failed}) — the "
+            "injection plane is not deterministic")
+    if len(failed) == n:
+        raise SystemExit("engine-chaos failed every request — no survivor "
+                         "left to hold token identity against")
+    # a page_alloc injection fires inside the hit request's PREFILL GROUP,
+    # whose failure domain is the whole group — they were about to share
+    # one adapter load and one fused dispatch (ARCHITECTURE §1d). Requests
+    # with the same (task, prompt_len) could have been grouped with a hit
+    # request, so they are legitimate collateral; anything else that
+    # failed is a containment leak. decode.nan fires per slot mid-decode
+    # and never takes groupmates down.
+    pa_keys = {(traffic[i][0], len(traffic[i][1]))
+               for site, i in plan if site == "page_alloc"}
+    collateral_ok = {i for i in range(n)
+                     if (traffic[i][0], len(traffic[i][1])) in pa_keys}
+    for i, r in enumerate(reqs):
+        if i in hit and r.state is not RequestState.FAILED:
+            raise SystemExit(
+                f"engine-chaos: request {i} was scheduled to fault but "
+                f"ended {r.state} — the injection never fired")
+        if r.state is RequestState.FAILED:
+            if i not in hit and i not in collateral_ok:
+                raise SystemExit(
+                    f"engine-chaos: request {i} failed outside every "
+                    "injected fault's domain — containment leaked")
+            if list(r.generated) != ref_out[i][:len(r.generated)]:
+                raise SystemExit(
+                    f"engine-chaos: failed request {i} delivered tokens "
+                    "that are not a prefix of the sequential reference")
+        elif (r.state is not RequestState.FINISHED
+                or list(r.generated) != ref_out[i]):
+            raise SystemExit(
+                f"engine-chaos: surviving request {i} diverged from the "
+                "sequential reference — a fault leaked across its domain")
+    # failure reclaim must leak nothing: pages, reservations, and slots
+    # all return, and the books balance exactly (same gate as engine-async)
+    st = engine.pages.stats()
+    reserved = sum(engine.pages._reserved)
+    if (st["pages_in_use"] != 0 or reserved != 0
+            or st["allocations"] != st["frees"]
+            or engine.scheduler.pool.active_slots()):
+        raise SystemExit(
+            f"engine-chaos: allocator did not balance after drain "
+            f"(in_use={st['pages_in_use']}, reserved={reserved}, "
+            f"alloc={st['allocations']}, frees={st['frees']})")
+    engine.pages.check_invariants()
+    bad = event_log.validate_all(require_terminal=True)
+    if bad:
+        raise SystemExit(
+            f"engine-chaos lifecycle event log invalid: {bad}")
+    snap = engine.metrics.snapshot()
+    if snap.get("jit_compiles", 0):
+        raise SystemExit(
+            f"engine-chaos measured replay retraced "
+            f"({snap['jit_compiles']} compiles) — the chaos warmup pass "
+            "did not cover a failure-path shape, so the goodput number "
+            "would time compilation, not failure handling")
+    injected = dict(plane.injected)
+    # group collateral shares its groupmate's single injection, so the
+    # fire count is bounded by the plan (x2: warmup + measured chaos
+    # replays both fire), not by len(failed)
+    if (snap.get("requests_failed", 0) != len(failed)
+            or snap.get("requests_completed", 0) != n - len(failed)
+            or not 1 <= sum(injected.values()) <= 2 * len(plan)):
+        raise SystemExit(
+            f"engine-chaos counters disagree with outcomes: "
+            f"failed={snap.get('requests_failed', 0)} "
+            f"(want {len(failed)}), "
+            f"completed={snap.get('requests_completed', 0)} "
+            f"(want {n - len(failed)}), injected={injected}")
+
+    good_tokens = sum(len(reqs[i].generated) for i in range(n)
+                      if i not in set(failed))
+    goodput = good_tokens / chaos_dt
+    silent_tps = sum(len(o) for o in ref_out) / silent_dt
+
+    # retry exercise: one injected transient page exhaustion against the
+    # NEXT request id (4n — the retry attempt resubmits under 4n+1 and
+    # heals), driven through AsyncFrontend.generate_with_retry. Gates the
+    # client-side half of the fault-domain story end to end and puts the
+    # RETRY lifecycle event + 'retry' tracer span in the bench artifact.
+    t, p, m = traffic[0]
+    engine.faults = FaultPlane(schedule=[("page_alloc", 4 * n)])
+
+    async def retry_once():
+        async with AsyncFrontend(engine) as fe:
+            return await fe.generate_with_retry(t, list(p), m,
+                                                retry_seed=fault_seed)
+
+    retried = asyncio.run(retry_once())
+    if retried != ref_out[0]:
+        raise SystemExit("engine-chaos: retry after an injected transient "
+                         "fault did not reproduce the reference tokens")
+    if engine.metrics.snapshot().get("retries", 0) != 1:
+        raise SystemExit("engine-chaos: the healed resubmission did not "
+                         "bump the retries counter exactly once")
+    bad = event_log.validate_all(require_terminal=True)
+    if bad:
+        raise SystemExit(
+            f"engine-chaos lifecycle invalid after retry exercise: {bad}")
+    block = {
+        "fault_seed": fault_seed,
+        "fault_rate": fault_rate,
+        "sites": list(CHAOS_SITES),
+        "plan": [[site, idx] for site, idx in plan],
+        "injected": injected,
+        "failed": failed,
+        "collateral": sorted(set(failed) - hit),
+        "survivors": n - len(failed),
+        "good_tokens": good_tokens,
+        "goodput_tok_per_s": round(goodput, 1),
+        "silent_tok_per_s": round(silent_tps, 1),
+        "goodput_ratio": round(goodput / silent_tps, 3),
+        "silent_jit_dispatches": silent_snap["jit_dispatches"],
+        "retry_healed": True,
+    }
+    return (("engine-chaos", good_tokens, chaos_dt), block, silent_snap,
+            engine)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tasks", type=int, default=4)
@@ -521,6 +751,14 @@ def main():
                     help="write the engine-async arm's per-request latency "
                          "records (JSON) here — the CI latency-histogram "
                          "artifact")
+    ap.add_argument("--fault-seed", type=int, default=1,
+                    help="seed for the engine-chaos arm's deterministic "
+                         "fault plan (load_gen.fault_plan over the "
+                         "per-request sites)")
+    ap.add_argument("--fault-rate", type=float, default=0.2,
+                    help="per-(request, site) fault probability for the "
+                         "engine-chaos arm; the plan must fail at least "
+                         "one request and spare at least one")
     ap.add_argument("--mesh", default=None,
                     help="add a sharded-engine arm on a DxM (data, model) "
                          "mesh of CPU-simulated devices, e.g. --mesh 2x4")
@@ -742,6 +980,41 @@ def main():
             f"engine-prefix ttft p50 {ttft_on * 1e3:.2f} ms did not drop "
             f"below the no-cache arm's {ttft_off * 1e3:.2f} ms")
 
+    # engine-chaos arm: the cached arm's exact configuration under a seeded
+    # fault schedule. Containment/leak/lifecycle gates run inside run_chaos
+    # (hard SystemExit); the two gates that need the cached arm's numbers
+    # run here: zero-cost (the armed-but-silent replay must dispatch
+    # exactly as often as the no-plane cached arm — the fault plane may
+    # not add device work when nothing fires) and the goodput floor
+    # (surviving tokens/s vs fault-free throughput; timing, so scoped to
+    # the smoke single-device lane like the other throughput floors).
+    chaos_row, chaos_block, chaos_silent_snap, chaos_eng = run_chaos(
+        bundle, base, gen_ws, registry, traffic, seq_out,
+        fault_seed=args.fault_seed, fault_rate=args.fault_rate,
+        horizon=args.horizon, tracer=tracer, **ekw)
+    hot_dispatches = hot_eng.metrics.snapshot()["jit_dispatches"]
+    chaos_block["cached_jit_dispatches"] = hot_dispatches
+    if chaos_silent_snap["jit_dispatches"] != hot_dispatches:
+        raise SystemExit(
+            f"fault plane is not zero-cost when idle: armed-but-silent "
+            f"replay made {chaos_silent_snap['jit_dispatches']} jit "
+            f"dispatches vs the no-plane cached arm's {hot_dispatches}")
+    print(f"# engine-chaos: {sum(chaos_block['injected'].values())} "
+          f"fault(s) injected {chaos_block['injected']} (seed "
+          f"{args.fault_seed}, rate {args.fault_rate}), failed "
+          f"{chaos_block['failed']}, {chaos_block['survivors']} survivors "
+          f"token-identical; goodput {chaos_block['goodput_tok_per_s']} "
+          f"tok/s ({chaos_block['goodput_ratio']:.2f}x fault-free; floor "
+          f"0.50x smoke single-device), allocator balanced, armed-silent "
+          f"dispatches {chaos_silent_snap['jit_dispatches']} == cached "
+          f"{hot_dispatches}")
+    if (args.mesh is None and args.smoke
+            and chaos_block["goodput_ratio"] < 0.5):
+        raise SystemExit(
+            f"engine-chaos goodput is {chaos_block['goodput_ratio']:.3f}x "
+            "the fault-free throughput — below the 0.50x floor (failure "
+            "handling is eating the survivors' throughput)")
+
     mesh_row = None
     if args.mesh:
         from repro.launch.mesh import make_serve_mesh
@@ -816,7 +1089,11 @@ def main():
             # common traffic above — comparable to each other, not to the
             # other rows
             ("engine-prefix", pon_tok, pon_dt),
-            ("engine-prefix-off", poff_tok, poff_dt)]
+            ("engine-prefix-off", poff_tok, poff_dt),
+            # chaos row counts SURVIVING tokens over the chaos replay wall
+            # (goodput) — comparable to its own silent_tok_per_s in the
+            # report's chaos block, not to the fault-free rows above
+            chaos_row]
     if mesh_row:
         rows.append(mesh_row)
     print(f"{'arm':<27}{'gen tokens':>11}{'seconds':>9}{'tok/s':>9}")
@@ -946,7 +1223,8 @@ def main():
                                       ("engine-quantized-resident", nf4_eng),
                                       ("engine-traced", trc_eng),
                                       ("engine-prefix", pon_eng),
-                                      ("engine-prefix-off", poff_eng)]},
+                                      ("engine-prefix-off", poff_eng),
+                                      ("engine-chaos", chaos_eng)]},
         # event-log-derived request latency summaries for the production
         # (cached) arm, surfaced at top level so the trajectory is greppable
         "latency": {h: snap[h] for h in ("ttft_s", "itl_s", "queue_wait_s",
@@ -1009,6 +1287,11 @@ def main():
             "pool_forks": px_pool["forks"],
             "pool_cow_copies": px_pool["cow_copies"],
         },
+        # engine-chaos arm: seeded fault schedule through the cached
+        # configuration. The containment/leak/lifecycle/zero-cost gates
+        # already ran in-process (hard SystemExit on violation); the block
+        # records the plan, outcomes, and goodput trajectory across PRs.
+        "chaos": chaos_block,
         # engine-async arm: SLO-aware front end under open-loop load.
         # Per-level TTFT/ITL percentiles and goodput; the identity/leak
         # gates already ran in-process (hard SystemExit on violation)

@@ -4,9 +4,9 @@
 # (obs/prometheus.py). Pure python, no jax imports — the engine threads
 # these through the serving stack; docs/OBSERVABILITY.md is the spec.
 from repro.obs.events import (ADMITTED, CANCEL, DEADLINE_MISS, DECODE_BLOCK,
-                              EVICT, FINISH, LIFECYCLE_ORDER, PREFILL,
-                              PREFILL_CHUNK, QUEUED, REJECT, SUBMIT,
-                              TERMINAL_EVENTS, Event, EventLog)
+                              EVICT, FAILED, FINISH, LIFECYCLE_ORDER,
+                              PREFILL, PREFILL_CHUNK, QUEUED, REJECT, RETRY,
+                              SUBMIT, TERMINAL_EVENTS, Event, EventLog)
 from repro.obs.prometheus import render_prometheus
 from repro.obs.tracer import (NULL_TRACER, TID_DECODE, TID_ENGINE,
                               TID_EXPAND, TID_PAGES, TID_PREFILL,
@@ -14,8 +14,10 @@ from repro.obs.tracer import (NULL_TRACER, TID_DECODE, TID_ENGINE,
 
 __all__ = [
     "ADMITTED", "CANCEL", "DEADLINE_MISS", "DECODE_BLOCK", "EVICT", "Event",
-    "EventLog", "FINISH", "LIFECYCLE_ORDER", "NULL_TRACER", "PREFILL",
-    "PREFILL_CHUNK", "QUEUED", "REJECT", "SUBMIT", "TERMINAL_EVENTS",
+    "EventLog", "FAILED", "FINISH", "LIFECYCLE_ORDER", "NULL_TRACER",
+    "PREFILL",
+    "PREFILL_CHUNK", "QUEUED", "REJECT", "RETRY", "SUBMIT",
+    "TERMINAL_EVENTS",
     "THREAD_NAMES", "TID_DECODE", "TID_ENGINE", "TID_EXPAND", "TID_PAGES",
     "TID_PREFILL", "Tracer", "render_prometheus",
 ]

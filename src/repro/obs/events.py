@@ -4,8 +4,11 @@ Every request's life is recorded as an ordered sequence of named events with
 monotonic timestamps (``time.perf_counter``):
 
     submit -> queued -> admitted -> prefill | prefill_chunk[i]*
-           -> decode_block[j]* -> [deadline_miss] -> finish | evict | cancel
+           -> decode_block[j]* -> [deadline_miss]
+           -> finish | evict | cancel | failed
     submit -> reject
+    submit -> [retry] -> queued -> ...   (a resubmission after a retryable
+                                          failure, under a FRESH req_id)
 
 ``submit`` is the engine API boundary, ``queued`` the scheduler accepting the
 request into its admission queue, ``admitted`` the step it wins a KV slot
@@ -16,8 +19,17 @@ decode block a request harvests tokens from records one ``decode_block``
 event carrying the token count. Exactly one terminal event ends the
 sequence: ``finish`` (budget emitted), ``evict`` (reserved for preemption —
 no engine path emits it yet), ``cancel`` (client abort, any point after
-queued), or ``reject`` (load-shedding admission refused the request — it
-never entered the scheduler, so ``submit`` is the only event before it).
+queued), ``failed`` (the request's fault domain collapsed — a corrupt
+bundle, an expansion error, allocator exhaustion, or a quarantined
+non-finite decode block; the event's ``cause`` datum names the fault and
+``retryable`` says whether the frontend may resubmit), or ``reject``
+(load-shedding admission refused the request — it never entered the
+scheduler, so ``submit`` is the only event before it). ``retry`` marks a
+resubmission attempt after a retryable failure: it is emitted under the NEW
+attempt's req_id (failed/reject are terminal, so nothing may follow on the
+old id) carrying ``prev_req_id``/``attempt``/``backoff_s``, sits at the
+queued rank, and may repeat (each attempt of a multi-retry lifecycle logs
+its own).
 ``deadline_miss`` is informational, not terminal: it marks the moment the
 request was known to have blown its deadline (stamped just before the
 terminal event that resolves it) so SLO dashboards can count misses without
@@ -50,23 +62,27 @@ DECODE_BLOCK = "decode_block"
 FINISH = "finish"
 EVICT = "evict"
 CANCEL = "cancel"
+FAILED = "failed"
 DEADLINE_MISS = "deadline_miss"
 REJECT = "reject"
+RETRY = "retry"
 
 # rank of each event name in a request's life; events must be emitted in
-# non-decreasing rank (the repeatable ones share their rank).  cancel and
-# reject share the terminal rank; deadline_miss sits at the decode rank so
-# it can legally follow any amount of progress (including none — a request
-# shed while still queued jumps straight from rank 1 to rank 4) and still
-# precede the terminal event.
-LIFECYCLE_ORDER = {SUBMIT: 0, QUEUED: 1, ADMITTED: 2, PREFILL: 3,
+# non-decreasing rank (the repeatable ones share their rank).  cancel,
+# failed, and reject share the terminal rank; deadline_miss sits at the
+# decode rank so it can legally follow any amount of progress (including
+# none — a request shed while still queued jumps straight from rank 1 to
+# rank 4) and still precede the terminal event.  retry sits at the queued
+# rank: a resubmission is logged under the new attempt's req_id right after
+# its submit, before (or alongside) its queued event.
+LIFECYCLE_ORDER = {SUBMIT: 0, QUEUED: 1, RETRY: 1, ADMITTED: 2, PREFILL: 3,
                    PREFILL_CHUNK: 3, DECODE_BLOCK: 4, DEADLINE_MISS: 4,
-                   FINISH: 5, EVICT: 5, CANCEL: 5, REJECT: 5}
+                   FINISH: 5, EVICT: 5, CANCEL: 5, FAILED: 5, REJECT: 5}
 
 # events that may legally repeat within one request
-REPEATABLE_EVENTS = frozenset({PREFILL_CHUNK, DECODE_BLOCK})
+REPEATABLE_EVENTS = frozenset({PREFILL_CHUNK, DECODE_BLOCK, RETRY})
 
-TERMINAL_EVENTS = frozenset({FINISH, EVICT, CANCEL, REJECT})
+TERMINAL_EVENTS = frozenset({FINISH, EVICT, CANCEL, FAILED, REJECT})
 
 # events that deliver generated tokens to the request (their `tokens` datum
 # feeds the inter-token-latency derivation)
@@ -197,6 +213,8 @@ class EventLog:
           n_tokens       generated tokens delivered across token events
           terminal       name of the terminal event (None while live)
           deadline_missed  True iff a deadline_miss event was recorded
+          failed         True iff the terminal event is ``failed``
+          retries        count of retry events recorded under this req_id
 
         Degenerate lifecycles stay well-defined: a request that finishes
         during prefill (``max_new_tokens == 1``) gets its TTFT from the
@@ -236,4 +254,6 @@ class EventLog:
             "n_tokens": n_tokens,
             "terminal": None if term is None else term.name,
             "deadline_missed": any(e.name == DEADLINE_MISS for e in evs),
+            "failed": term is not None and term.name == FAILED,
+            "retries": sum(1 for e in evs if e.name == RETRY),
         }

@@ -8,7 +8,12 @@
 from repro.obs import NULL_TRACER, EventLog, Tracer, render_prometheus
 from repro.serve.cache import ExpansionCache, tree_bytes
 from repro.serve.engine import ServeEngine, sequential_reference
-from repro.serve.frontend import AsyncFrontend, RejectedError, TokenStream
+from repro.serve.faults import (NULL_FAULTS, CorruptArtifactFault,
+                                ExpansionFault, FaultError, FaultPlane,
+                                NonFiniteLogitsFault, PageExhaustionFault,
+                                TransientFault, fault_u01)
+from repro.serve.frontend import (AsyncFrontend, RejectedError,
+                                  RetriesExhaustedError, TokenStream)
 from repro.serve.metrics import Metrics
 from repro.serve.paged import PagePool, RefPagePool, pages_for_tokens
 from repro.serve.prefix import PrefixIndex
@@ -19,10 +24,12 @@ from repro.serve.trace import run_trace
 
 __all__ = [
     "AdapterBundle", "AdapterRegistry", "AsyncFrontend", "ChunkPrefill",
-    "EventLog", "ExpansionCache", "Metrics", "NULL_TRACER", "PagePool",
-    "PrefixIndex", "RefPagePool", "RejectedError", "Request", "RequestState",
-    "Scheduler",
+    "CorruptArtifactFault", "EventLog", "ExpansionCache", "ExpansionFault",
+    "FaultError", "FaultPlane", "Metrics", "NULL_FAULTS", "NULL_TRACER",
+    "NonFiniteLogitsFault", "PageExhaustionFault", "PagePool", "PrefixIndex",
+    "RefPagePool", "RejectedError", "Request", "RequestState",
+    "RetriesExhaustedError", "Scheduler",
     "ServeEngine", "SlotPool", "StepPlan", "TokenStream", "Tracer",
-    "pages_for_tokens", "render_prometheus", "run_trace",
-    "sequential_reference", "tree_bytes",
+    "TransientFault", "fault_u01", "pages_for_tokens", "render_prometheus",
+    "run_trace", "sequential_reference", "tree_bytes",
 ]

@@ -25,6 +25,7 @@ from typing import Any
 import jax
 
 from repro.obs.tracer import NULL_TRACER, TID_EXPAND
+from repro.serve.faults import NULL_FAULTS
 
 PyTree = Any
 
@@ -48,13 +49,20 @@ class ExpansionCache:
     arm uses that instead of a separate code path.
     """
 
-    def __init__(self, byte_budget: int | None = None, tracer=NULL_TRACER):
+    def __init__(self, byte_budget: int | None = None, tracer=NULL_TRACER,
+                 faults=NULL_FAULTS):
         self.byte_budget = byte_budget
         # optional repro.obs tracer: evictions/invalidations become instant
         # events and the resident-bytes series a counter track, so a Perfetto
         # timeline shows WHY a later admission re-ran expansion. The engine
         # wires its own tracer into a cache it constructed itself.
         self.tracer = tracer
+        # optional fault-injection plane: a miss checks the "expand" site
+        # (the miss is what triggers MCNC expansion), so an injected
+        # expansion failure raises exactly where the real one would —
+        # before the engine dispatches the expansion jit. The engine
+        # adopts a null-plane cache into its own plane, like the tracer.
+        self.faults = faults
         self._entries: OrderedDict[Key, tuple[PyTree, int]] = OrderedDict()
         self.bytes = 0
         self.hits = 0
@@ -72,6 +80,8 @@ class ExpansionCache:
         entry = self._entries.get(key)
         if entry is None:
             self.misses += 1
+            if self.faults.enabled:
+                self.faults.check("expand", task_id)
             return None
         self._entries.move_to_end(key)
         self.hits += 1

@@ -70,13 +70,15 @@ from repro.core.reparam import expand_tree, flatten_with_paths, \
     unflatten_paths
 from repro.kernels.ops import kernel_expand_fn
 from repro.models import lm
-from repro.obs.events import (CANCEL, DEADLINE_MISS, DECODE_BLOCK, FINISH,
-                              PREFILL, PREFILL_CHUNK, EventLog)
+from repro.obs.events import (CANCEL, DEADLINE_MISS, DECODE_BLOCK, FAILED,
+                              FINISH, PREFILL, PREFILL_CHUNK, EventLog)
 from repro.obs.tracer import (NULL_TRACER, TID_DECODE, TID_ENGINE,
                               TID_EXPAND, TID_PAGES, TID_PREFILL, Tracer)
 from repro.serve.cache import ExpansionCache
+from repro.serve.faults import (NULL_FAULTS, FaultError, FaultPlane,
+                                NonFiniteLogitsFault)
 from repro.serve.metrics import Metrics
-from repro.serve.paged import PagePool, pages_for_tokens
+from repro.serve.paged import NULL_PAGE, PagePool, pages_for_tokens
 from repro.serve.prefix import PrefixIndex
 from repro.serve.registry import AdapterRegistry
 from repro.serve.scheduler import (ChunkPrefill, PrefillGroup, Request,
@@ -123,6 +125,17 @@ def _copy_kv_page(kv: PyTree, src: Array, dst: Array) -> PyTree:
     the pool donated — a CoW fork costs one page-sized device copy, never
     a pool copy."""
     return jax.tree.map(lambda v: v.at[:, dst].set(v[:, src]), kv)
+
+
+def _zero_kv_page(kv: PyTree, pid: Array) -> PyTree:
+    """Scrub one physical page (axis 1 of every paged-pool leaf) to zeros.
+    NaN-quarantine reclaim: a failed slot's decode writes may have landed
+    non-finite values in its private pages, and a page returned to the free
+    list is handed out WITHOUT a device-side clear (the next owner's writes
+    mask it) — except attention masking multiplies, and 0 x NaN is NaN, so
+    poisoned pages must be zeroed before they can be reissued. Jitted with
+    the pool donated, one page per dispatch (failure path only)."""
+    return jax.tree.map(lambda v: v.at[:, pid].set(0), kv)
 
 
 def _scatter_prefill(kv: PyTree, group_cache: PyTree, tokens: Array,
@@ -297,6 +310,18 @@ class ServeEngine:
     engine always keeps one (host-side appends, no device work) and
     derives the ttft_s / itl_s / queue_wait_s / request_latency_s
     histograms from each request's lifecycle events.
+    faults: optional repro.serve.faults FaultPlane — the deterministic
+    fault-injection plane chaos tests and benchmarks drive the failure-
+    containment machinery with. Adopted into the registry and expansion
+    cache like the tracer; NULL_FAULTS by default, with every hot-path
+    check gated on `.enabled` (zero dispatches, zero allocation when off).
+    Independent of the plane, the engine CONTAINS per-request failures:
+    a contained exception (see ServeEngine.CONTAINED) in one request's
+    prefill, page allocation, or artifact load fails THAT request (or its
+    prefill group) with a terminal FAILED event and a counter-asserted
+    reclaim of its slot, pages, and reservation, while every other stream
+    continues; a decode block reporting non-finite logits for a slot
+    quarantines it the same way (docs/ARCHITECTURE.md §1d).
     """
 
     def __init__(self, bundle: TaskBundle, base: PyTree, gen_ws: list,
@@ -321,6 +346,7 @@ class ServeEngine:
                  metrics: Metrics | None = None,
                  tracer: Tracer | None = None,
                  event_log: EventLog | None = None,
+                 faults: FaultPlane | None = None,
                  mesh: Mesh | None = None):
         if bundle.arch.kind != "lm":
             raise ValueError("ServeEngine serves decoder-only LMs")
@@ -377,10 +403,21 @@ class ServeEngine:
         # one a caller armed with its own tracer keeps it
         if registry.tracer is NULL_TRACER:
             registry.tracer = self.tracer
+        # fault-injection plane (serve/faults.py): NULL_FAULTS by default —
+        # every hot-path check short-circuits on `.enabled`, so the off
+        # state adds one attribute load and no dispatches. Adopted into
+        # orphan collaborators exactly like the tracer, so a single plane
+        # schedules faults across registry reads, cache expansion, page
+        # allocation, and decode.
+        self.faults = faults if faults is not None else NULL_FAULTS
+        if registry.faults is NULL_FAULTS:
+            registry.faults = self.faults
         self.cache = (expansion_cache if expansion_cache is not None
                       else ExpansionCache(tracer=self.tracer))
         if self.cache.tracer is NULL_TRACER:
             self.cache.tracer = self.tracer
+        if self.cache.faults is NULL_FAULTS:
+            self.cache.faults = self.faults
         self.metrics = metrics if metrics is not None else Metrics()
         # legacy_decode reproduces the PR-1 per-token hot path (host-side
         # token/pos array rebuild + upload, a separate argmax dispatch, one
@@ -497,9 +534,17 @@ class ServeEngine:
         self._pos = jnp.zeros((n_slots,), jnp.int32)
         self._remaining = jnp.zeros((n_slots,), jnp.int32)
         # livelock guard: consecutive steps that admitted nothing, prefilled
-        # nothing, and harvested zero tokens while work was still queued
-        # (see _step_impl; a healthy engine can never do two in a row)
+        # nothing, harvested zero tokens, and failed nothing while work was
+        # still queued (see _step_impl; a healthy engine can never do two
+        # in a row)
         self._no_progress_steps = 0
+        # NaN-injection payload (decode.nan site): built lazily on first
+        # fire — an all-NaN effective-adapter row (fp32 stacks) or zero
+        # codes + NaN scale planes (coded stacks, which dequantize to NaN)
+        self._nan_adapters: PyTree | None = None
+        # decode-block ordinal: the decode.latency fault site's key (one
+        # draw per dispatched block, independent of which requests ride it)
+        self._block_ordinal = 0
 
         # mesh mode: compute every buffer's canonical NamedSharding, place
         # the frozen base / KV pool / slot state accordingly, and thread
@@ -533,6 +578,12 @@ class ServeEngine:
                 jax.jit(_copy_kv_page, donate_argnums=(0,),
                         **sharding_kw["page_copy"]),
                 "page_copy", TID_PAGES)
+            # NaN-quarantine page scrub (failure path only: never dispatched
+            # in a fault-free run, so chaos-off arms see zero extra work)
+            self._page_scrub = instr(
+                jax.jit(_zero_kv_page, donate_argnums=(0,),
+                        **sharding_kw["page_copy"]),
+                "page_scrub", TID_PAGES)
         if not legacy_decode:
             # cancellation path: zeroes a slot's device counters so the next
             # fused block masks it (legacy per-token decode masks on the
@@ -767,8 +818,11 @@ class ServeEngine:
                      "adapter_full_restacks", "tokens_generated",
                      "prefill_chunks", "jit_compiles", "jit_dispatches",
                      "requests_cancelled", "requests_rejected",
-                     "deadline_misses"):
+                     "requests_failed", "retries", "deadline_misses"):
             self.metrics.counter(name)
+        # fault plane: cumulative injected-fault count (0 with the plane
+        # off) so dashboards can correlate failure spikes with injection
+        self.metrics.gauge("faults_injected")
         # latency histograms derived from the lifecycle event log: declared
         # up front so snapshot() / the Prometheus exposition always carry
         # them (with zero counts before traffic), not only after a request
@@ -891,6 +945,12 @@ class ServeEngine:
         eff = self.cache.get(task_id, bundle_hash)
         if eff is None:
             art = self.registry.load(task_id)      # hash-verified read
+            if art.bundle_hash != bundle_hash:
+                # the registry rolled the head back to its last-good
+                # generation mid-load (corrupt artifact): key the cache
+                # entry — and the slot pins below — by the weights the
+                # engine will actually serve
+                bundle_hash = art.bundle_hash
             state = jax.tree.map(jnp.asarray, art.state)
             if self.mesh is not None:
                 # alphas/betas replicate (KBs); the jit's out_shardings tile
@@ -915,6 +975,8 @@ class ServeEngine:
         entry = self.cache.get(task_id, bundle_hash)
         if entry is None:
             art = self.registry.load(task_id, dequantize=False)
+            if art.bundle_hash != bundle_hash:
+                bundle_hash = art.bundle_hash      # last-good rollback rekey
             qstate = {path: {k: jnp.asarray(v) for k, v in parts.items()}
                       for path, parts in art.qstate.items()}
             if self.mesh is not None:
@@ -1032,6 +1094,116 @@ class ServeEngine:
         self._observe_lifecycle(req.req_id)
         return True
 
+    # ------------------------------------------------------------------
+    # Per-request failure domains.
+    # ------------------------------------------------------------------
+    # Exception classes one request's failure is CONTAINED to: the request
+    # gets a terminal FAILED event and its resources are reclaimed while
+    # every other stream continues. OSError covers real (and injected)
+    # artifact I/O and corruption; KeyError an unknown/evicted task at
+    # admission; FaultError the injected classes plus the NaN quarantine.
+    # Anything else — assertion failures, state-desync RuntimeErrors, the
+    # livelock guard — is an ENGINE bug and propagates: containing it would
+    # hide corruption behind a tidy per-request failure.
+    CONTAINED = (OSError, KeyError, FaultError)
+
+    def _fail_request(self, req: Request, cause: BaseException):
+        """Collapse one request's failure domain: terminal FAILED state +
+        event (carrying the cause and whether a resubmit can succeed), and
+        — for ACTIVE requests — the full cancel-path reclaim: slot freed,
+        adapter row zeroed, device counters deactivated, KV pages returned
+        (counter-asserted, so a failure can never leak pages or
+        reservations). A NonFiniteLogitsFault additionally scrubs the
+        slot's PRIVATE pages before the free: its decode writes may hold
+        non-finite values, shared (prefix-forked) pages were written by
+        clean prefill and are immutable by the CoW contract."""
+        if req.state not in (RequestState.WAITING, RequestState.ACTIVE):
+            return
+        retryable = bool(getattr(cause, "retryable", False)
+                         or isinstance(cause, OSError)
+                         and not isinstance(cause, FaultError))
+        with self.tracer.span("failed", tid=TID_ENGINE, req=req.req_id,
+                              cause=type(cause).__name__,
+                              retryable=retryable):
+            if req.state is RequestState.WAITING:
+                self.scheduler.cancel_waiting(req)
+                req.state = RequestState.FAILED
+            else:
+                slot = req.slot
+                self.pool.release(slot, state=RequestState.FAILED)
+                self._slot_adapters[slot] = None
+                self._slot_qparts[slot] = None
+                if not self.legacy_decode:
+                    idx = np.asarray([slot], np.int32)
+                    self._stack_write(self._zero_adapters, idx)
+                    self._tokens, self._pos, self._remaining = (
+                        self._deactivate(self._tokens, self._pos,
+                                         self._remaining, idx))
+                if self.pages is not None:
+                    if isinstance(cause, NonFiniteLogitsFault):
+                        self._scrub_slot_pages(slot)
+                    with self.tracer.span("page_free", tid=TID_PAGES,
+                                          slots=1) as sp:
+                        sp.note(pages=len(self.pages.free_slot(slot)))
+                    assert self.pages._reserved[slot] == 0 and \
+                        not self.pages.slot_pages(slot), \
+                        f"failure reclaim leaked pages on slot {slot}"
+                    st = self.pages.stats()
+                    self.metrics.gauge("pages_in_use").set(
+                        st["pages_in_use"])
+                    self.metrics.gauge("free_pages").set(st["free_pages"])
+                    self.metrics.gauge("kv_bytes_in_use").set(
+                        st["pages_in_use"] * self._page_bytes)
+                self.metrics.gauge("active_slots").set(
+                    len(self.pool.active_slots()))
+        req.t_finish = time.perf_counter()
+        self.events.emit(req.req_id, FAILED, tokens=len(req.generated),
+                         cause=type(cause).__name__, retryable=retryable,
+                         error=str(cause))
+        self.metrics.counter("requests_failed").inc()
+        self._observe_lifecycle(req.req_id)
+
+    def _scrub_slot_pages(self, slot: int):
+        """Zero the slot's sole-owned physical pages on the device (NaN
+        quarantine; see _zero_kv_page for why freed pages can't carry
+        non-finite values onto the free list) — AND the shared null page:
+        the poisoned block's masked lanes dump their (non-finite) KV writes
+        there by design, and every slot whose table row is not fully
+        allocated reads it under attention masking, where 0 x NaN is still
+        NaN. Shared prefix-forked pages are NOT scrubbed: they were written
+        by clean prefill and are immutable by the CoW contract."""
+        for pid in self.pages.slot_pages(slot):
+            if self.pages.refcount[pid] == 1:
+                self.kv = self._page_scrub(self.kv, np.int32(pid))
+        self.kv = self._page_scrub(self.kv, np.int32(NULL_PAGE))
+
+    def _nan_effective(self) -> PyTree:
+        """decode.nan injection payload, built lazily on first fire: a
+        stack-writable adapter row whose application yields non-finite
+        logits. fp32 stacks: all-NaN effective leaves. Coded stacks: zero
+        codes + all-NaN fp16 scale planes — the fused dequant multiplies
+        codes by scales, and 0 x NaN is NaN. Slot-PRIVATE either way (the
+        per-slot stack row is never shared), so the poison cannot leak
+        into another request's math."""
+        if self._nan_adapters is None:
+            if self._coded_stacks:
+                nan = {
+                    p: {part: (jnp.full(shp, jnp.nan, jnp.dtype(dt))
+                               if jnp.issubdtype(jnp.dtype(dt), jnp.floating)
+                               else jnp.zeros(shp, jnp.dtype(dt)))
+                        for part, (shp, dt) in rows_part_shapes(
+                            self._stack_meta[p],
+                            self._flat_base[p].shape[:1]).items()}
+                    for p in self._adapter_paths}
+                if self.mesh is not None:
+                    nan = jax.device_put(nan, self._coded_eff_sh)
+            else:
+                nan = self._place_eff(
+                    {p: jnp.full_like(self._flat_base[p], jnp.nan)
+                     for p in self._adapter_paths})
+            self._nan_adapters = nan
+        return self._nan_adapters
+
     def has_work(self) -> bool:
         """True while any request is queued or decoding."""
         return self.scheduler.has_work()
@@ -1050,12 +1222,26 @@ class ServeEngine:
     def _step_impl(self) -> list[Request]:
         t_step = time.perf_counter()
         tok0 = self.metrics.counter("tokens_generated").value
+        fail0 = self.metrics.counter("requests_failed").value
         plan = self.scheduler.plan_step()
         finished: list[Request] = []
         for group in plan.prefill_groups:
-            self._prefill_group(group, finished)
+            try:
+                self._prefill_group(group, finished)
+            except self.CONTAINED as e:
+                # the fault domain of a batched prefill is the GROUP: its
+                # requests share one adapter load/expansion and one fused
+                # prefill dispatch, so a failure before the scatter cannot
+                # be attributed to a single member. Every member fails
+                # terminally (reclaiming any pages the group's alloc loop
+                # already granted); all OTHER streams continue untouched.
+                for req in group.requests:
+                    self._fail_request(req, e)
         for chunk in plan.chunk_prefills:
-            self._chunk_prefill(chunk, finished)
+            try:
+                self._chunk_prefill(chunk, finished)
+            except self.CONTAINED as e:
+                self._fail_request(chunk.request, e)
         # a request can finish at prefill (max_new_tokens == 1); its device
         # `remaining` counter is already 0, so it is masked inside the block
         # — plan.decode_horizon is 0 only when NO slot owes decode tokens
@@ -1118,6 +1304,9 @@ class ServeEngine:
             self.metrics.gauge("prefix_evicted_bytes").set(
                 pst["evictions"] * self._page_bytes)
         self.metrics.gauge("active_slots").set(len(self.pool.active_slots()))
+        if self.faults.enabled:
+            self.metrics.gauge("faults_injected").set(
+                sum(self.faults.injected.values()))
         self.metrics.gauge("adapter_stack_bytes").set(
             self._adapter_stack_nbytes)
         self.metrics.gauge("resident_tasks").set(
@@ -1133,8 +1322,9 @@ class ServeEngine:
         # never be granted because something outside the scheduler holds
         # pages. Without this check run_until_idle spins max_steps zero-
         # token iterations before failing with an unhelpful message.
+        failed_n = self.metrics.counter("requests_failed").value - fail0
         progress = (bool(plan.prefill_groups) or bool(plan.chunk_prefills)
-                    or bool(finished) or tok > 0)
+                    or bool(finished) or tok > 0 or failed_n > 0)
         if progress or not self.scheduler.has_work():
             self._no_progress_steps = 0
         else:
@@ -1301,6 +1491,8 @@ class ServeEngine:
             with self.tracer.span("page_alloc", tid=TID_PAGES) as sp:
                 a0 = self.pages.allocations
                 for r in group.requests:
+                    if self.faults.enabled:
+                        self.faults.check("page_alloc", r.req_id)
                     self.pages.ensure(r.slot, r.prompt_len)
                 sp.note(pages=self.pages.allocations - a0)
             page_ids = np.asarray(
@@ -1397,6 +1589,8 @@ class ServeEngine:
                                           np.int32(dst))
         with self.tracer.span("page_alloc", tid=TID_PAGES) as sp:
             a0 = self.pages.allocations
+            if self.faults.enabled:
+                self.faults.check("page_alloc", req.req_id)
             self.pages.ensure(chunk.slot, chunk.start + chunk.length)
             sp.note(pages=self.pages.allocations - a0)
         num_pages = pages_for_tokens(chunk.start + chunk.length,
@@ -1450,7 +1644,7 @@ class ServeEngine:
                 kw = dict(
                     in_shardings=(self._decode_params_sh, self._kv_sh,
                                   vec, vec, vec),
-                    out_shardings=(vec, self._kv_sh, vec, vec, vec))
+                    out_shardings=(vec, vec, self._kv_sh, vec, vec, vec))
             fn = self._instr(
                 jax.jit(make_assembled_multi_decode_step(self.bundle, k,
                                                          unroll=unroll),
@@ -1473,7 +1667,7 @@ class ServeEngine:
                 kw = dict(
                     in_shardings=(self._decode_params_sh, self._kv_sh,
                                   vec, vec, vec, vec),
-                    out_shardings=(vec, self._kv_sh, vec, vec, vec))
+                    out_shardings=(vec, vec, self._kv_sh, vec, vec, vec))
             fn = self._instr(
                 jax.jit(make_assembled_multi_decode_step_paged(
                     self.bundle, k, num_pages, unroll=unroll),
@@ -1490,12 +1684,22 @@ class ServeEngine:
         this block (capped at the per-slot max, so a late-generation block
         never reads MORE than the dense path)."""
         max_pages = 1
-        for s in self.pool.active_slots():
+        for s in list(self.pool.active_slots()):
             req = self.pool.requests[s]
             if req.prefilling or req.done:    # masked rows: output discarded
                 continue
             take = min(k, req.max_new_tokens - len(req.generated))
-            self.pages.ensure(s, self.pool.pos[s] + take)
+            try:
+                if self.faults.enabled:
+                    self.faults.check("page_alloc", req.req_id)
+                self.pages.ensure(s, self.pool.pos[s] + take)
+            except self.CONTAINED as e:
+                # per-SLOT fault domain: this request fails terminally and
+                # its slot is deactivated before the block dispatches (the
+                # zeroed device counters mask the row), so every other
+                # slot's decode proceeds in the same block
+                self._fail_request(req, e)
+                continue
             max_pages = max(max_pages, pages_for_tokens(
                 self.pool.pos[s] + take, self.page_size))
         return min(1 << (max_pages - 1).bit_length(),
@@ -1505,18 +1709,43 @@ class ServeEngine:
         """One fused K-token decode dispatch + ONE host sync to harvest the
         (K, n_slots) token block. Validity needs no device mask read-back:
         the host's own remaining-token bookkeeping mirrors the device
-        counters exactly (both decrement once per emitted token)."""
-        if self._params_dirty:       # slot writes since the last block
-            self._rebuild_decode_params()
-            self._params_dirty = False
+        counters exactly (both decrement once per emitted token). The block
+        also returns a per-slot non-finite-logit flag (OR-accumulated
+        inside the scan, read alongside the token block — no extra
+        dispatch): a flagged slot's request fails terminally and its tokens
+        are never harvested (NaN quarantine)."""
         t0 = time.perf_counter()
         span_args = {"k": k, "batch": len(self.pool.active_slots())}
+        if self.faults.enabled:
+            # decode.nan: poison the slot's PRIVATE adapter-stack row so
+            # this block genuinely computes non-finite logits for that row
+            # — the detection flag, quarantine, and reclaim below then run
+            # exactly as they would for an organically bad bundle. Fired
+            # at decode (never prefill) so the prompt's KV — and anything
+            # the prefix index retained from it — stays clean.
+            for s in self.pool.active_slots():
+                req = self.pool.requests[s]
+                if req.prefilling or req.done:
+                    continue
+                if self.faults.fire("decode.nan", req.req_id):
+                    self._stack_write(self._nan_effective(),
+                                      np.asarray([s], np.int32))
+            if self.faults.fire("decode.latency", self._block_ordinal):
+                time.sleep(0.05)       # injected straggler-device stall
+        self._block_ordinal += 1
         if self.pages is not None:
             with self.tracer.span("page_alloc", tid=TID_PAGES) as sp:
                 a0 = self.pages.allocations
                 num_pages = self._prepare_block_pages(k)
                 sp.note(pages=self.pages.allocations - a0)
             span_args["live_pages"] = num_pages
+        # AFTER page prep + injection: both _fail_request (page_alloc
+        # containment) and the NaN poison write slot rows, which replaces
+        # the donated stack buffers — the params tree must relink onto the
+        # live ones before the dispatch below
+        if self._params_dirty:       # slot writes since the last block
+            self._rebuild_decode_params()
+            self._params_dirty = False
         # the span covers dispatch AND the one host sync: on a warm block
         # its duration is essentially device time for K tokens
         with self.tracer.span("decode_block", tid=TID_DECODE, **span_args):
@@ -1530,23 +1759,38 @@ class ServeEngine:
                     fused=self._coded_stacks,
                     stack_bytes=self._adapter_stack_nbytes):
                 if self.pages is not None:
-                    (tok_block, self.kv, self._tokens, self._pos,
+                    (tok_block, nonfinite, self.kv, self._tokens, self._pos,
                      self._remaining) = self._block_fn_paged(k, num_pages)(
                         self._decode_params, self.kv, self.pages.table,
                         self._tokens, self._pos, self._remaining)
                 else:
-                    (tok_block, self.kv, self._tokens, self._pos,
+                    (tok_block, nonfinite, self.kv, self._tokens, self._pos,
                      self._remaining) = self._block_fn(k)(
                         self._decode_params, self.kv, self._tokens,
                         self._pos, self._remaining)
             block = np.asarray(tok_block)      # the one sync per K tokens
+            # the flag rode the same dispatch and is ready with the block —
+            # reading it is a bytes-sized copy, not a second device sync
+            bad = np.asarray(nonfinite)
         dt = time.perf_counter() - t0
         harvested = 0
-        for s in self.pool.active_slots():
+        for s in list(self.pool.active_slots()):
             req = self.pool.requests[s]
             if req.done or req.prefilling:     # finished at prefill, or a
                 continue                       # chunked prompt still caching
             take = min(k, req.max_new_tokens - len(req.generated))
+            if bad[s]:
+                # NaN quarantine: the device saw non-finite logits on this
+                # slot's row sometime during the block. Every token the
+                # block produced for it (argmax over NaN logits) is garbage
+                # — harvest NOTHING, fail the request terminally, and
+                # reclaim the slot with its private pages scrubbed. The
+                # device position advanced inside the block, but reclaim
+                # zeroes the counters, so nothing downstream reads them.
+                self._fail_request(req, NonFiniteLogitsFault(
+                    f"non-finite logits on slot {s} (req {req.req_id})",
+                    site="decode.nan", key=req.req_id))
+                continue
             if block[take - 1, s] < 0:         # -1 = device row was inactive
                 raise RuntimeError(
                     f"slot {s}: host expected {take} tokens but device "

@@ -1,0 +1,231 @@
+"""Seeded, deterministic fault-injection plane for the serving stack.
+
+MCNC makes multi-tenancy cheap — thousands of tiny manifold-coefficient
+bundles behind one base model — which makes the blast radius of one
+tenant's bad bundle every other tenant. The engine's per-request failure
+domains (engine._fail_request, the NaN quarantine, registry last-good
+rollback, frontend retry) exist to contain that; THIS module is how tests
+and benchmarks prove they work: a deterministic plane that injects the
+failures production would eventually see, at named sites threaded through
+the stack, replayable bit-for-bit across processes and meshes.
+
+Sites (the strings engine/registry/cache code passes to ``fire``):
+
+  registry.corrupt   AdapterRegistry.load, keyed by task_id — the head
+                     artifact reads as corrupt (exercises verification +
+                     last-good rollback). Not retryable (the artifact
+                     stays corrupt until republished).
+  registry.transient AdapterRegistry.load, keyed by task_id — a transient
+                     I/O error (NFS blip, torn read that a re-read heals).
+                     Retryable.
+  expand             ExpansionCache.get, keyed by task_id — MCNC expansion
+                     fails (OOM, bad generator state). Retryable: the next
+                     attempt re-expands from the (intact) artifact.
+  page_alloc         engine page-ensure sites, keyed by req_id — spurious
+                     KV-page exhaustion for ONE request. Retryable
+                     (capacity frees as other requests drain). Checked in
+                     the ENGINE, not PagePool: the allocator's semantics
+                     are property-tested against RefPagePool and must not
+                     grow nondeterministic behavior.
+  decode.nan         engine decode dispatch, keyed by req_id — the slot's
+                     adapter row is poisoned with non-finite values so the
+                     fused block genuinely produces non-finite logits and
+                     the device-side flag/quarantine path runs end to end.
+                     Not retryable (a bundle that yields NaN will again).
+  decode.latency     engine decode dispatch, keyed by the block ordinal —
+                     a host-side sleep simulating a straggler device
+                     (exercises deadline machinery under injected stalls).
+
+Determinism: a fault decision is a pure function of (seed, site, key) —
+``sha256`` of the triple mapped to a uniform [0, 1) draw compared against
+``rate`` — with NO mutable RNG state, so the same plane config produces
+the same schedule regardless of arrival timing, interleaving, process, or
+mesh shape (the chaos differential oracle replays one schedule through
+single-device and sharded engines and compares). An explicit ``schedule``
+(list of (site, key) pairs) bypasses the rate draw for exact-by-hand test
+scripts. Every (site, key) pair fires AT MOST ONCE per plane: a decode
+fault keyed by req_id must not re-fire every block for a request that is
+already being failed, and a registry fault must not make the retry that is
+supposed to heal it fail forever.
+
+Zero-cost when off, the obs layer's discipline: the engine holds
+``NULL_FAULTS`` by default (``enabled`` is False) and every hot-path check
+is ``if faults.enabled and faults.fire(site, key)`` — one attribute load,
+no allocation, no hashing. serve_bench's chaos-off arms assert no new jit
+dispatches and the interleaved throughput floors stay green with the plane
+absent.
+
+No jax imports; pure host-side control plane.
+"""
+from __future__ import annotations
+
+import hashlib
+
+
+class FaultError(RuntimeError):
+    """Base class for injected (and injected-equivalent) serve faults.
+
+    ``retryable`` tells the frontend whether resubmitting the request can
+    possibly succeed: True for transient classes (I/O blips, spurious
+    allocator exhaustion, expansion failures), False for deterministic
+    ones (corrupt artifact, NaN-producing bundle) where a retry would only
+    replay the failure.
+    """
+
+    retryable = False
+
+    def __init__(self, message: str, *, site: str = "", key=None):
+        super().__init__(message)
+        self.site = site
+        self.key = key
+
+
+class TransientFault(FaultError):
+    """A fault a retry can heal (the injected stand-in for NFS blips and
+    other I/O weather)."""
+
+    retryable = True
+
+
+class CorruptArtifactFault(FaultError):
+    """Injected torn/corrupt artifact bytes: the head generation reads as
+    garbage until republished — never retryable, but rollback-able."""
+
+
+class ExpansionFault(TransientFault):
+    """Injected MCNC expansion failure (models transient OOM / bad
+    scratch state); the artifact itself is intact, so retry re-expands."""
+
+
+class PageExhaustionFault(TransientFault):
+    """Injected spurious KV-page exhaustion for one request; capacity
+    frees as other requests drain, so retry is meaningful."""
+
+
+class NonFiniteLogitsFault(FaultError):
+    """A decode block produced non-finite logits for this request's slot
+    (injected via adapter-row poisoning, or detected organically by the
+    device-side flag). Deterministic per bundle — not retryable."""
+
+
+def fault_u01(seed: int, site: str, key) -> float:
+    """The plane's deterministic uniform draw: sha256(seed|site|key) mapped
+    to [0, 1). Pure — no RNG state — so schedules are independent of call
+    order, arrival timing, and process (load_gen's ``fault_plan`` and the
+    frontend's retry jitter reuse it for the same reason)."""
+    h = hashlib.sha256(f"{seed}|{site}|{key}".encode()).digest()
+    return int.from_bytes(h[:8], "big") / float(1 << 64)
+
+
+class FaultPlane:
+    """Deterministic fault decisions + per-site exception construction.
+
+    seed/rate: every (site, key) with ``fault_u01(seed, site, key) < rate``
+    fires (once). sites: optional allowlist restricting rate-based firing
+    to named sites (empty/None = all sites eligible).
+    schedule: explicit (site, key) pairs that fire regardless of rate —
+    the exact-by-hand mode chaos tests and DIFF_TRACE replay use.
+    """
+
+    enabled = True
+
+    def __init__(self, seed: int = 0, rate: float = 0.0,
+                 sites=None, schedule=None):
+        self.seed = int(seed)
+        self.rate = float(rate)
+        self.sites = frozenset(sites) if sites else None
+        self._schedule = {(str(s), self._norm(k))
+                          for s, k in (schedule or ())}
+        self._fired: set[tuple[str, object]] = set()
+        self.injected: dict[str, int] = {}       # site -> fire count
+
+    @staticmethod
+    def _norm(key):
+        # JSON round-trips turn int keys into ints and strings alike
+        # depending on the author; normalize so a schedule written as
+        # ["decode.nan", 3] matches fire("decode.nan", 3) and "3" both
+        return str(key)
+
+    @classmethod
+    def from_spec(cls, spec: dict | None) -> "FaultPlane":
+        """Build a plane from a JSON-serializable spec — the form traces
+        and bench configs carry: {"seed": int, "rate": float,
+        "sites": [...], "schedule": [[site, key], ...]} (all optional)."""
+        spec = spec or {}
+        return cls(seed=spec.get("seed", 0), rate=spec.get("rate", 0.0),
+                   sites=spec.get("sites"), schedule=spec.get("schedule"))
+
+    # ------------------------------------------------------------------
+    def would_fire(self, site: str, key) -> bool:
+        """The pure decision (no state change): is (site, key) scheduled?"""
+        k = (site, self._norm(key))
+        if k in self._schedule:
+            return True
+        if self.rate <= 0.0:
+            return False
+        if self.sites is not None and site not in self.sites:
+            return False
+        return fault_u01(self.seed, site, k[1]) < self.rate
+
+    def fire(self, site: str, key) -> bool:
+        """Should (site, key) fault NOW? True at most once per pair —
+        subsequent calls return False so retries can heal and failure
+        paths don't re-trip while unwinding."""
+        k = (site, self._norm(key))
+        if k in self._fired or not self.would_fire(site, key):
+            return False
+        self._fired.add(k)
+        self.injected[site] = self.injected.get(site, 0) + 1
+        return True
+
+    def reset(self):
+        """Forget fired pairs (benchmark replays re-run one schedule
+        through a warm engine; each replay re-arms the plane)."""
+        self._fired.clear()
+        self.injected.clear()
+
+    # ---- typed raise helpers: one construction point per site ---------
+    _EXC = {"registry.corrupt": CorruptArtifactFault,
+            "registry.transient": TransientFault,
+            "expand": ExpansionFault,
+            "page_alloc": PageExhaustionFault,
+            "decode.nan": NonFiniteLogitsFault}
+
+    def raise_for(self, site: str, key):
+        """Raise the site's typed FaultError (callers that checked fire()
+        themselves; keeps the site -> exception-class map in one place)."""
+        exc = self._EXC.get(site, FaultError)
+        raise exc(f"injected fault at {site} (key={key!r})",
+                  site=site, key=key)
+
+    def check(self, site: str, key):
+        """fire() + raise_for() in one call — the standard injection point
+        for sites whose fault IS an exception."""
+        if self.fire(site, key):
+            self.raise_for(site, key)
+
+
+class _NullFaults:
+    """Disabled plane: same surface as FaultPlane, ``enabled`` False, every
+    method a no-op. The engine's hot-path checks short-circuit on
+    ``enabled`` so the off state costs one attribute load."""
+
+    enabled = False
+    injected: dict = {}
+
+    def would_fire(self, site: str, key) -> bool:
+        """Never fires."""
+        return False
+
+    def fire(self, site: str, key) -> bool:
+        """Never fires."""
+        return False
+
+    def check(self, site: str, key):
+        """No-op check."""
+
+    def reset(self):
+        """No-op reset."""
+
+
+NULL_FAULTS = _NullFaults()

@@ -25,6 +25,15 @@ Overload behavior is explicit, never silent queueing:
     pump loop (``deadline_miss`` then ``cancel`` events) rather than
     occupying a slot they can no longer use.
 
+Failure handling: a request the engine fails terminally (FAILED — see
+engine._fail_request and docs/ARCHITECTURE.md §1d) closes its stream like
+any other terminal state. :meth:`AsyncFrontend.generate_with_retry` layers
+client-side retry on top: retryable failures (the FAILED event's
+``retryable`` flag; ``queue_full`` rejections) are resubmitted under a new
+req_id with capped exponential backoff and deterministic jitter, never
+past the request's deadline; each resubmission emits a RETRY event and a
+``retry`` tracer span.
+
 Architecture: the core is sans-IO — :meth:`AsyncFrontend.pump` advances the
 engine one step and distributes newly generated tokens to live streams,
 synchronously. ``asyncio`` enters only in the thin driver (:meth:`run` /
@@ -47,12 +56,14 @@ import time
 from collections import deque
 from typing import Sequence
 
-from repro.obs.events import DEADLINE_MISS, REJECT, SUBMIT
+from repro.obs.events import DEADLINE_MISS, FAILED, REJECT, RETRY, SUBMIT
 from repro.obs.tracer import TID_ENGINE
 from repro.serve.engine import ServeEngine
+from repro.serve.faults import fault_u01
 from repro.serve.scheduler import Request, RequestState
 
-__all__ = ["AsyncFrontend", "RejectedError", "TokenStream"]
+__all__ = ["AsyncFrontend", "RejectedError", "RetriesExhaustedError",
+           "TokenStream"]
 
 
 class RejectedError(RuntimeError):
@@ -67,6 +78,23 @@ class RejectedError(RuntimeError):
         super().__init__(message)
         self.reason = reason
         self.req_id = req_id
+
+
+class RetriesExhaustedError(RuntimeError):
+    """generate_with_retry gave up: attempts ran out, the deadline left no
+    room for another backoff, or the failure class was not retryable.
+
+    req_id: the LAST attempt's event-log identity. attempts: submissions
+    made (including the first). cause: the last attempt's failure — a
+    RejectedError, or the FAILED event's recorded cause string.
+    """
+
+    def __init__(self, message: str, *, req_id: int, attempts: int,
+                 cause=None):
+        super().__init__(message)
+        self.req_id = req_id
+        self.attempts = attempts
+        self.cause = cause
 
 
 class TokenStream:
@@ -253,6 +281,110 @@ class AsyncFrontend:
             eng.events.emit(rid, REJECT, reason=reason)
             eng.metrics.counter("requests_rejected").inc()
         return RejectedError(reason, rid, message)
+
+    # -- retry ----------------------------------------------------------
+    # Rejection reasons a resubmit can outlive: queue_full drains as slots
+    # free; a "deadline" rejection only gets MORE infeasible with time.
+    RETRYABLE_REJECTS = frozenset({"queue_full"})
+
+    def _failure(self, req_id: int) -> tuple[str, bool]:
+        """(cause, retryable) recorded on a request's terminal FAILED
+        event — the engine stamps both when it collapses the failure
+        domain (engine._fail_request)."""
+        for ev in self.engine.events.events_for(req_id):
+            if ev.name == FAILED:
+                return (ev.data.get("cause", "unknown"),
+                        bool(ev.data.get("retryable", False)))
+        return ("unknown", False)
+
+    async def generate_with_retry(self, task_id: str, prompt: Sequence[int],
+                                  max_new_tokens: int, *,
+                                  deadline: float | None = None,
+                                  priority: int = 0, max_attempts: int = 4,
+                                  backoff_base: float = 0.05,
+                                  backoff_cap: float = 1.0,
+                                  retry_seed: int = 0) -> list[int]:
+        """Submit, stream to completion, and transparently resubmit on
+        RETRYABLE failures — the client-side half of the fault-domain
+        story (engine._fail_request decides what is retryable and stamps
+        it on the FAILED event; queue_full rejections are retryable by
+        construction).
+
+        Backoff between attempts is capped exponential —
+        ``min(backoff_base * 2**(attempt-1), backoff_cap)`` — times a
+        DETERMINISTIC jitter factor in [1, 2) drawn via faults.fault_u01
+        keyed by (retry_seed, previous req_id, attempt): replayable in
+        tests, no thundering-herd lockstep in a fleet. Deadline-aware: a
+        retry whose backoff would land past ``deadline`` is not attempted
+        (raises RetriesExhaustedError instead of burning a doomed slot).
+
+        Every resubmission emits a RETRY event under the NEW attempt's
+        req_id (data: prev_req_id / attempt / backoff_s) inside a
+        ``retry`` tracer span, and bumps the engine's ``retries`` counter.
+        Returns the successful attempt's full token list; raises
+        RetriesExhaustedError when attempts run out or the failure class
+        cannot be retried (non-retryable FAILED cause, "deadline"
+        rejection, cancellation)."""
+        if max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        prev_id: int | None = None
+        cause: object = None
+        for attempt in range(max_attempts):
+            backoff = 0.0
+            if attempt:
+                backoff = min(backoff_base * 2.0 ** (attempt - 1),
+                              backoff_cap)
+                backoff *= 1.0 + fault_u01(retry_seed, "retry.jitter",
+                                           f"{prev_id}|{attempt}")
+                if deadline is not None and \
+                        self._clock() + backoff > deadline:
+                    raise RetriesExhaustedError(
+                        f"retry backoff {backoff:.3f}s lands past the "
+                        f"deadline (attempt {attempt + 1})",
+                        req_id=prev_id, attempts=attempt, cause=cause)
+                if backoff > 0:
+                    await asyncio.sleep(backoff)
+            try:
+                if attempt == 0:
+                    stream = self.submit(task_id, prompt, max_new_tokens,
+                                         deadline=deadline,
+                                         priority=priority)
+                else:
+                    with self.engine.tracer.span(
+                            "retry", tid=TID_ENGINE, prev=prev_id,
+                            attempt=attempt, backoff_s=round(backoff, 6)):
+                        stream = self.submit(task_id, prompt,
+                                             max_new_tokens,
+                                             deadline=deadline,
+                                             priority=priority)
+                        self.engine.events.emit(
+                            stream.req_id, RETRY, prev_req_id=prev_id,
+                            attempt=attempt, backoff_s=backoff)
+                        self.engine.metrics.counter("retries").inc()
+            except RejectedError as e:
+                if e.reason not in self.RETRYABLE_REJECTS:
+                    raise
+                prev_id, cause = e.req_id, e
+                continue
+            tokens = await stream.collect()
+            if stream.state is RequestState.FINISHED:
+                return tokens
+            if stream.state is RequestState.FAILED:
+                fcause, retryable = self._failure(stream.req_id)
+                if retryable:
+                    prev_id, cause = stream.req_id, fcause
+                    continue
+                raise RetriesExhaustedError(
+                    f"request failed with non-retryable cause {fcause!r}",
+                    req_id=stream.req_id, attempts=attempt + 1,
+                    cause=fcause)
+            raise RetriesExhaustedError(
+                f"request ended {stream.state.value} — not retryable",
+                req_id=stream.req_id, attempts=attempt + 1,
+                cause=stream.state.value)
+        raise RetriesExhaustedError(
+            f"gave up after {max_attempts} attempts",
+            req_id=prev_id, attempts=max_attempts, cause=cause)
 
     # -- cancellation / shedding ---------------------------------------
     def cancel(self, stream: TokenStream) -> bool:

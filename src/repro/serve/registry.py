@@ -14,6 +14,19 @@ task id *hot-swaps* it: the bundle hash changes, subscribers (the engine's
 expansion cache) are notified, and the next request picks up the new weights
 without restarting the engine.
 
+Hot-swap keeps a *last-good* fallback: publish snapshots the generation it
+replaces into a dot-prefixed sibling dir (invisible to ``list_tasks`` and
+unreachable through ``_safe_task_dir``, so it can never be served as a task
+of its own). If the head generation later reads as corrupt — hash mismatch,
+torn manifest, undecodable payload — ``load`` logs, falls back to the
+last-good bundle, repairs the in-memory index to the fallback's
+(version, hash), and notifies subscribers so every cache keyed by the dead
+head hash (expansion cache, prefix index) invalidates. Transient I/O errors
+do NOT roll back: they propagate as retryable so the frontend can resubmit
+against the (intact) head. Corruption is never unpickled: verification runs
+before any payload decode, and parse failures surface as IOError, not as
+whatever the decoder happens to throw.
+
 Bundles are stored in wire format v2 by default (quantized + entropy-coded
 ``payload.bin``, repro.checkpoint.codec; spec in docs/ARCHITECTURE.md):
 publish(quant="int8") shrinks a task's on-disk footprint ~5x vs the v1
@@ -35,6 +48,7 @@ from repro.checkpoint.manager import (arrays_to_tree, read_artifact,
                                       tree_to_arrays, write_artifact)
 from repro.core.generator import GeneratorConfig
 from repro.obs.tracer import NULL_TRACER, TID_ENGINE
+from repro.serve.faults import NULL_FAULTS, CorruptArtifactFault
 
 PyTree = Any
 
@@ -77,13 +91,17 @@ class AdapterRegistry:
     of waiting for a hash miss.
     """
 
-    def __init__(self, root: str, tracer=NULL_TRACER):
+    def __init__(self, root: str, tracer=NULL_TRACER, faults=NULL_FAULTS):
         self.root = root
         os.makedirs(root, exist_ok=True)
         # optional repro.obs tracer: publish/load become spans (disk +
         # hash-verify + decode time is real reconstruction cost — the part
         # an expansion-cache hit saves besides the expansion itself)
         self.tracer = tracer
+        # optional fault-injection plane (serve/faults.py): load() checks
+        # the registry.transient / registry.corrupt sites. Cold path —
+        # disk I/O dominates the no-op calls when the plane is off.
+        self.faults = faults
         self._subscribers: list[Callable[[str], None]] = []
         # task_id -> (version, bundle_hash); lazily filled from manifests.
         self._index: dict[str, tuple[int, str]] = {}
@@ -99,6 +117,22 @@ class AdapterRegistry:
                                "manifest.json")) as f:
             m = json.load(f)
         return int(m.get("version", 1)), m["hash"]
+
+    def _lastgood_dir(self, task_id: str) -> str:
+        """Where the previous generation lives. Dot-prefixed: invisible to
+        list_tasks, rejected by _safe_task_dir — never servable directly."""
+        return os.path.join(self.root, "." + task_id + ".lastgood")
+
+    def _snapshot_lastgood(self, task_id: str, task_dir: str):
+        """Copy the live artifact aside before a hot-swap replaces it.
+        Copy-to-temp then rename so a crash mid-snapshot leaves either the
+        old last-good or the new one, never a torn half-copy."""
+        dst = self._lastgood_dir(task_id)
+        tmp = dst + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        shutil.copytree(task_dir, tmp)
+        shutil.rmtree(dst, ignore_errors=True)
+        os.rename(tmp, dst)
 
     def subscribe(self, fn: Callable[[str], None]):
         """Register an in-process (task_id,) callback fired on every
@@ -129,6 +163,10 @@ class AdapterRegistry:
         arrays = tree_to_arrays(state)
         with self.tracer.span("bundle_publish", tid=TID_ENGINE,
                               task=task_id, version=version, quant=quant):
+            if os.path.isdir(task_dir):
+                # keep the generation this publish replaces: load() falls
+                # back to it if the new head ever reads as corrupt
+                self._snapshot_lastgood(task_id, task_dir)
             manifest = write_artifact(task_dir, arrays, {
                 "task_id": task_id,
                 "version": version,
@@ -145,35 +183,37 @@ class AdapterRegistry:
                              quant=quant if fmt == 2 else "none",
                              codec=codec if fmt == 2 else "none")
 
-    def load(self, task_id: str, *, verify: bool = True,
-             dequantize: bool = True) -> AdapterBundle:
-        """Load + hash-verify a bundle (raises IOError on corruption).
-
-        dequantize=True (default) returns `state` as the float (alpha, beta)
-        tree whatever the on-disk format. dequantize=False defers the lossy
-        inverse: `state` is None and `qstate`/`qmeta` carry the coded parts
-        for device-side dequantization (the engine's quantized ExpansionCache
-        path) — v1 bundles come back as scheme-"none" parts, so callers
-        handle one representation."""
-        task_dir = _safe_task_dir(self.root, task_id)
-        if not os.path.isdir(task_dir):
-            raise KeyError(f"no bundle for task {task_id!r} in {self.root}")
+    def _load_dir(self, task_id: str, artifact_dir: str, *, verify: bool,
+                  dequantize: bool) -> AdapterBundle:
+        """Read one artifact directory into an AdapterBundle. Every way the
+        bytes can be bad — hash mismatch, torn/garbage manifest, payload the
+        decoder chokes on — surfaces as IOError: callers (and the last-good
+        fallback below) branch on one corruption class, and garbage is never
+        half-decoded into a served bundle."""
         with self.tracer.span("bundle_load", tid=TID_ENGINE, task=task_id,
                               dequantize=dequantize):
-            if dequantize:
-                arrays, manifest = read_artifact(task_dir, verify=verify)
-                state, qstate, qmeta = arrays_to_tree(arrays), None, None
-            else:
-                tensors, manifest = read_artifact_quantized(task_dir,
-                                                            verify=verify)
-                state = None
-                qstate = {name.replace("|", "/"): qt.parts
-                          for name, qt in tensors.items()}
-                qmeta = tuple(sorted(
-                    (name.replace("|", "/"), qt.meta)
-                    for name, qt in tensors.items()))
-        gen_cfg = GeneratorConfig(**manifest["generator"])
-        bundle = AdapterBundle(
+            try:
+                if dequantize:
+                    arrays, manifest = read_artifact(artifact_dir,
+                                                     verify=verify)
+                    state, qstate, qmeta = arrays_to_tree(arrays), None, None
+                else:
+                    tensors, manifest = read_artifact_quantized(
+                        artifact_dir, verify=verify)
+                    state = None
+                    qstate = {name.replace("|", "/"): qt.parts
+                              for name, qt in tensors.items()}
+                    qmeta = tuple(sorted(
+                        (name.replace("|", "/"), qt.meta)
+                        for name, qt in tensors.items()))
+                gen_cfg = GeneratorConfig(**manifest["generator"])
+            except OSError:
+                raise           # already the corruption class (incl. ENOENT)
+            except Exception as e:
+                raise IOError(f"corrupt bundle for task {task_id!r} in "
+                              f"{artifact_dir}: {type(e).__name__}: {e}"
+                              ) from e
+        return AdapterBundle(
             task_id=task_id, version=int(manifest.get("version", 1)),
             bundle_hash=manifest["hash"], gen_cfg=gen_cfg,
             state=state,
@@ -183,6 +223,48 @@ class AdapterRegistry:
             quant=manifest.get("quant", "none"),
             codec=manifest.get("codec", "none"),
             qstate=qstate, qmeta=qmeta)
+
+    def load(self, task_id: str, *, verify: bool = True,
+             dequantize: bool = True) -> AdapterBundle:
+        """Load + hash-verify a bundle (raises IOError on corruption).
+
+        dequantize=True (default) returns `state` as the float (alpha, beta)
+        tree whatever the on-disk format. dequantize=False defers the lossy
+        inverse: `state` is None and `qstate`/`qmeta` carry the coded parts
+        for device-side dequantization (the engine's quantized ExpansionCache
+        path) — v1 bundles come back as scheme-"none" parts, so callers
+        handle one representation.
+
+        If the head generation is corrupt and a last-good snapshot exists
+        (any earlier publish of the same task), this falls back to it:
+        the returned bundle is the previous generation, the index is
+        repaired to its (version, hash), and subscribers are notified so
+        caches keyed by the dead head hash invalidate. Without a snapshot
+        the IOError propagates. Transient I/O faults (injected site
+        ``registry.transient``) never roll back — they are retryable
+        against the intact head."""
+        task_dir = _safe_task_dir(self.root, task_id)
+        if not os.path.isdir(task_dir):
+            raise KeyError(f"no bundle for task {task_id!r} in {self.root}")
+        self.faults.check("registry.transient", task_id)
+        try:
+            self.faults.check("registry.corrupt", task_id)
+            bundle = self._load_dir(task_id, task_dir, verify=verify,
+                                    dequantize=dequantize)
+        except (OSError, CorruptArtifactFault) as e:
+            lastgood = self._lastgood_dir(task_id)
+            if not os.path.isdir(lastgood):
+                raise
+            bundle = self._load_dir(task_id, lastgood, verify=verify,
+                                    dequantize=dequantize)
+            self.tracer.instant("bundle_rollback", tid=TID_ENGINE,
+                                task=task_id, version=bundle.version,
+                                error=str(e))
+            self._index[task_id] = (bundle.version, bundle.bundle_hash)
+            # subscribers drop anything keyed by the corrupt head's hash
+            # (expansion cache entries, prefix-index pages for this task)
+            self._notify(task_id)
+            return bundle
         self._index[task_id] = (bundle.version, bundle.bundle_hash)
         return bundle
 
@@ -213,8 +295,10 @@ class AdapterRegistry:
             and os.path.exists(os.path.join(self.root, name, "manifest.json")))
 
     def evict(self, task_id: str):
-        """Remove a task's bundle from disk and invalidate subscribers."""
+        """Remove a task's bundle (and its last-good snapshot) from disk
+        and invalidate subscribers."""
         task_dir = _safe_task_dir(self.root, task_id)
         shutil.rmtree(task_dir, ignore_errors=True)
+        shutil.rmtree(self._lastgood_dir(task_id), ignore_errors=True)
         self._index.pop(task_id, None)
         self._notify(task_id)

@@ -35,15 +35,19 @@ from repro.serve.paged import pages_for_tokens
 
 class RequestState(Enum):
     """Request lifecycle: WAITING (queued) -> ACTIVE (slot) -> FINISHED,
-    or the two abort terminals: CANCELLED (client abort — possible from
-    WAITING or ACTIVE) and REJECTED (load-shedding admission refused it;
+    or the abort terminals: CANCELLED (client abort — possible from
+    WAITING or ACTIVE), REJECTED (load-shedding admission refused it;
     set by the front end, never by the scheduler — a rejected request never
-    enters the admission queue)."""
+    enters the admission queue), and FAILED (the request's fault domain
+    collapsed — corrupt bundle, expansion error, allocator exhaustion, or
+    NaN quarantine; the engine reclaims its slot/pages/reservation via the
+    same machinery as CANCELLED and every other stream continues)."""
     WAITING = "waiting"
     ACTIVE = "active"       # prefilled, decoding
     FINISHED = "finished"
     CANCELLED = "cancelled"
     REJECTED = "rejected"
+    FAILED = "failed"
 
 
 def lifetime_cache_tokens(prompt_len: int, max_new_tokens: int) -> int:

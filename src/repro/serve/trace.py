@@ -15,7 +15,15 @@ Differential arms supported purely through trace keys:
     Tokens must match the fp32 arm exactly at int8 on the bench model; the
     "expansions" counter legitimately differs in quantized_cache mode
     (expansion re-runs per admission), so compare COMPARED_COUNTERS minus
-    "expansions" across that pair — tests/test_serve.py does exactly this.
+    "expansions" across that pair — tests/test_serve.py does exactly this;
+  * chaos — set trace["faults"] to a FaultPlane spec ({"seed", "rate",
+    "sites", "schedule"}; serve/faults.py). Fault decisions are pure
+    hashes of (seed, site, key), so the SAME schedule fires in every
+    process and on every mesh shape replaying the trace — the chaos
+    differential oracle holds surviving requests token-identical across
+    single-device and sharded runs, and failed request INDICES equal. The
+    result dict grows a "failed" list (trace-order request indices that
+    ended FAILED) for exactly that comparison.
 
 The module doubles as a subprocess driver (`python -m repro.serve.trace`):
 the sharded-vs-single-device differential oracle in tests/test_serve.py runs
@@ -40,7 +48,9 @@ import jax
 from repro.configs.registry import get_arch
 from repro.core.generator import GeneratorConfig, init_generator
 from repro.serve.engine import ServeEngine
+from repro.serve.faults import FaultPlane
 from repro.serve.registry import AdapterRegistry
+from repro.serve.scheduler import RequestState
 from repro.train.steps import TaskBundle, build_bundle
 
 # counters two engines replaying one trace must agree on exactly
@@ -98,6 +108,11 @@ def run_trace(trace: dict, *, mesh=None, registry_root: str | None = None
         # token mismatch (traces can still opt out explicitly)
         engine_kw = dict(trace.get("engine", {}))
         engine_kw.setdefault("debug_invariants", True)
+        # chaos arm: a trace-carried FaultPlane spec replays one injected
+        # fault schedule identically in every process/mesh (decisions are
+        # pure hashes — see module docstring)
+        if trace.get("faults"):
+            engine_kw["faults"] = FaultPlane.from_spec(trace["faults"])
         engine = ServeEngine(bundle, base, gen_ws, registry, mesh=mesh,
                              **engine_kw)
         reqs = [engine.submit(t, p, m) for t, p, m in trace["requests"]]
@@ -109,6 +124,10 @@ def run_trace(trace: dict, *, mesh=None, registry_root: str | None = None
     snap = engine.metrics.snapshot()
     return {
         "tokens": [list(r.generated) for r in reqs],
+        # chaos arm: which requests (trace order) failed terminally — the
+        # cross-arm oracle holds this list AND the survivors' tokens equal
+        "failed": [i for i, r in enumerate(reqs)
+                   if r.state is RequestState.FAILED],
         "cache": engine.cache.stats(),
         "counters": {k: snap.get(k, 0) for k in COMPARED_COUNTERS},
         # paged engines also report allocator stats (None on dense arms):

@@ -410,7 +410,14 @@ def make_assembled_multi_decode_step(bundle: TaskBundle, horizon: int,
     the host ever reads back.
 
     Returns step(params, cache, tokens, pos, remaining) ->
-    (tok_block (horizon, B) int32, cache, tokens, pos, remaining).
+    (tok_block (horizon, B) int32, nonfinite (B,) bool, cache, tokens,
+    pos, remaining). ``nonfinite[b]`` is True iff ANY iteration of the
+    block saw a non-finite logit for an active row b — the device-side
+    health flag the engine reads at its existing one-per-block host sync
+    to quarantine a slot whose adapter went NaN/Inf, without a second
+    device round-trip and without branching inside the scan (the flag is
+    an OR-accumulated carry; detection costs one isfinite reduction per
+    iteration, fused into the block).
 
     `unroll` is forwarded to the scan: at smoke shapes XLA:CPU pays
     per-iteration overhead it can partially fuse away when the loop body is
@@ -436,10 +443,15 @@ def make_assembled_multi_decode_step(bundle: TaskBundle, horizon: int,
         params = _stage_coded_adapters(params)
 
         def body(carry, _):
-            cache, tokens, pos, remaining = carry
+            cache, tokens, pos, remaining, nonfinite = carry
             active = remaining > 0
             logits, cache = lm.decode_step(cfg, params, cache, tokens, pos,
                                            active=active)
+            # device-side health flag: any non-finite logit on an active
+            # row latches its slot for the block (inactive rows may hold
+            # stale garbage legitimately — only active ones are checked)
+            bad = jnp.any(~jnp.isfinite(logits), axis=-1) & active
+            nonfinite = nonfinite | bad
             nxt = jnp.argmax(logits, -1).astype(tokens.dtype)
             tokens = jnp.where(active, nxt, tokens)
             pos = jnp.where(active, pos + 1, pos)
@@ -450,17 +462,20 @@ def make_assembled_multi_decode_step(bundle: TaskBundle, horizon: int,
             # different loop-state sharding mid-block, or the engine's
             # explicit donated in/out shardings stop matching buffer-for-
             # buffer (identity when no rules are installed)
-            tokens, pos, remaining, emit = (
+            tokens, pos, remaining, emit, nonfinite = (
                 shard(tokens, "serve_slot_vec"), shard(pos, "serve_slot_vec"),
                 shard(remaining, "serve_slot_vec"),
-                shard(emit, "serve_slot_vec"))
-            return (cache, tokens, pos, remaining), emit
+                shard(emit, "serve_slot_vec"),
+                shard(nonfinite, "serve_slot_vec"))
+            return (cache, tokens, pos, remaining, nonfinite), emit
 
+        nonfinite0 = shard(jnp.zeros(tokens.shape, jnp.bool_),
+                           "serve_slot_vec")
         carry, tok_block = jax.lax.scan(
-            body, (cache, tokens, pos, remaining), None, length=horizon,
-            unroll=min(unroll, horizon))
-        cache, tokens, pos, remaining = carry
-        return tok_block, cache, tokens, pos, remaining
+            body, (cache, tokens, pos, remaining, nonfinite0), None,
+            length=horizon, unroll=min(unroll, horizon))
+        cache, tokens, pos, remaining, nonfinite = carry
+        return tok_block, nonfinite, cache, tokens, pos, remaining
 
     return step
 
@@ -482,9 +497,11 @@ def make_assembled_multi_decode_step_paged(bundle: TaskBundle, horizon: int,
     actually occupy while staying O(log) in compiled variants.
 
     Returns step(params, pool, page_table, tokens, pos, remaining) ->
-    (tok_block (horizon, B) int32, pool, tokens, pos, remaining) with the
-    same masking/emission contract as the dense block (-1 = inactive row)
-    — including the GroupedAdapter (coded per-slot stacks) threading notes.
+    (tok_block (horizon, B) int32, nonfinite (B,) bool, pool, tokens, pos,
+    remaining) with the same masking/emission contract as the dense block
+    (-1 = inactive row) and the same OR-accumulated per-slot non-finite-
+    logit flag — including the GroupedAdapter (coded per-slot stacks)
+    threading notes.
     """
     if bundle.arch.kind != "lm":
         raise ValueError("multi-step decode serves decoder-only LMs")
@@ -496,28 +513,33 @@ def make_assembled_multi_decode_step_paged(bundle: TaskBundle, horizon: int,
         params = _stage_coded_adapters(params)
 
         def body(carry, _):
-            pool, tokens, pos, remaining = carry
+            pool, tokens, pos, remaining, nonfinite = carry
             active = remaining > 0
             logits, pool = lm.decode_step_paged(
                 cfg, params, pool, page_table, tokens, pos, active=active,
                 num_active_pages=num_pages, use_pallas=bundle.use_pallas,
                 interpret=bundle.interpret)
+            bad = jnp.any(~jnp.isfinite(logits), axis=-1) & active
+            nonfinite = nonfinite | bad
             nxt = jnp.argmax(logits, -1).astype(tokens.dtype)
             tokens = jnp.where(active, nxt, tokens)
             pos = jnp.where(active, pos + 1, pos)
             remaining = jnp.where(active, remaining - 1, remaining)
             emit = jnp.where(active, nxt, -1)
-            tokens, pos, remaining, emit = (
+            tokens, pos, remaining, emit, nonfinite = (
                 shard(tokens, "serve_slot_vec"), shard(pos, "serve_slot_vec"),
                 shard(remaining, "serve_slot_vec"),
-                shard(emit, "serve_slot_vec"))
-            return (pool, tokens, pos, remaining), emit
+                shard(emit, "serve_slot_vec"),
+                shard(nonfinite, "serve_slot_vec"))
+            return (pool, tokens, pos, remaining, nonfinite), emit
 
+        nonfinite0 = shard(jnp.zeros(tokens.shape, jnp.bool_),
+                           "serve_slot_vec")
         carry, tok_block = jax.lax.scan(
-            body, (pool, tokens, pos, remaining), None, length=horizon,
-            unroll=min(unroll, horizon))
-        pool, tokens, pos, remaining = carry
-        return tok_block, pool, tokens, pos, remaining
+            body, (pool, tokens, pos, remaining, nonfinite0), None,
+            length=horizon, unroll=min(unroll, horizon))
+        pool, tokens, pos, remaining, nonfinite = carry
+        return tok_block, nonfinite, pool, tokens, pos, remaining
 
     return step
 

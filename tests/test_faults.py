@@ -1,0 +1,524 @@
+"""Fault-domain isolation: the deterministic fault plane itself, corrupt-
+artifact rejection + last-good rollback in the registry, per-request failure
+containment and NaN quarantine in the engine, frontend retry with capped
+deterministic backoff, and the chaos differential oracle (one injected fault
+schedule replayed through independent engines — and a mesh subprocess —
+must fail the SAME requests and leave survivors token-identical)."""
+import asyncio
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core.generator import GeneratorConfig, init_generator
+from repro.obs import EventLog
+from repro.obs.events import (ADMITTED, FAILED, QUEUED, RETRY, SUBMIT)
+from repro.serve import (NULL_FAULTS, AdapterRegistry, AsyncFrontend,
+                         CorruptArtifactFault, ExpansionFault, FaultError,
+                         FaultPlane, NonFiniteLogitsFault,
+                         PageExhaustionFault, RetriesExhaustedError,
+                         ServeEngine, TransientFault, fault_u01, run_trace,
+                         sequential_reference)
+from repro.serve.scheduler import RequestState
+from repro.train.steps import build_bundle
+
+GEN = GeneratorConfig(k=5, d=600, width=32, seed=0)
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def served():
+    arch = get_arch("yi_6b")
+    bundle = build_bundle(arch, "mcnc", smoke=True, generator=GEN,
+                          adapter_rank=4)
+    base = bundle.init_base(jax.random.PRNGKey(0))
+    gen_ws = init_generator(GEN)
+    return bundle, base, gen_ws
+
+
+def perturbed_state(bundle, i, scale=0.3):
+    return bundle.synthetic_trainable(i, scale)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlane: pure control plane, no fixtures.
+# ---------------------------------------------------------------------------
+
+def test_fault_u01_is_pure_and_key_sensitive():
+    a = fault_u01(0, "expand", "t0")
+    assert a == fault_u01(0, "expand", "t0")        # pure: no RNG state
+    assert 0.0 <= a < 1.0
+    assert a != fault_u01(1, "expand", "t0")        # seed-sensitive
+    assert a != fault_u01(0, "expand", "t1")        # key-sensitive
+    assert a != fault_u01(0, "page_alloc", "t0")    # site-sensitive
+
+
+def test_plane_rate_draws_match_would_fire_and_fire_once():
+    plane = FaultPlane(seed=3, rate=0.5)
+    keys = [f"r{i}" for i in range(64)]
+    want = {k for k in keys if fault_u01(3, "expand", k) < 0.5}
+    assert {k for k in keys if plane.would_fire("expand", k)} == want
+    assert 0 < len(want) < len(keys)
+    # fire() consumes the pair: at most once, then False forever
+    k = sorted(want)[0]
+    assert plane.fire("expand", k) and not plane.fire("expand", k)
+    assert plane.injected == {"expand": 1}
+    plane.reset()
+    assert plane.fire("expand", k)                  # replay re-arms
+
+
+def test_plane_schedule_sites_and_from_spec():
+    plane = FaultPlane.from_spec({"seed": 7, "rate": 1.0,
+                                  "sites": ["expand"],
+                                  "schedule": [["decode.nan", 3]]})
+    # schedule fires regardless of the sites allowlist, int or str key
+    # (JSON round-trips don't get to change the decision)
+    assert plane.would_fire("decode.nan", 3)
+    assert plane.would_fire("decode.nan", "3")
+    # rate=1.0 fires everything on allowlisted sites, nothing elsewhere
+    assert plane.would_fire("expand", "x")
+    assert not plane.would_fire("page_alloc", "x")
+    assert FaultPlane.from_spec(None).rate == 0.0
+
+
+def test_plane_check_raises_typed_retry_classified_exceptions():
+    want = {"registry.corrupt": (CorruptArtifactFault, False),
+            "registry.transient": (TransientFault, True),
+            "expand": (ExpansionFault, True),
+            "page_alloc": (PageExhaustionFault, True),
+            "decode.nan": (NonFiniteLogitsFault, False)}
+    for site, (cls, retryable) in want.items():
+        plane = FaultPlane(schedule=[(site, "k")])
+        with pytest.raises(cls) as exc:
+            plane.check(site, "k")
+        assert isinstance(exc.value, FaultError)
+        assert exc.value.retryable is retryable
+        assert exc.value.site == site and exc.value.key == "k"
+        plane.check(site, "k")                      # fired: now a no-op
+
+
+def test_null_faults_is_inert():
+    assert not NULL_FAULTS.enabled
+    assert not NULL_FAULTS.fire("expand", "t")
+    assert not NULL_FAULTS.would_fire("expand", "t")
+    NULL_FAULTS.check("expand", "t")                # never raises
+    assert NULL_FAULTS.injected == {}
+
+
+def test_load_gen_fault_plan_deterministic_and_rate_monotone():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.load_gen import DEFAULT_FAULT_SITES, fault_plan
+    plan = fault_plan(5, 32, 0.2)
+    assert plan == fault_plan(5, 32, 0.2)           # pure function of args
+    assert fault_plan(5, 32, 0.0) == []
+    assert all(site in DEFAULT_FAULT_SITES and 0 <= i < 32
+               for site, i in plan)
+    # a higher rate only ADDS injections (u01 thresholding), so chaos
+    # severity is tunable without reshuffling the surviving schedule
+    assert set(plan) <= set(fault_plan(5, 32, 0.6))
+    # the schedule form FaultPlane consumes directly
+    plane = FaultPlane(schedule=plan)
+    assert all(plane.would_fire(site, i) for site, i in plan)
+
+
+# ---------------------------------------------------------------------------
+# Event taxonomy: FAILED terminal, RETRY repeatable at the queued rank.
+# ---------------------------------------------------------------------------
+
+def test_failed_is_terminal_and_retry_repeats():
+    log = EventLog(clock=iter(float(i) for i in range(100)).__next__)
+    log.emit(0, SUBMIT)
+    log.emit(0, QUEUED)
+    log.emit(0, ADMITTED)
+    log.emit(0, FAILED, cause="ExpansionFault", retryable=True, tokens=0)
+    assert log.validate(0) == []
+    assert log.validate_all(require_terminal=True) == []
+    s = log.summary(0)
+    assert s["terminal"] == FAILED and s["failed"] and s["retries"] == 0
+    # nothing may follow the terminal failed event
+    log.emit(0, QUEUED)
+    assert any("after terminal" in v for v in log.validate(0))
+    # the resubmission lives under a FRESH id; retry may repeat there
+    log.emit(1, SUBMIT)
+    log.emit(1, RETRY, prev_req_id=0, attempt=1, backoff_s=0.05)
+    log.emit(1, RETRY, prev_req_id=0, attempt=2, backoff_s=0.1)
+    log.emit(1, QUEUED)
+    assert log.validate(1) == []
+    assert log.summary(1)["retries"] == 2 and not log.summary(1)["failed"]
+
+
+# ---------------------------------------------------------------------------
+# Registry: corruption is rejected up front; last-good rollback heals it.
+# ---------------------------------------------------------------------------
+
+def _corrupt(path, mode):
+    with open(path, "rb") as f:
+        raw = f.read()
+    if mode == "truncate":
+        raw = raw[: len(raw) // 2]
+    elif mode == "flip":
+        raw = raw[:-9] + bytes([raw[-9] ^ 0xFF]) + raw[-8:]
+    elif mode == "torn":
+        raw = raw[:10]
+    with open(path, "wb") as f:
+        f.write(raw)
+
+
+@pytest.mark.parametrize("victim,mode", [
+    ("payload.bin", "truncate"),    # short read: hash can't match
+    ("payload.bin", "flip"),        # single flipped byte: hash mismatch
+    ("manifest.json", "torn"),      # torn manifest: unparseable head
+])
+def test_corrupt_artifact_raises_ioerror_never_garbage(served, tmp_path,
+                                                       victim, mode):
+    """Every corruption shape surfaces as IOError from load() — verification
+    runs before any payload decode, so garbage is never half-decoded into a
+    served bundle — and a fresh republish makes the task loadable again."""
+    bundle, _, _ = served
+    reg = AdapterRegistry(str(tmp_path))
+    st = perturbed_state(bundle, 0)
+    reg.publish("t", st, GEN)
+    _corrupt(os.path.join(str(tmp_path), "t", victim), mode)
+    with pytest.raises(IOError):
+        reg.load("t")
+    reg.publish("t", perturbed_state(bundle, 1), GEN)
+    assert reg.load("t").state is not None
+
+
+def test_lastgood_rollback_serves_previous_generation(served, tmp_path):
+    bundle, _, _ = served
+    reg = AdapterRegistry(str(tmp_path))
+    notified = []
+    reg.subscribe(notified.append)
+    st1 = perturbed_state(bundle, 0)
+    b1 = reg.publish("t", st1, GEN)
+    reg.publish("t", perturbed_state(bundle, 1), GEN)
+    _corrupt(os.path.join(str(tmp_path), "t", "payload.bin"), "flip")
+    got = reg.load("t")
+    # the previous generation is served, bit-equal to what was published
+    assert got.version == 1 and got.bundle_hash == b1.bundle_hash
+    for a, b in zip(jax.tree.leaves(st1), jax.tree.leaves(got.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the index is repaired (cache keys rekey to the fallback hash) and
+    # subscribers were notified a third time so stale entries invalidate
+    assert reg.current_hash("t") == b1.bundle_hash
+    assert notified == ["t", "t", "t"]
+    # the snapshot dir is invisible to listing and unservable directly
+    assert reg.list_tasks() == ["t"]
+    with pytest.raises(ValueError):
+        reg.load(".t.lastgood")
+
+
+def test_injected_corrupt_fault_rolls_back_transient_does_not(served,
+                                                              tmp_path):
+    bundle, _, _ = served
+    plane = FaultPlane(schedule=[("registry.corrupt", "a"),
+                                 ("registry.transient", "b")])
+    reg = AdapterRegistry(str(tmp_path), faults=plane)
+    reg.publish("a", perturbed_state(bundle, 0), GEN)
+    b2 = reg.publish("a", perturbed_state(bundle, 1), GEN)
+    reg.publish("b", perturbed_state(bundle, 2), GEN)
+    # injected corruption on a task WITH a last-good snapshot: rolls back
+    assert reg.load("a").version == 1
+    assert reg.current_hash("a") != b2.bundle_hash  # index repaired
+    # ... and the fault fires once, so the next load serves the (always
+    # intact) head again — injected corruption never touched the disk
+    assert reg.load("a").version == 2
+    assert reg.current_hash("a") == b2.bundle_hash
+    # transient I/O faults NEVER roll back — they propagate retryable so
+    # the frontend resubmits against the intact head
+    with pytest.raises(TransientFault):
+        reg.load("b")
+    assert reg.load("b").version == 1               # retry heals
+
+
+def test_corrupt_head_without_snapshot_propagates(served, tmp_path):
+    bundle, _, _ = served
+    plane = FaultPlane(schedule=[("registry.corrupt", "t")])
+    reg = AdapterRegistry(str(tmp_path), faults=plane)
+    reg.publish("t", perturbed_state(bundle, 0), GEN)   # no prior gen
+    with pytest.raises(CorruptArtifactFault):
+        reg.load("t")
+
+
+# ---------------------------------------------------------------------------
+# Engine: per-request failure domains and NaN quarantine.
+# ---------------------------------------------------------------------------
+
+def _engine(served, tmp_path, tasks, *, faults=None, **kw):
+    bundle, base, gen_ws = served
+    states = {t: perturbed_state(bundle, i) for i, t in enumerate(tasks)}
+    reg = AdapterRegistry(str(tmp_path))
+    for t in tasks:
+        reg.publish(t, states[t], GEN)
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("cache_cap", 20)
+    eng = ServeEngine(bundle, base, gen_ws, reg, faults=faults, **kw)
+    return eng, states
+
+
+def _assert_drained_clean(eng):
+    """Post-chaos invariants every containment test shares: allocator
+    balanced (no leaked pages/reservations), every lifecycle terminal."""
+    st = eng.pages.stats()
+    assert st["pages_in_use"] == 0 and st["reserved_pages"] == 0, st
+    eng.pages.check_invariants()
+    assert eng.events.validate_all(require_terminal=True) == []
+
+
+def test_expansion_fault_contained_to_one_task(served, tmp_path):
+    """An injected expansion failure fails its task's prefill group while
+    every other stream finishes token-identical to the fault-free
+    reference; the fired-once plane lets the task's next request heal."""
+    plane = FaultPlane(schedule=[("expand", "t1")])
+    eng, states = _engine(served, tmp_path, ["t0", "t1", "t2"],
+                          faults=plane)
+    # the plane is adopted by the layers the engine wires together
+    assert eng.registry.faults is plane and eng.cache.faults is plane
+    traffic = [("t0", [1, 2, 3, 4], 4), ("t1", [5, 6, 7], 4),
+               ("t2", [2, 4, 6, 8], 4)]
+    reqs = [eng.submit(t, p, m) for t, p, m in traffic]
+    eng.run_until_idle()
+    want = sequential_reference(*served, states, traffic, cache_cap=20)
+    assert reqs[1].state is RequestState.FAILED and reqs[1].generated == []
+    assert reqs[0].generated == want[0] and reqs[2].generated == want[2]
+    ev = next(e for e in eng.events.events_for(reqs[1].req_id)
+              if e.name == FAILED)
+    assert ev.data["cause"] == "ExpansionFault" and ev.data["retryable"]
+    # retry heals: the pair fired, the artifact was always intact
+    retry = eng.submit("t1", [5, 6, 7], 4)
+    eng.run_until_idle()
+    assert retry.generated == want[1]
+    snap = eng.metrics.snapshot()
+    assert snap["requests_failed"] == 1 and snap["requests_completed"] == 3
+    assert snap["faults_injected"] == 1
+    _assert_drained_clean(eng)
+
+
+def test_page_alloc_fault_at_prefill_fails_only_its_group(served, tmp_path):
+    plane = FaultPlane(schedule=[("page_alloc", 1)])
+    eng, states = _engine(served, tmp_path, ["t0", "t1", "t2"],
+                          faults=plane)
+    traffic = [("t0", [1, 2, 3, 4], 4), ("t1", [5, 6, 7], 4),
+               ("t2", [2, 4, 6, 8], 4)]
+    reqs = [eng.submit(t, p, m) for t, p, m in traffic]
+    assert reqs[1].req_id == 1
+    eng.run_until_idle()
+    want = sequential_reference(*served, states, traffic, cache_cap=20)
+    assert reqs[1].state is RequestState.FAILED
+    assert [reqs[0].generated, reqs[2].generated] == [want[0], want[2]]
+    ev = next(e for e in eng.events.events_for(1) if e.name == FAILED)
+    assert ev.data["cause"] == "PageExhaustionFault" and ev.data["retryable"]
+    _assert_drained_clean(eng)
+
+
+def test_page_alloc_fault_mid_decode_is_per_slot(served, tmp_path):
+    """A page fault hitting one slot's alloc-on-write between decode blocks
+    fails that request alone — its harvested tokens stay a strict prefix of
+    the reference — while the co-resident slot's decode continues in the
+    SAME fused blocks to full token identity."""
+    eng, states = _engine(served, tmp_path, ["t0", "t1"], n_slots=2,
+                          decode_horizon=2)
+    traffic = [("t0", [1, 2, 3, 4], 10), ("t1", [5, 6, 7], 10)]
+    reqs = [eng.submit(t, p, m) for t, p, m in traffic]
+    eng.step()      # prefill + first decode block, fault-free
+    assert all(len(r.generated) >= 1 for r in reqs)
+    eng.faults = FaultPlane(schedule=[("page_alloc", reqs[0].req_id)])
+    eng.run_until_idle()
+    want = sequential_reference(*served, states, traffic, cache_cap=20)
+    assert reqs[0].state is RequestState.FAILED
+    n = len(reqs[0].generated)
+    assert 0 < n < 10 and reqs[0].generated == want[0][:n]
+    assert reqs[1].generated == want[1]
+    _assert_drained_clean(eng)
+
+
+def test_nan_quarantine_harvests_nothing_and_scrubs_pages(served, tmp_path):
+    """decode.nan poisons one slot's adapter row: the device-side flag
+    quarantines that request (NOT ONE token of the poisoned block is
+    harvested), the survivor is token-identical — and the freed pages were
+    scrubbed, proven by follow-up requests reusing them cleanly (a leaked
+    NaN would trip the quarantine flag or corrupt their tokens)."""
+    plane = FaultPlane(schedule=[("decode.nan", 0)])
+    eng, states = _engine(served, tmp_path, ["t0", "t1"], n_slots=2,
+                          faults=plane, page_size=8, n_pages=12)
+    traffic = [("t0", [1, 2, 3, 4], 6), ("t1", [5, 6, 7], 6)]
+    reqs = [eng.submit(t, p, m) for t, p, m in traffic]
+    eng.run_until_idle()
+    want = sequential_reference(*served, states, traffic, cache_cap=20)
+    assert reqs[0].state is RequestState.FAILED
+    # prefill emitted the first token; the poisoned block yielded nothing
+    assert reqs[0].generated == want[0][:1]
+    assert reqs[1].generated == want[1]
+    ev = next(e for e in eng.events.events_for(0) if e.name == FAILED)
+    assert ev.data["cause"] == "NonFiniteLogitsFault"
+    assert not ev.data["retryable"]
+    assert eng.faults.injected == {"decode.nan": 1}
+    # page reuse after quarantine: the small pool forces these onto the
+    # scrubbed physical pages
+    again = [eng.submit(t, p, m) for t, p, m in traffic]
+    eng.run_until_idle()
+    assert [r.generated for r in again] == want
+    assert all(r.state is RequestState.FINISHED for r in again)
+    _assert_drained_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Chaos differential oracle: one injected schedule, independent replays.
+# ---------------------------------------------------------------------------
+
+# the serving differential trace (tests/test_serve.py DIFF_TRACE) plus an
+# injected fault schedule: expand kills t1's first prefill group, decode.nan
+# quarantines request 2 mid-decode. Sites chosen to exist on BOTH cache
+# layouts (page_alloc has no dense equivalent) so the paged<->dense arm of
+# the oracle stays meaningful.
+CHAOS_TRACE = {
+    "gen": {"k": 5, "d": 600, "width": 32, "seed": 0},
+    "adapter_rank": 4,
+    "tasks": {"t0": 0, "t1": 1, "t2": 2},
+    "engine": {"n_slots": 4, "cache_cap": 32, "decode_horizon": 8,
+               "page_size": 8, "n_pages": 18},
+    "requests": [["t0", [1, 2, 3, 4, 5, 6], 4], ["t1", [7, 8, 9, 10], 6],
+                 ["t2", [2, 4, 6, 8, 10, 12], 8], ["t0", [9, 9, 9, 9], 5],
+                 ["t1", [1, 3, 5, 7, 9, 11], 3], ["t2", [5, 5, 5, 5], 7]],
+    "faults": {"schedule": [["expand", "t1"], ["decode.nan", 2]]},
+}
+
+
+def test_chaos_differential_oracle_in_process():
+    """THE chaos gate: replaying one injected fault schedule through
+    independent engines is deterministic (identical failed sets, tokens,
+    and counters), survivors are token-identical to the fault-free run,
+    and the dense-cache engine fails the SAME requests with the same
+    survivor tokens — failure containment is a property of the engine,
+    not of one KV layout."""
+    chaos = run_trace(CHAOS_TRACE)
+    clean = run_trace({k: v for k, v in CHAOS_TRACE.items()
+                       if k != "faults"})
+    # expand kills req 1 (t1's group, fired once — later t1 req 4 heals);
+    # decode.nan quarantines req 2 after its prefill token
+    assert chaos["failed"] == [1, 2] and clean["failed"] == []
+    for i in (0, 3, 4, 5):
+        assert chaos["tokens"][i] == clean["tokens"][i], i
+    assert chaos["tokens"][1] == []
+    assert chaos["tokens"][2] == clean["tokens"][2][:1]
+    assert chaos["counters"]["requests_completed"] == 4
+    # determinism: a second independent replay is bit-identical
+    assert run_trace(CHAOS_TRACE) == chaos
+    # layout independence: dense engine, same fault domains
+    dense = run_trace(dict(
+        CHAOS_TRACE, engine={**CHAOS_TRACE["engine"], "dense_cache": True}))
+    assert dense["failed"] == chaos["failed"]
+    assert dense["tokens"] == chaos["tokens"]
+
+
+def _run_trace_subprocess(trace, *, mesh=None, devices=8):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={devices}"
+        ).strip()
+    cmd = [sys.executable, "-m", "repro.serve.trace", "--trace", "-"]
+    if mesh:
+        cmd += ["--mesh", mesh]
+    proc = subprocess.run(cmd, input=json.dumps(trace), capture_output=True,
+                          text=True, timeout=900, env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow          # compiles the sharded engine in a subprocess
+def test_chaos_differential_oracle_under_mesh():
+    """Fault decisions are pure hashes of (seed, site, key), so the SAME
+    schedule fires on a (2, 4) mesh replay: failed sets, survivor tokens,
+    counters, and allocator stats all match the single-device chaos run."""
+    single = run_trace(CHAOS_TRACE)
+    sharded = _run_trace_subprocess(CHAOS_TRACE, mesh="2x4")
+    assert sharded["n_devices"] == 8
+    assert sharded["failed"] == single["failed"] == [1, 2]
+    assert sharded["tokens"] == single["tokens"]
+    assert sharded["counters"] == single["counters"]
+    assert sharded["pages"] == single["pages"]
+
+
+# ---------------------------------------------------------------------------
+# Frontend retry: the client-side half of the fault-domain story.
+# ---------------------------------------------------------------------------
+
+def test_retry_heals_transient_failure(served, tmp_path):
+    plane = FaultPlane(schedule=[("expand", "a")])
+    eng, states = _engine(served, tmp_path, ["a"], n_slots=2, faults=plane)
+
+    async def main():
+        async with AsyncFrontend(eng) as fe:
+            return await fe.generate_with_retry("a", [1, 2, 3], 4,
+                                                retry_seed=3)
+
+    tokens = asyncio.run(main())
+    want = sequential_reference(*served, states, [("a", [1, 2, 3], 4)],
+                                cache_cap=20)[0]
+    assert tokens == want
+    snap = eng.metrics.snapshot()
+    assert snap["requests_failed"] == 1 and snap["retries"] == 1
+    assert snap["requests_completed"] == 1
+    # attempt 0 failed terminally under its id; the resubmission carries
+    # the RETRY event (prev_req_id linkage) under a FRESH id
+    assert eng.events.summary(0)["failed"]
+    retry_ev = next(e for e in eng.events.events_for(1) if e.name == RETRY)
+    assert retry_ev.data["prev_req_id"] == 0
+    assert retry_ev.data["attempt"] == 1
+    assert retry_ev.data["backoff_s"] > 0
+    assert eng.events.validate_all(require_terminal=True) == []
+
+
+def test_retry_refuses_non_retryable_failure(served, tmp_path):
+    plane = FaultPlane(schedule=[("decode.nan", 0)])
+    eng, _ = _engine(served, tmp_path, ["a"], n_slots=2, faults=plane)
+
+    async def main():
+        async with AsyncFrontend(eng) as fe:
+            with pytest.raises(RetriesExhaustedError) as exc:
+                await fe.generate_with_retry("a", [1, 2, 3], 4)
+            return exc.value
+
+    err = asyncio.run(main())
+    assert err.cause == "NonFiniteLogitsFault" and err.attempts == 1
+    assert eng.metrics.snapshot()["retries"] == 0
+
+
+def test_retry_backoff_never_crosses_the_deadline(served, tmp_path):
+    """A retry whose backoff lands past the deadline is not attempted:
+    the call gives up instead of burning a slot it can only miss with."""
+    plane = FaultPlane(schedule=[("expand", "a")])
+    eng, _ = _engine(served, tmp_path, ["a"], n_slots=2, faults=plane)
+
+    async def main():
+        async with AsyncFrontend(eng) as fe:
+            with pytest.raises(RetriesExhaustedError) as exc:
+                await fe.generate_with_retry(
+                    "a", [1, 2, 3], 4,
+                    deadline=time.perf_counter() + 0.02,
+                    backoff_base=0.25)
+            return exc.value
+
+    err = asyncio.run(main())
+    assert err.attempts == 1
+    assert eng.metrics.snapshot()["retries"] == 0
+
+
+def test_retry_jitter_is_deterministic():
+    draws = [1.0 + fault_u01(9, "retry.jitter", f"{rid}|{attempt}")
+             for rid, attempt in ((0, 1), (0, 2), (5, 1))]
+    assert draws == [1.0 + fault_u01(9, "retry.jitter", f"{rid}|{attempt}")
+                     for rid, attempt in ((0, 1), (0, 2), (5, 1))]
+    assert all(1.0 <= d < 2.0 for d in draws)
+    assert len(set(draws)) == 3     # attempts don't herd onto one backoff

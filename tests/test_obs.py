@@ -338,6 +338,11 @@ def golden_metrics() -> Metrics:
     # quantized adapter-stack residency gauges (serve.engine PR 7)
     m.gauge("adapter_stack_bytes").set(109392)
     m.gauge("resident_tasks").set(2)
+    # fault-domain instruments: terminal failures, healed resubmissions,
+    # and the injection plane's cumulative fire count (serve/faults.py)
+    m.counter("requests_failed").inc(2)
+    m.counter("retries").inc(1)
+    m.gauge("faults_injected").set(3)
     h = m.histogram("decode_step_s")
     for v in (2e-4, 3e-4, 1.5e-3, 1.6e-3, 0.02):
         h.observe(v)
@@ -470,4 +475,7 @@ def test_metrics_instruments_iterates_all_kinds_sorted():
     assert kinds["decode_step_s"] == "histogram"
     assert kinds["adapter_stack_bytes"] == "gauge"
     assert kinds["resident_tasks"] == "gauge"
-    assert len(rows) == 9
+    assert kinds["requests_failed"] == "counter"
+    assert kinds["retries"] == "counter"
+    assert kinds["faults_injected"] == "gauge"
+    assert len(rows) == 12
